@@ -1,0 +1,35 @@
+"""E10 — K-tile block-size NSR ablation (the TPU-native generalization,
+DESIGN.md §2): SNR vs block_k for fixed 8-bit mantissas."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bfp import Scheme
+from repro.core.nsr import snr_db
+from repro.core.bfp_dot import bfp_matmul_2d
+from repro.core.policy import BFPPolicy
+from benchmarks.common import emit
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (256, 2048)) * \
+        jnp.exp(jax.random.normal(jax.random.PRNGKey(1), (256, 2048)))
+    w = jax.random.normal(jax.random.PRNGKey(2), (2048, 256)) * 0.05
+    ref = x @ w
+    p0 = BFPPolicy(scheme=Scheme.EQ4, straight_through=False)
+    emit("blocksize/eq4_paper", 0.0,
+         f"snr_db={float(snr_db(ref, bfp_matmul_2d(x, w, p0))):.2f}")
+    for bk in (2048, 512, 256, 128, 32):
+        p = BFPPolicy(scheme=Scheme.TILED, block_k=bk,
+                      straight_through=False)
+        s = float(snr_db(ref, bfp_matmul_2d(x, w, p)))
+        # exponent storage overhead per element (8-bit exponents)
+        ov = 8.0 / bk
+        emit(f"blocksize/tiled_{bk}", 0.0,
+             f"snr_db={s:.2f};exp_overhead_bits={ov:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Shared CNN training on the synthetic image tasks (benchmarks E2/E3).
+
+Trains LeNet ('mnist' column) / CifarNet ('cifar10' column) in float32,
+then the paper's experiments evaluate the SAME trained weights under BFP
+at various mantissa widths — no retraining, exactly the paper's protocol.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import image_batch
+from repro.models.cnn import small
+from repro.optim import optimizers as opt
+
+
+def train_model(kind: str = "mnist", steps: int = 250, batch: int = 64,
+                seed: int = 0):
+    """Returns (params, apply_fn, eval_set) with float-trained weights."""
+    key = jax.random.PRNGKey(seed)
+    if kind == "mnist":
+        init_fn, apply_fn, hw, ch = small.lenet_init, small.lenet_apply, 28, 1
+    else:
+        init_fn, apply_fn, hw, ch = (small.cifarnet_init,
+                                     small.cifarnet_apply, 32, 3)
+    params = init_fn(key)
+    opt_state = opt.adamw_init(params)
+    _, _, templates = image_batch(jax.random.PRNGKey(1234), 10, 2, hw, ch)
+
+    def loss_fn(p, x, y):
+        logits = apply_fn(p, x, None)
+        onehot = jax.nn.one_hot(y, 10)
+        return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot, -1))
+
+    @jax.jit
+    def step(p, o, x, y, lr):
+        loss, g = jax.value_and_grad(loss_fn)(p, x, y)
+        g, _ = opt.clip_by_global_norm(g, 1.0)
+        p, o = opt.adamw_update(g, o, p, lr, weight_decay=1e-4)
+        return p, o, loss
+
+    sched = opt.cosine_schedule(2e-3, 20, steps)
+    for i in range(steps):
+        x, y, _ = image_batch(jax.random.fold_in(key, i), 10, batch, hw, ch,
+                              templates)
+        params, opt_state, loss = step(params, opt_state, x, y,
+                                       sched(jnp.asarray(i)))
+
+    ex, ey, _ = image_batch(jax.random.PRNGKey(999), 10, 512, hw, ch,
+                            templates)
+    return params, apply_fn, (ex, ey)
+
+
+def accuracy(params, apply_fn, eval_set, policy) -> float:
+    x, y = eval_set
+    logits = apply_fn(params, x, policy)
+    return float(jnp.mean(jnp.argmax(logits, -1) == y))

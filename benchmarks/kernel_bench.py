@@ -1,0 +1,49 @@
+"""E6 — BFP kernel microbench + datapath sizing check (paper Fig. 2).
+
+On CPU the Pallas kernel runs in interpret mode (orders of magnitude
+slower than compiled TPU); the emulated-int path is the meaningful CPU
+number.  Reports us/call and the effective GEMM rate.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bfp
+from repro.core.bfp_dot import bfp_matmul_2d
+from repro.core.policy import BFPPolicy, PAPER_DEFAULT, TPU_TILED
+from benchmarks.common import emit, time_call
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    b, k, n = 256, 1024, 256
+    x = jax.random.normal(key, (b, k))
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.1
+    flops = 2 * b * k * n
+
+    f_float = jax.jit(lambda x, w: x @ w)
+    us = time_call(f_float, x, w)
+    emit("kernel/float_matmul", us, f"GFLOPs={flops / us / 1e3:.1f}")
+
+    for name, pol in (("eq4", PAPER_DEFAULT), ("tiled128", TPU_TILED)):
+        pol = pol.with_(straight_through=False)
+        f = jax.jit(lambda x, w, pol=pol: bfp_matmul_2d(x, w, pol))
+        us = time_call(f, x, w)
+        emit(f"kernel/bfp_emulated_{name}", us,
+             f"GFLOPs={flops / us / 1e3:.1f}")
+
+    from repro.kernels import ops
+    f = lambda x, w: ops.bfp_matmul(x, w, TPU_TILED, interpret=True)
+    us = time_call(f, x, w, warmup=1, iters=2)
+    emit("kernel/bfp_pallas_interpret", us, "CPU-interpret (TPU target)")
+
+    # datapath sizing table (paper Fig. 2)
+    for lw, li, kk in ((8, 8, 1152), (8, 8, 4608), (6, 6, 4608)):
+        emit(f"kernel/acc_bits_LW{lw}_LI{li}_K{kk}", 0.0,
+             f"acc_bits={bfp.accumulator_bits(lw, li, kk)};"
+             f"max_safe_k_int32={bfp.max_safe_k(lw, li)}")
+
+
+if __name__ == "__main__":
+    run()

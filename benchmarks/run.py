@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure + system extras.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+
+  table1_storage       paper Table 1 (scheme storage costs)
+  table2_scheme        paper Table 2 (eq.2 vs eq.4 accuracy, no retrain)
+  table3_sweep         paper Table 3 (L_W x L_I accuracy-drop grid) + E5
+  table4_nsr           paper Table 4 (per-layer SNR: measured vs model)
+  kernel_bench         E6 kernel microbench + Fig. 2 datapath sizing
+  blocksize_ablation   E10 TPU K-tile block-size ablation (beyond paper)
+
+Roofline/dry-run numbers are produced by ``repro.launch.dryrun`` (they
+need the 512-device env) and summarized in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (blocksize_ablation, kernel_bench, table1_storage,
+                        table2_scheme, table3_sweep, table4_nsr)
+
+_ALL = {
+    "table1": table1_storage.run,
+    "table2": table2_scheme.run,
+    "table3": table3_sweep.run,
+    "table4": table4_nsr.run,
+    "kernel": kernel_bench.run,
+    "blocksize": blocksize_ablation.run,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(_ALL)
+    print("name,us_per_call,derived")
+    failures = 0
+    for n in names:
+        t0 = time.time()
+        try:
+            _ALL[n]()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+        print(f"# {n} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

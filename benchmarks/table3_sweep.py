@@ -1,0 +1,35 @@
+"""Paper Table 3 — accuracy drop over the (L_W x L_I) mantissa grid,
+without retraining, plus rounding-vs-truncation (paper §3.1 claim, E5).
+"""
+from __future__ import annotations
+
+from repro.core.bfp import Rounding
+from repro.core.policy import BFPPolicy
+from benchmarks.common import emit
+from benchmarks.cnn_train import accuracy, train_model
+
+
+def run():
+    grids = {"mnist": (3, 4, 5, 6), "cifar": (5, 6, 7, 8)}
+    for kind, bits in grids.items():
+        params, apply_fn, ev = train_model(kind)
+        acc_f = accuracy(params, apply_fn, ev, None)
+        emit(f"table3/{kind}/float", 0.0, f"top1={acc_f:.4f}")
+        for lw in bits:
+            for li in bits:
+                pol = BFPPolicy(l_w=lw, l_i=li, straight_through=False)
+                acc = accuracy(params, apply_fn, ev, pol)
+                emit(f"table3/{kind}/LW{lw}_LI{li}", 0.0,
+                     f"drop={acc_f - acc:+.4f}")
+        # E5: truncation vs rounding at the mid bit-width
+        mid = bits[len(bits) // 2]
+        for rnd in (Rounding.ROUND, Rounding.TRUNCATE):
+            pol = BFPPolicy(l_w=mid, l_i=mid, rounding=rnd,
+                            straight_through=False)
+            acc = accuracy(params, apply_fn, ev, pol)
+            emit(f"table3/{kind}/round_vs_trunc/{rnd.value}", 0.0,
+                 f"L={mid};drop={acc_f - acc:+.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""The paper's intended USE of the NSR model: pick hardware bit-widths
+analytically before building the accelerator.
+
+Run:  PYTHONPATH=src python examples/nsr_guided_design.py
+
+Given a target end-to-end SNR budget for an N-layer network, invert the
+paper's error model (eq. 8, 18, 20) to find the cheapest (L_W, L_I)
+meeting it, then verify the pick empirically on a GEMM chain.  This is
+the "promising guidance for BFP based CNN engine design" of the abstract,
+turned into a function.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.nsr import (analyze_gemm_chain, nsr_from_snr_db,
+                            predict_matrix_snr, snr_db_from_nsr)
+from repro.core.policy import BFPPolicy
+
+
+def predict_final_snr(x, ws, l_w, l_i):
+    """Chain eq. 18 + eq. 20 analytically over a layer stack."""
+    pol = BFPPolicy(l_w=l_w, l_i=l_i)
+    eta = 0.0
+    for w in ws:
+        eta_i = float(nsr_from_snr_db(predict_matrix_snr(x, l_i, "i", pol)))
+        eta_w = float(nsr_from_snr_db(predict_matrix_snr(w, l_w, "w", pol)))
+        eta = eta + eta_i + eta * eta_i + eta_w      # eq. 20 then eq. 17
+        x = jax.nn.relu(x @ w)                        # advance signal stats
+    return float(snr_db_from_nsr(jnp.asarray(eta)))
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (128, 256))
+    ws = [jax.random.normal(jax.random.PRNGKey(i), (256, 256)) * 0.08
+          for i in range(6)]
+    target_db = 20.0
+
+    print(f"target: end-to-end SNR >= {target_db} dB over {len(ws)} layers\n")
+    print(f"{'L_W':>4s} {'L_I':>4s} {'pred dB':>9s} {'mult bits':>10s}")
+    best = None
+    for l in range(4, 12):
+        pred = predict_final_snr(x, ws, l, l)
+        cost = 2 * l  # multiplier input bits ~ area proxy (paper Fig. 2)
+        print(f"{l:>4d} {l:>4d} {pred:9.2f} {cost:10d}")
+        if pred >= target_db and best is None:
+            best = l
+    print(f"\nanalytical pick: L_W = L_I = {best}")
+
+    rep = analyze_gemm_chain(x, ws, BFPPolicy(l_w=best, l_i=best,
+                                              straight_through=False))[-1]
+    print(f"empirical final SNR at {best} bits: "
+          f"{rep.snr_output_measured:.2f} dB "
+          f"({'meets' if rep.snr_output_measured >= target_db else 'misses'}"
+          f" the {target_db} dB target)")
+
+
+if __name__ == "__main__":
+    main()

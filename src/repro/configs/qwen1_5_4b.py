@@ -1,0 +1,19 @@
+"""qwen1.5-4b [dense] — QKV bias.  [hf:Qwen/Qwen1.5-0.5B (family); hf]
+
+40L d_model=2560 20H (MHA kv=20) d_ff=6912 vocab=151936.
+"""
+from repro.configs.base import LMConfig
+
+CONFIG = LMConfig(
+    name="qwen1.5-4b",
+    family="dense",
+    n_layers=40,
+    d_model=2560,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=6912,
+    vocab_size=151936,
+    head_dim=128,
+    qkv_bias=True,
+    max_seq_len=32768,
+)

@@ -1,0 +1,14 @@
+"""Core BFP library — the paper's contribution as composable JAX modules."""
+from repro.core.bfp import (BFPBlock, Rounding, Scheme, quantize, dequantize,
+                            bfp_quantize_matrix, block_exponent,
+                            average_bits_per_element, num_block_exponents,
+                            accumulator_bits, max_safe_k)
+from repro.core.bfp_dot import bfp_dot, bfp_matmul_2d
+from repro.core.policy import BFPPolicy, PAPER_DEFAULT, TPU_TILED
+
+__all__ = [
+    "BFPBlock", "Rounding", "Scheme", "quantize", "dequantize",
+    "bfp_quantize_matrix", "block_exponent", "average_bits_per_element",
+    "num_block_exponents", "accumulator_bits", "max_safe_k",
+    "bfp_dot", "bfp_matmul_2d", "BFPPolicy", "PAPER_DEFAULT", "TPU_TILED",
+]

@@ -1,0 +1,277 @@
+"""Block floating point (BFP) formatting — the paper's core mechanism.
+
+A block of numbers shares one exponent (the max exponent in the block,
+paper eq. 1); mantissas are right-shifted to align and stored as small
+signed integers.  Multiply-accumulate between two BFP blocks is then pure
+fixed-point arithmetic plus one exponent add.
+
+Conventions (DESIGN.md §6; paper Table-3 convention, mantissa width
+``L`` INCLUDES the sign bit):
+
+    eps   = max_i floor(log2 |x_i|)          (block exponent)
+    delta = 2 ** (eps - (L - 2))             (quantization step)
+    m_i   = clip(round(x_i / delta), -(2**(L-1)-1), 2**(L-1)-1)
+    x'_i  = m_i * delta
+
+All functions are pure jnp and jit-safe.  The Pallas kernels in
+``repro.kernels`` implement the same contract for the TPU target and are
+tested against these functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Rounding",
+    "Scheme",
+    "BFPBlock",
+    "block_exponent",
+    "quantize",
+    "dequantize",
+    "bfp_quantize_matrix",
+    "average_bits_per_element",
+    "num_block_exponents",
+    "accumulator_bits",
+    "max_safe_k",
+]
+
+# Exponent used for an all-zero block.  Any finite value works (mantissas
+# are all zero); a very negative one keeps dequantized zeros exact and the
+# step size harmless.
+_ZERO_BLOCK_EXP = -126
+
+
+class Rounding(enum.Enum):
+    """How out-shifted mantissa bits are handled (paper §3.1).
+
+    The paper finds ROUND (round-to-nearest) strictly better than TRUNCATE
+    because truncation introduces a DC bias that accumulates layer-wise.
+    """
+
+    ROUND = "round"
+    TRUNCATE = "truncate"
+    # Stochastic rounding: beyond-paper option (Gupta et al. 2015 is cited
+    # by the paper as the fixed-point SR baseline).
+    STOCHASTIC = "stochastic"
+
+
+class Scheme(enum.Enum):
+    """Matrix partition schemes for O = W[M,K] @ I[K,N] (paper eq. 2-5).
+
+    Controls which entries share a block exponent:
+
+    =========  =====================  =====================  ===========
+    scheme     W blocks               I blocks               exponents
+    =========  =====================  =====================  ===========
+    EQ2        whole matrix (1)       whole matrix (1)       2
+    EQ3        per row (M)            per column (N)         M + N
+    EQ4        per row (M)            whole matrix (1)       M + 1   <- paper's choice
+    EQ5        whole matrix (1)       per column (N)         N + 1
+    TILED      per (row, K-tile)      per (column, K-tile)   TPU-native
+    =========  =====================  =====================  ===========
+
+    TILED is the beyond-paper TPU adaptation (DESIGN.md §2): blocks are
+    K-tiles aligned with the MXU matmul pipeline; finer blocks -> lower
+    quantization noise at ~1 exponent byte per tile.
+    """
+
+    EQ2 = "eq2"
+    EQ3 = "eq3"
+    EQ4 = "eq4"
+    EQ5 = "eq5"
+    TILED = "tiled"
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BFPBlock:
+    """A block-formatted tensor: integer mantissas + per-block exponents.
+
+    ``mantissa`` has the same shape as the source tensor; ``exponent`` is
+    broadcastable against it (size-1 axes over dims that share a block).
+    ``bits`` includes the sign bit.
+    """
+
+    mantissa: jax.Array  # int8 (L<=8) or int16/int32
+    exponent: jax.Array  # int32, broadcastable to mantissa.shape
+    bits: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def scale(self) -> jax.Array:
+        """2^(eps - (L-2)) as float32, broadcastable to mantissa.shape."""
+        return jnp.exp2((self.exponent - (self.bits - 2)).astype(jnp.float32))
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        return (self.mantissa.astype(jnp.float32) * self.scale).astype(dtype)
+
+
+def _mantissa_dtype(bits: int):
+    if bits <= 8:
+        return jnp.int8
+    if bits <= 16:
+        return jnp.int16
+    return jnp.int32
+
+
+def block_exponent(x: jax.Array, axes: Tuple[int, ...]) -> jax.Array:
+    """Per-block exponent: max_i floor(log2 |x_i|) over ``axes`` (keepdims).
+
+    Uses frexp so it is exact for every finite float (no log2 rounding):
+    x = f * 2^e with f in [0.5, 1)  =>  floor(log2|x|) = e - 1.
+    """
+    amax = jnp.max(jnp.abs(x), axis=axes, keepdims=True)
+    _, e = jnp.frexp(amax)
+    # frexp(0) returns e=0; map all-zero blocks to a harmless tiny exponent.
+    return jnp.where(amax > 0, e - 1, _ZERO_BLOCK_EXP).astype(jnp.int32)
+
+
+def _apply_rounding(v: jax.Array, rounding: Rounding,
+                    key: Optional[jax.Array]) -> jax.Array:
+    if rounding is Rounding.ROUND:
+        return jnp.round(v)  # round-half-to-even; zero-mean error (paper §3.1)
+    if rounding is Rounding.TRUNCATE:
+        # Hardware truncation of two's-complement right-shift == floor.
+        return jnp.floor(v)
+    if rounding is Rounding.STOCHASTIC:
+        if key is None:
+            raise ValueError("stochastic rounding requires a PRNG key")
+        return jnp.floor(v + jax.random.uniform(key, v.shape, v.dtype))
+    raise ValueError(rounding)
+
+
+def quantize(
+    x: jax.Array,
+    bits: int,
+    axes: Tuple[int, ...],
+    rounding: Rounding = Rounding.ROUND,
+    key: Optional[jax.Array] = None,
+) -> BFPBlock:
+    """Block-format ``x``: one shared exponent per block spanning ``axes``.
+
+    This is the paper's eq. (1) (align-shift) expressed in float emulation:
+    dividing by the block step and rounding is bit-exact to right-shifting
+    the aligned mantissa with round-off.
+    """
+    if not 2 <= bits <= 24:
+        raise ValueError(f"bits (incl. sign) must be in [2, 24], got {bits}")
+    x = x.astype(jnp.float32)
+    eps = block_exponent(x, axes)
+    step = jnp.exp2((eps - (bits - 2)).astype(jnp.float32))
+    lim = 2 ** (bits - 1) - 1
+    m = _apply_rounding(x / step, rounding, key)
+    m = jnp.clip(m, -lim, lim).astype(_mantissa_dtype(bits))
+    return BFPBlock(mantissa=m, exponent=eps, bits=bits)
+
+
+def dequantize(b: BFPBlock, dtype=jnp.float32) -> jax.Array:
+    return b.dequantize(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Matrix-level block formatting for the GEMM  O = W[M,K] @ I[K,N]
+# ---------------------------------------------------------------------------
+
+def _scheme_axes(scheme: Scheme, operand: str) -> Tuple[int, ...]:
+    """Axes that SHARE an exponent for a 2-D operand of the GEMM.
+
+    W is [M, K]; I is [K, N].  Returns reduction axes for block_exponent.
+    """
+    if scheme is Scheme.EQ2:
+        return (0, 1)
+    if scheme is Scheme.EQ3:
+        return (1,) if operand == "w" else (0,)
+    if scheme is Scheme.EQ4:
+        return (1,) if operand == "w" else (0, 1)
+    if scheme is Scheme.EQ5:
+        return (0, 1) if operand == "w" else (0,)
+    raise ValueError(f"use bfp_quantize_matrix(block_k=...) for {scheme}")
+
+
+def bfp_quantize_matrix(
+    x: jax.Array,
+    bits: int,
+    operand: str,  # "w" for [M,K] weights, "i" for [K,N] inputs
+    scheme: Scheme,
+    block_k: Optional[int] = None,
+    rounding: Rounding = Rounding.ROUND,
+    key: Optional[jax.Array] = None,
+) -> BFPBlock:
+    """Block-format one GEMM operand under a paper scheme or TILED.
+
+    For TILED, ``block_k`` must divide K; blocks are (row x block_k) for W
+    and (block_k x col) for I — every (row/col, K-tile) pair has its own
+    exponent.  For the paper schemes ``block_k`` is ignored.
+    """
+    if x.ndim != 2:
+        raise ValueError(f"expected 2-D operand, got shape {x.shape}")
+    if operand not in ("w", "i"):
+        raise ValueError(operand)
+    if scheme is not Scheme.TILED:
+        return quantize(x, bits, _scheme_axes(scheme, operand), rounding, key)
+
+    k_axis = 1 if operand == "w" else 0
+    k = x.shape[k_axis]
+    bk = block_k or k
+    if k % bk:
+        raise ValueError(f"block_k={bk} must divide K={k}")
+    if operand == "w":  # [M, K] -> [M, K//bk, bk], block over last axis
+        xr = x.reshape(x.shape[0], k // bk, bk)
+        b = quantize(xr, bits, (2,), rounding, key)
+        return BFPBlock(b.mantissa.reshape(x.shape),
+                        b.exponent.reshape(x.shape[0], k // bk), bits)
+    else:  # [K, N] -> [K//bk, bk, N], block over middle axis
+        xr = x.reshape(k // bk, bk, x.shape[1])
+        b = quantize(xr, bits, (1,), rounding, key)
+        return BFPBlock(b.mantissa.reshape(x.shape),
+                        b.exponent.reshape(k // bk, x.shape[1]), bits)
+
+
+# ---------------------------------------------------------------------------
+# Storage / datapath accounting (paper Table 1 and Fig. 2)
+# ---------------------------------------------------------------------------
+
+def num_block_exponents(scheme: Scheme, m: int, k: int, n: int,
+                        block_k: Optional[int] = None) -> int:
+    """NBE column of paper Table 1 (number of stored block exponents)."""
+    if scheme is Scheme.EQ2:
+        return 2
+    if scheme is Scheme.EQ3:
+        return m + n
+    if scheme is Scheme.EQ4:
+        return 1 + m
+    if scheme is Scheme.EQ5:
+        return 1 + n
+    bk = block_k or k
+    tiles = -(-k // bk)   # ceil: partial K-tiles still carry an exponent
+    return (m + n) * tiles
+
+
+def average_bits_per_element(bits_mantissa_with_sign: int, exp_bits: int,
+                             block_elems: int) -> float:
+    """Average stored bits per number: 1 + L_m + L_e/n (paper §3.1).
+
+    ``bits_mantissa_with_sign`` follows our convention (includes sign), so
+    the formula is L + L_e/n.
+    """
+    return bits_mantissa_with_sign + exp_bits / block_elems
+
+
+def accumulator_bits(l_w: int, l_i: int, k: int) -> int:
+    """Fixed-point accumulator width needed for a K-deep dot product.
+
+    Paper Fig. 2 / §3.4: product needs L_W + L_I bits (both operands carry
+    their sign bit here), accumulation of K terms adds ceil(log2 K) carries.
+    """
+    return l_w + l_i + int(np.ceil(np.log2(max(k, 2))))
+
+
+def max_safe_k(l_w: int, l_i: int, acc_bits: int = 32) -> int:
+    """Largest K for which int``acc_bits`` accumulation cannot overflow."""
+    return 2 ** (acc_bits - l_w - l_i)

@@ -1,0 +1,195 @@
+"""BFP GEMM — the paper's fixed-point convolution datapath, in JAX.
+
+``bfp_dot(x, w, policy)`` computes ``x @ w`` where both operands are first
+block-formatted (paper eq. 1) under the policy's partition scheme and the
+multiply-accumulate runs in the INTEGER domain (paper Fig. 2), followed by a
+single power-of-two rescale per block pair.  With ``policy=None`` it is
+exactly ``jnp.dot`` — the floating-point reference the paper compares
+against.
+
+Orientation note: the paper writes O = W[M,K] @ I[K,N] with filters as W
+*rows* and receptive fields as I *columns*.  Neural-net code computes
+``y[B,N] = x[B,K] @ w[K,N]`` — x rows are the paper's I columns and w
+columns are the paper's W rows.  The scheme mapping used here:
+
+    =======  ====================  ====================
+    scheme   w blocks (paper W)    x blocks (paper I)
+    =======  ====================  ====================
+    EQ2      whole matrix          whole matrix
+    EQ3      per column            per row
+    EQ4      per column            whole matrix     <- paper's choice
+    EQ5      whole matrix          per row
+    TILED    per (column, K-tile)  per (row, K-tile)
+    =======  ====================  ====================
+
+Gradients: quantization is piecewise constant, so by default a
+straight-through estimator passes gradients through the dequantized
+operands (BFP-QAT, beyond-paper; the paper itself is inference-only).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bfp
+from repro.core.bfp import BFPBlock, Rounding, Scheme
+from repro.core.policy import BFPPolicy
+
+__all__ = ["bfp_dot", "bfp_matmul_2d", "quantize_activations",
+           "quantize_weights"]
+
+
+def _flatten_leading(x: jax.Array) -> Tuple[jax.Array, Tuple[int, ...]]:
+    lead = x.shape[:-1]
+    return x.reshape(-1, x.shape[-1]), lead
+
+
+def quantize_weights(w: jax.Array, policy: BFPPolicy) -> BFPBlock:
+    """Block-format a [K, N] weight matrix (paper W, transposed)."""
+    if policy.scheme is Scheme.EQ2 or policy.scheme is Scheme.EQ5:
+        axes: Tuple[int, ...] = (0, 1)          # whole matrix
+        return bfp.quantize(w, policy.l_w, axes, policy.rounding)
+    if policy.scheme in (Scheme.EQ3, Scheme.EQ4):
+        return bfp.quantize(w, policy.l_w, (0,), policy.rounding)  # per col
+    # TILED: per (column, K-tile); w is [K, N] == paper W^T, so operand "i"
+    # orientation of bfp_quantize_matrix matches (blocks along axis 0).
+    return bfp.bfp_quantize_matrix(w, policy.l_w, "i", Scheme.TILED,
+                                   policy.block_k, policy.rounding)
+
+
+def quantize_activations(x2d: jax.Array, policy: BFPPolicy,
+                         key: Optional[jax.Array] = None) -> BFPBlock:
+    """Block-format a [B, K] activation matrix (paper I, transposed)."""
+    if policy.scheme in (Scheme.EQ2, Scheme.EQ4):
+        return bfp.quantize(x2d, policy.l_i, (0, 1), policy.rounding, key)
+    if policy.scheme in (Scheme.EQ3, Scheme.EQ5):
+        return bfp.quantize(x2d, policy.l_i, (1,), policy.rounding, key)
+    return bfp.bfp_quantize_matrix(x2d, policy.l_i, "w", Scheme.TILED,
+                                   policy.block_k, policy.rounding, key)
+
+
+def _int_matmul(mx: jax.Array, mw: jax.Array, l_sum: int) -> jax.Array:
+    """Exact fixed-point matmul with overflow-safe K-chunking.
+
+    int32 accumulation of L_W+L_I-bit products is exact for
+    K <= 2**(32 - l_sum) (paper Fig. 2 sizing).  Larger K is split into
+    chunks whose int32 partials are combined in  fp32 space
+    (power-of-two scales keep each partial exactly representable).
+    """
+    k = mx.shape[-1]
+    safe_k = bfp.max_safe_k(0, 0, 32 - l_sum)  # == 2 ** (32 - l_sum)
+    if k <= safe_k:
+        return jax.lax.dot(mx.astype(jnp.int32), mw.astype(jnp.int32),
+                           preferred_element_type=jnp.int32).astype(jnp.float32)
+    n_chunks = -(-k // safe_k)
+    pad = n_chunks * safe_k - k
+    mxp = jnp.pad(mx, ((0, 0), (0, pad)))
+    mwp = jnp.pad(mw, ((0, pad), (0, 0)))
+    mxc = mxp.reshape(mx.shape[0], n_chunks, safe_k)
+    mwc = mwp.reshape(n_chunks, safe_k, mw.shape[1])
+    part = jnp.einsum("bck,ckn->cbn", mxc.astype(jnp.int32),
+                      mwc.astype(jnp.int32),
+                      preferred_element_type=jnp.int32)
+    return jnp.sum(part.astype(jnp.float32), axis=0)
+
+
+def _bfp_matmul_2d_impl(x2d: jax.Array, w: jax.Array,
+                        policy: BFPPolicy,
+                        key: Optional[jax.Array]) -> jax.Array:
+    """BFP x2d[B,K] @ w[K,N] with the true integer datapath."""
+    bx = (quantize_activations(x2d, policy, key) if policy.quantize_inputs
+          else None)
+    bw = quantize_weights(w, policy) if policy.quantize_weights else None
+    if bx is None and bw is None:
+        return x2d @ w
+    if bx is None or bw is None:  # one operand float: dequantize the other
+        xq = x2d if bx is None else bx.dequantize()
+        wq = w if bw is None else bw.dequantize()
+        return xq @ wq
+
+    l_sum = policy.l_w + policy.l_i
+    if policy.scheme is not Scheme.TILED:
+        mo = _int_matmul(bx.mantissa, bw.mantissa, l_sum)
+        # scale = 2^(ex - (L_I-2)) * 2^(ew - (L_W-2)), broadcast [B,1]x[1,N]
+        sx = bx.scale  # [B,1] or [1,1]
+        sw = bw.scale  # [1,N] or [1,1]
+        return mo * (sx * sw)
+
+    # TILED: exponents vary along K-tiles -> rescale each tile's partial.
+    bk = policy.block_k or x2d.shape[-1]
+    b, k = x2d.shape
+    n = w.shape[1]
+    t = k // bk
+    mx = bx.mantissa.reshape(b, t, bk)
+    mw = bw.mantissa.reshape(t, bk, n)
+    # Exact int32 per-tile partials (bk <= 2**(32-l_sum) asserted by policy
+    # use sites; 128 or 512 always safe for l_sum <= 16).
+    part = jnp.einsum("btk,tkn->tbn", mx.astype(jnp.int32),
+                      mw.astype(jnp.int32),
+                      preferred_element_type=jnp.int32).astype(jnp.float32)
+    sx = jnp.exp2((bx.exponent - (policy.l_i - 2)).astype(jnp.float32))  # [B,t]
+    sw = jnp.exp2((bw.exponent - (policy.l_w - 2)).astype(jnp.float32))  # [t,N]
+    scaled = part * sx.T[:, :, None] * sw[:, None, :]
+    return jnp.sum(scaled, axis=0)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _bfp_matmul_ste(x2d, w, policy):
+    return _bfp_matmul_2d_impl(x2d, w, policy, None)
+
+
+def _ste_fwd(x2d, w, policy):
+    bx = quantize_activations(x2d, policy) if policy.quantize_inputs else None
+    bw = quantize_weights(w, policy) if policy.quantize_weights else None
+    xq = x2d if bx is None else bx.dequantize()
+    wq = w if bw is None else bw.dequantize()
+    return _bfp_matmul_2d_impl(x2d, w, policy, None), (xq, wq)
+
+
+def _ste_bwd(policy, res, g):
+    xq, wq = res
+    # Straight-through: gradients as if the GEMM were float over the
+    # DEQUANTIZED operands (standard QAT estimator).
+    return g @ wq.T, xq.T @ g
+
+
+_bfp_matmul_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+def bfp_matmul_2d(x2d: jax.Array, w: jax.Array, policy: BFPPolicy,
+                  key: Optional[jax.Array] = None) -> jax.Array:
+    """2-D BFP matmul.  Differentiable iff policy.straight_through."""
+    if policy.scheme is Scheme.TILED:
+        bk = policy.block_k or x2d.shape[-1]
+        if bk > bfp.max_safe_k(policy.l_w, policy.l_i):
+            raise ValueError(
+                f"block_k={bk} overflows int32 accumulation for "
+                f"L_W+L_I={policy.l_w + policy.l_i} (paper Fig. 2 sizing)")
+    if policy.straight_through and key is None:
+        return _bfp_matmul_ste(x2d, w, policy)
+    return _bfp_matmul_2d_impl(x2d, w, policy, key)
+
+
+def bfp_dot(x: jax.Array, w: jax.Array,
+            policy: Optional[BFPPolicy] = None,
+            key: Optional[jax.Array] = None) -> jax.Array:
+    """``x[..., K] @ w[K, N]`` with optional BFP datapath.
+
+    The single entry point every layer in the framework uses.  ``policy``
+    None -> float (paper's reference); otherwise the BFP datapath above.
+    Optional Pallas kernel dispatch (policy.use_kernel) for the TPU target.
+    """
+    if policy is None:
+        return x @ w
+    if policy.use_kernel:
+        from repro.kernels import ops  # local import: kernels are optional
+        x2d, lead = _flatten_leading(x)
+        out = ops.bfp_matmul(x2d, w, policy)
+        return out.reshape(*lead, w.shape[-1])
+    x2d, lead = _flatten_leading(x)
+    out = bfp_matmul_2d(x2d, w, policy, key)
+    out = out.astype(jnp.result_type(x.dtype, w.dtype))
+    return out.reshape(*lead, w.shape[-1])

@@ -1,0 +1,60 @@
+"""BFP policy — how block floating point is applied across a model.
+
+A :class:`BFPPolicy` is threaded through every GEMM-bearing layer.  ``None``
+means pure float math (the paper's floating-point reference).  The default
+policy reproduces the paper's chosen configuration: scheme eq. (4), 8-bit
+mantissas (incl. sign) for both W and I, round-off.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.bfp import Rounding, Scheme
+
+__all__ = ["BFPPolicy", "PAPER_DEFAULT", "TPU_TILED"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BFPPolicy:
+    """Static (hashable) configuration for BFP GEMMs.
+
+    Attributes:
+      l_w: weight mantissa bits, INCLUDING sign (paper Table 3 convention).
+      l_i: input/activation mantissa bits, INCLUDING sign.
+      scheme: matrix partition scheme (paper eq. 2-5, or TILED).
+      block_k: K-tile size for Scheme.TILED (None = whole K).
+      rounding: ROUND (paper's choice), TRUNCATE, or STOCHASTIC.
+      exp_bits: stored exponent width (storage accounting only).
+      quantize_weights / quantize_inputs: per-operand enable switches.
+      straight_through: if True, bfp_dot uses a straight-through estimator
+        so gradients flow as if the GEMM were float (BFP-QAT, beyond-paper).
+      use_kernel: prefer the Pallas kernel path where available.
+    """
+
+    l_w: int = 8
+    l_i: int = 8
+    scheme: Scheme = Scheme.EQ4
+    block_k: Optional[int] = None
+    rounding: Rounding = Rounding.ROUND
+    exp_bits: int = 8
+    quantize_weights: bool = True
+    quantize_inputs: bool = True
+    straight_through: bool = True
+    use_kernel: bool = False
+
+    def __post_init__(self):
+        for name, v in (("l_w", self.l_w), ("l_i", self.l_i)):
+            if not 2 <= v <= 24:
+                raise ValueError(f"{name}={v} out of range [2, 24]")
+
+    def with_(self, **kw) -> "BFPPolicy":
+        return dataclasses.replace(self, **kw)
+
+
+#: The paper's headline configuration: eq. (4), 8-bit mantissas, rounding.
+PAPER_DEFAULT = BFPPolicy()
+
+#: TPU-native tiled variant (DESIGN.md §2): K-tiles of 128 matched to the
+#: MXU contraction tiling; strictly lower quantization noise than EQ4.
+TPU_TILED = BFPPolicy(scheme=Scheme.TILED, block_k=128)

@@ -1,0 +1,1 @@
+"""Pallas TPU kernels for the BFP datapath (validated with interpret=True)."""

@@ -1,0 +1,116 @@
+"""Fused BFP matmul Pallas kernel — the paper's accelerator datapath on TPU.
+
+One kernel fuses the paper's whole pipeline (Fig. 2):
+
+    HBM float tiles --> VMEM
+      block-format x-tile  (per-row exponent over the K-tile)     \
+      block-format w-tile  (per-column exponent over the K-tile)   } in VMEM
+      int8 x int8 -> int32 systolic matmul on the MXU             /
+      power-of-two rescale + fp32 accumulate in VMEM scratch
+    fp32 out tile --> HBM
+
+This is the TPU adaptation of the paper's FPGA design (DESIGN.md §2): the
+block is the K-tile the matmul pipeline stages through VMEM anyway, so
+block formatting costs no extra HBM traffic; the fixed-point MAC array is
+the MXU's native int8 path.  Accumulation is int32-exact within a tile
+(paper's accumulator-width rule: L_W + L_I + log2(block_k) <= 32 is
+asserted) and fp32 across tiles.
+
+Grid: (B/bm, N/bn, K/bk) with K innermost so each (i, j) output tile is
+accumulated across sequential k steps in a VMEM scratch accumulator.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_ZERO_BLOCK_EXP = -126
+
+
+def _floor_log2(amax: jax.Array) -> jax.Array:
+    """floor(log2 x), x >= 0, via float32 exponent-field extraction."""
+    bits = jax.lax.bitcast_convert_type(amax.astype(jnp.float32), jnp.uint32)
+    e = (jnp.right_shift(bits, jnp.uint32(23)) & jnp.uint32(0xFF)).astype(
+        jnp.int32) - 127
+    return jnp.where(amax > 0, e, _ZERO_BLOCK_EXP)
+
+
+def _block_format(tile: jax.Array, bits: int, axis: int):
+    """Block-format ``tile`` along ``axis``; returns (int8 mantissa, scale).
+
+    scale is the dequantization step 2^(e - (bits-2)) as fp32, shaped with
+    a keepdims-1 on ``axis``.
+    """
+    amax = jnp.max(jnp.abs(tile), axis=axis, keepdims=True)
+    e = _floor_log2(amax)
+    step = jnp.exp2((e - (bits - 2)).astype(jnp.float32))
+    lim = float(2 ** (bits - 1) - 1)
+    m = jnp.clip(jnp.round(tile.astype(jnp.float32) / step), -lim, lim)
+    # int8 feeds the MXU's native 8-bit path (L <= 8, the paper's headline
+    # config); wider mantissas take the int32 path (still integer-exact).
+    return m.astype(jnp.int8 if bits <= 8 else jnp.int32), step
+
+
+def _bfp_matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, l_i: int, l_w: int,
+                       n_k: int):
+    """One (i, j, k) grid step: quantize both tiles, int matmul, rescale."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    mx, sx = _block_format(x_ref[...], l_i, axis=1)   # [bm,bk], [bm,1]
+    mw, sw = _block_format(w_ref[...], l_w, axis=0)   # [bk,bn], [1,bn]
+    # MXU int8 x int8 -> int32 (exact: block_k bounded by overflow assert).
+    part = jax.lax.dot(mx.astype(jnp.int32), mw.astype(jnp.int32),
+                       preferred_element_type=jnp.int32)
+    acc_ref[...] += part.astype(jnp.float32) * (sx * sw)
+
+    @pl.when(k_step == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("l_i", "l_w", "bm", "bn", "bk",
+                                             "interpret"))
+def bfp_matmul_pallas(x: jax.Array, w: jax.Array, *, l_i: int = 8,
+                      l_w: int = 8, bm: int = 128, bn: int = 128,
+                      bk: int = 512, interpret: bool = False) -> jax.Array:
+    """x[B,K] @ w[K,N] through the fused BFP datapath.
+
+    Shapes must be multiples of the block sizes (ops.py pads).  The K tile
+    ``bk`` IS the BFP block size (Scheme.TILED with block_k = bk).
+    """
+    b, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch {x.shape} @ {w.shape}")
+    if b % bm or n % bn or k % bk:
+        raise ValueError(f"shapes ({b},{k})x({k2},{n}) not multiples of "
+                         f"tiles ({bm},{bn},{bk})")
+    # Paper Fig. 2 accumulator sizing: int32 must hold bk products.
+    import math
+    if l_i + l_w + math.ceil(math.log2(bk)) > 32:
+        raise ValueError(f"bk={bk} overflows int32 for L_I+L_W={l_i + l_w}")
+
+    n_k = k // bk
+    grid = (b // bm, n // bn, n_k)
+    kernel = functools.partial(_bfp_matmul_kernel, l_i=l_i, l_w=l_w, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,76 @@
+"""Public jit'd wrappers around the Pallas BFP kernels.
+
+Handles shape padding to tile multiples, CPU-interpret dispatch (this
+container has no TPU; ``interpret=True`` runs the kernel body in Python),
+and policy plumbing.  The contract is identical to the emulated path in
+``repro.core.bfp_dot`` with Scheme.TILED and ``block_k == bk`` — tests
+assert all three (kernel, ref oracle, core library) agree.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import BFPPolicy
+from repro.kernels.bfp_matmul import bfp_matmul_pallas
+from repro.kernels.bfp_quantize import bfp_quantize_pallas
+
+__all__ = ["bfp_matmul", "bfp_quantize", "default_tiles"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, mult: Tuple[int, ...]) -> jax.Array:
+    pads = [(0, (-d) % m) for d, m in zip(x.shape, mult)]
+    if any(p[1] for p in pads):
+        return jnp.pad(x, pads)
+    return x
+
+
+def default_tiles(b: int, k: int, n: int,
+                  block_k: Optional[int]) -> Tuple[int, int, int]:
+    """Pick MXU-aligned tile sizes.
+
+    bm/bn: 128 (MXU dimension) unless the problem is smaller; bk: the BFP
+    block size when given (must be the K tile so block == tile), else 512.
+    """
+    bm = min(128, max(8, 1 << (b - 1).bit_length())) if b < 128 else 128
+    bn = min(128, max(128, 0)) if n >= 128 else max(8, 1 << (n - 1).bit_length())
+    bk = block_k or min(512, max(128, 1 << (k - 1).bit_length()) if k < 512 else 512)
+    return bm, bn, bk
+
+
+def bfp_matmul(x2d: jax.Array, w: jax.Array, policy: BFPPolicy,
+               interpret: Optional[bool] = None) -> jax.Array:
+    """x2d[B,K] @ w[K,N] via the fused Pallas kernel (Scheme.TILED).
+
+    Pads every dim to tile multiples (zero K-padding is exact: zero
+    mantissas contribute nothing; padded rows/cols are sliced off).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, k = x2d.shape
+    n = w.shape[1]
+    bm, bn, bk = default_tiles(b, k, n, policy.block_k)
+    xp = _pad_to(x2d.astype(jnp.float32), (bm, bk))
+    wp = _pad_to(w.astype(jnp.float32), (bk, bn))
+    out = bfp_matmul_pallas(xp, wp, l_i=policy.l_i, l_w=policy.l_w,
+                            bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out[:b, :n]
+
+
+def bfp_quantize(x: jax.Array, bits: int, block_k: int,
+                 interpret: Optional[bool] = None):
+    """[M,K] -> (mantissa int8 [M,K], exps int32 [M,ceil(K/bk)]) padded-safe."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    m_rows, k = x.shape
+    bm = 256 if m_rows >= 256 else max(8, 1 << (m_rows - 1).bit_length())
+    xp = _pad_to(x.astype(jnp.float32), (bm, block_k))
+    m, e = bfp_quantize_pallas(xp, bits=bits, bm=bm, bk=block_k,
+                               interpret=interpret)
+    return m[:m_rows, :k], e[:m_rows, : -(-k // block_k)]

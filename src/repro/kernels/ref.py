@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for the Pallas BFP kernels.
+
+Semantics contract shared by kernel and oracle (DESIGN.md §6):
+
+  * block exponent  e = floor(log2 max|x|) per (row, K-tile) of x and per
+    (column, K-tile) of w  (Scheme.TILED with block_k = the kernel K tile)
+  * mantissa        m = clip(round(x / 2^(e-(L-2))), -(2^(L-1)-1), ...)
+  * product         int32 dot of int8 mantissas per K-tile (exact)
+  * rescale         partial * 2^(ex-(L_I-2)) * 2^(ew-(L_W-2)), fp32 accumulate
+
+The oracles are deliberately independent re-implementations (not calls into
+repro.core) so kernel, oracle, and core library triangulate each other.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+_ZERO_BLOCK_EXP = -126
+
+
+def _floor_log2(amax: jax.Array) -> jax.Array:
+    """floor(log2 x) for x >= 0 via exponent-field extraction (bit-exact)."""
+    bits = jax.lax.bitcast_convert_type(amax.astype(jnp.float32), jnp.uint32)
+    e = (jnp.right_shift(bits, jnp.uint32(23)) & jnp.uint32(0xFF)).astype(
+        jnp.int32) - 127
+    return jnp.where(amax > 0, e, _ZERO_BLOCK_EXP)
+
+
+def quantize_tile(x: jax.Array, bits: int, axis: int) -> Tuple[jax.Array, jax.Array]:
+    """Block-format along ``axis`` (whole axis = one block). -> (m, e)."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    e = _floor_log2(amax)
+    step = jnp.exp2((e - (bits - 2)).astype(jnp.float32))
+    lim = float(2 ** (bits - 1) - 1)
+    m = jnp.clip(jnp.round(x.astype(jnp.float32) / step), -lim, lim)
+    return m.astype(jnp.int8 if bits <= 8 else jnp.int32), e
+
+
+def bfp_quantize_ref(x: jax.Array, bits: int, block_k: int
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for the standalone quantize kernel.
+
+    x: [M, K] -> mantissa [M, K] (int8), exponents [M, K//block_k] (int32).
+    Blocks are per (row, K-tile).
+    """
+    m_rows, k = x.shape
+    assert k % block_k == 0
+    xr = x.reshape(m_rows, k // block_k, block_k)
+    m, e = quantize_tile(xr, bits, axis=2)
+    return m.reshape(m_rows, k), e.reshape(m_rows, k // block_k)
+
+
+def bfp_matmul_ref(x: jax.Array, w: jax.Array, l_i: int, l_w: int,
+                   block_k: int) -> jax.Array:
+    """Oracle for the fused BFP matmul kernel.
+
+    x: [B, K] fp, w: [K, N] fp -> [B, N] fp32.  Per-(row, K-tile) blocks on
+    x, per-(column, K-tile) blocks on w, exact int32 tile dots, fp32
+    sequential accumulation over K-tiles (kernel order).
+    """
+    b, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and k % block_k == 0
+    t = k // block_k
+    out = jnp.zeros((b, n), jnp.float32)
+    for ti in range(t):
+        xs = x[:, ti * block_k:(ti + 1) * block_k]
+        ws = w[ti * block_k:(ti + 1) * block_k, :]
+        mx, ex = quantize_tile(xs, l_i, axis=1)          # [B,bk], [B,1]
+        mw, ew = quantize_tile(ws, l_w, axis=0)          # [bk,N], [1,N]
+        part = jax.lax.dot(mx.astype(jnp.int32), mw.astype(jnp.int32),
+                           preferred_element_type=jnp.int32)
+        sx = jnp.exp2((ex - (l_i - 2)).astype(jnp.float32))
+        sw = jnp.exp2((ew - (l_w - 2)).astype(jnp.float32))
+        out = out + part.astype(jnp.float32) * (sx * sw)
+    return out

@@ -1,0 +1,224 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes; extract memory / cost / collective analyses.
+
+The two lines above MUST stay the first statements in this module: jax
+locks the device count at first init, and the dry-run (and only the
+dry-run) needs 512 placeholder host devices to build the 2x16x16 mesh.
+
+Two modes (both resumable via --skip-existing; one JSON per cell):
+
+  --mode compile   (default) full-size model, layer loops as lax.scan —
+      fast compile; proves lowering/SPMD-partitioning works and gives the
+      true memory analysis.  XLA cost_analysis visits scan bodies once,
+      so flops/bytes/collectives from this mode UNDERCOUNT; use roofline
+      mode for those.
+
+  --mode roofline  exact per-step cost terms via layer-unit scaling:
+      compile UNROLLED models at 1 and 2 layer-units (full width, full
+      shapes) and extrapolate F(L) = F1 + (L-1)(F2 - F1) — exact because
+      every unit is identical.  Collective byte counts extrapolate the
+      same way.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --mode roofline --mesh single
+  ... --arch mixtral-8x7b --shape train_4k --out results/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCHS
+from repro.dist.sharding import axis_rules
+from repro.launch.input_specs import build_cell, layer_units, with_layer_units
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import analysis as RA
+
+
+def _compile_cell(cfg, shape, mesh, analysis_unroll):
+    cell = build_cell(cfg, shape, mesh, analysis_unroll=analysis_unroll)
+    sin = jax.tree_util.tree_map(
+        lambda s: jax.NamedSharding(mesh, s), cell.in_specs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    sout = jax.tree_util.tree_map(
+        lambda s: jax.NamedSharding(mesh, s), cell.out_specs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    with axis_rules(cell.rules, mesh):
+        jitted = jax.jit(cell.fn, in_shardings=sin, out_shardings=sout,
+                         donate_argnums=cell.donate)
+        lowered = jitted.lower(*cell.args)
+        compiled = lowered.compile()
+    return compiled
+
+
+def _extract(compiled):
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        cost = {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float))}
+    except Exception as e:
+        cost = {"error": str(e)}
+    coll = {}
+    try:
+        coll = RA.collective_bytes(compiled.as_text())
+    except Exception as e:
+        coll = {"error": str(e)}
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = {"argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+               "output_bytes": getattr(ma, "output_size_in_bytes", None),
+               "temp_bytes": getattr(ma, "temp_size_in_bytes", None)}
+    except Exception as e:
+        mem = {"error": str(e)}
+    return cost, coll, mem
+
+
+def _model_flops(cfg, shape):
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind != "decode" else 1)
+    factor = 6 if shape.kind == "train" else 2
+    return factor * n_active * tokens
+
+
+def run_cell_compile(arch, shape_name, mesh, mesh_name, out_dir):
+    cfg, shape = ARCHS[arch], SHAPES[shape_name]
+    t0 = time.time()
+    compiled = _compile_cell(cfg, shape, mesh, analysis_unroll=False)
+    t_compile = time.time() - t0
+    cost, coll, mem = _extract(compiled)
+    result = {
+        "mode": "compile", "arch": arch, "shape": shape_name,
+        "mesh": mesh_name, "n_devices": int(mesh.devices.size),
+        "compile_s": round(t_compile, 1),
+        "memory_analysis": mem,
+        "cost_analysis_scan_counted_once": cost,
+        "collective_bytes_scan_counted_once": coll,
+        "params": int(cfg.param_count()),
+        "status": "ok",
+    }
+    _write(out_dir, mesh_name, arch, shape_name, "compile", result)
+    return result
+
+
+def run_cell_roofline(arch, shape_name, mesh, mesh_name, out_dir):
+    cfg, shape = ARCHS[arch], SHAPES[shape_name]
+    units = layer_units(cfg)
+    t0 = time.time()
+    res = {}
+    for u in (1, 2):
+        compiled = _compile_cell(with_layer_units(cfg, u), shape, mesh,
+                                 analysis_unroll=True)
+        res[u] = _extract(compiled)
+    t_compile = time.time() - t0
+
+    def corr(metric_fn):
+        f1, f2 = metric_fn(res[1]), metric_fn(res[2])
+        return f1 + (units - 1) * (f2 - f1)
+
+    cost1, coll1, _ = res[1]
+    flops = corr(lambda r: r[0].get("flops", 0.0))
+    bytes_ = corr(lambda r: r[0].get("bytes accessed", 0.0))
+    coll_kinds = set(res[1][1]) | set(res[2][1])
+    coll = {k: int(corr(lambda r: float(r[1].get(k, 0))))
+            for k in coll_kinds if not isinstance(res[1][1].get(k), str)}
+
+    hw = RA.HW(chips=int(mesh.devices.size))
+    terms = RA.roofline_terms({"flops": flops, "bytes accessed": bytes_},
+                              coll, hw)
+    model_flops = _model_flops(cfg, shape)
+    hlo_total = flops * mesh.devices.size
+    result = {
+        "mode": "roofline", "arch": arch, "shape": shape_name,
+        "mesh": mesh_name, "n_devices": int(mesh.devices.size),
+        "layer_units": units, "compile_s": round(t_compile, 1),
+        "cost_analysis": {"flops": flops, "bytes_accessed": bytes_},
+        "collective_bytes": coll,
+        "roofline": terms,
+        "model_flops": model_flops,
+        "useful_flop_ratio": model_flops / hlo_total if hlo_total else 0.0,
+        "params": int(cfg.param_count()),
+        "status": "ok",
+    }
+    _write(out_dir, mesh_name, arch, shape_name, "roofline", result)
+    return result
+
+
+def _write(out_dir, mesh_name, arch, shape_name, mode, result):
+    path = os.path.join(out_dir, mesh_name,
+                        f"{arch}__{shape_name}.{mode}.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--mode", default="compile",
+                    choices=["compile", "roofline"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", make_production_mesh()))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16",
+                       make_production_mesh(multi_pod=True)))
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    runner = (run_cell_compile if args.mode == "compile"
+              else run_cell_roofline)
+
+    failures = 0
+    for mesh_name, mesh in meshes:
+        for arch in archs:
+            cfg = ARCHS[arch]
+            for shape_name in shapes:
+                if shape_name == "long_500k" and not cfg.sub_quadratic:
+                    print(f"SKIP  {mesh_name} {arch} {shape_name} "
+                          f"(quadratic attn; DESIGN.md §4)", flush=True)
+                    continue
+                path = os.path.join(args.out, mesh_name,
+                                    f"{arch}__{shape_name}.{args.mode}.json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"CACHED {mesh_name} {arch} {shape_name}",
+                          flush=True)
+                    continue
+                try:
+                    r = runner(arch, shape_name, mesh, mesh_name, args.out)
+                    extra = ""
+                    if args.mode == "roofline":
+                        t = r["roofline"]
+                        extra = (f" flops={t['hlo_flops']:.3g}"
+                                 f" dom={t['dominant']}"
+                                 f" useful={r['useful_flop_ratio']:.2f}")
+                    print(f"OK    {mesh_name} {arch} {shape_name} "
+                          f"compile={r['compile_s']}s{extra}", flush=True)
+                except Exception as e:
+                    failures += 1
+                    print(f"FAIL  {mesh_name} {arch} {shape_name}: "
+                          f"{type(e).__name__}: {e}", flush=True)
+                    traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,238 @@
+"""Per-(arch x shape) input stand-ins and step functions for the dry-run.
+
+``build_cell`` returns everything needed to lower one cell WITHOUT any
+device allocation: ShapeDtypeStruct trees for all inputs, matching
+PartitionSpec trees, the step callable, and the axis rules.  Modality
+frontends are stubs per the assignment: [audio]/[vlm] get precomputed
+frame/patch embeddings as ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import LMConfig, SHAPES, ShapeConfig
+from repro.dist import specs as SP
+from repro.dist.sharding import DEFAULT_RULES
+from repro.models.lm import model as Mdl
+from repro.optim import optimizers as opt
+from repro.train.step import TrainState, make_train_step
+
+__all__ = ["build_cell", "cell_rules", "input_specs"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def cell_rules(cfg: LMConfig, shape: ShapeConfig, mesh: Mesh) -> Dict:
+    """Logical->physical rules for this cell (DESIGN.md §5)."""
+    rules = dict(DEFAULT_RULES)
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = 1
+    for a, n in zip(mesh.axis_names, mesh.devices.shape):
+        if a in batch_axes:
+            dp *= n
+    if shape.global_batch % dp != 0:        # e.g. long_500k batch=1
+        rules["batch"] = None
+    else:
+        rules["batch"] = batch_axes if len(batch_axes) > 1 else \
+            (batch_axes[0] if batch_axes else None)
+    if shape.kind in ("train", "prefill"):
+        rules["seq_res"] = "model"          # Megatron-style sequence parallel
+    model_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    if cfg.is_moe:
+        if cfg.n_experts % model_size == 0:
+            rules["ffn"] = None             # EP (olmoe): no TP inside experts
+        else:
+            rules["experts"] = None         # mixtral: TP inside experts
+    if cfg.n_kv_heads % model_size != 0:
+        rules["kv_heads"] = None            # MQA/GQA kv < chips: replicate
+    if cfg.n_heads % model_size != 0:
+        rules["heads"] = None
+    if cfg.d_ff % model_size != 0:
+        rules["ffn"] = None
+    return rules
+
+
+def input_specs(cfg: LMConfig, shape: ShapeConfig,
+                mesh: Optional[Mesh] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    if shape.kind == "train":
+        out["tokens"] = _sds((b, s), jnp.int32)
+        out["targets"] = _sds((b, s), jnp.int32)
+    elif shape.kind == "prefill":
+        out["tokens"] = _sds((b, s), jnp.int32)
+    else:  # decode: one new token against a cache of seq_len
+        out["tokens"] = _sds((b, 1), jnp.int32)
+        out["pos"] = _sds((), jnp.int32)
+    if cfg.is_encdec and shape.kind != "decode":
+        out["enc_feats"] = _sds((b, cfg.enc_seq_stub, cfg.d_model),
+                                jnp.bfloat16)
+    return out
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeConfig
+    fn: Callable                    # positional (state-like..., inputs...)
+    args: Tuple[Any, ...]           # ShapeDtypeStruct pytrees (positional)
+    in_specs: Tuple[Any, ...]       # matching PartitionSpec pytrees
+    out_specs: Any
+    donate: Tuple[int, ...]
+    rules: Dict
+
+
+def with_layer_units(cfg: LMConfig, units: int) -> LMConfig:
+    """Scale the repeated layer stack to ``units`` layer-units, keeping all
+    non-repeated structure (embed, head, hybrid remainder) intact.
+
+    Used by the roofline tier (launch.dryrun --mode roofline): compile at
+    units=1 and units=2 with unrolled loops, then extrapolate exactly:
+    F(L) = F(1) + (L-1) * (F(2) - F(1)) since every unit is identical.
+    A layer-unit is one pattern period (hybrid), one (enc+dec) layer pair
+    (enc-dec), or one layer (all other families).
+    """
+    if cfg.block_pattern:
+        rem = cfg.n_layers % len(cfg.block_pattern)
+        return dataclasses.replace(
+            cfg, n_layers=units * len(cfg.block_pattern) + rem)
+    if cfg.is_encdec:
+        return dataclasses.replace(cfg, n_layers=units,
+                                   encoder_layers=units)
+    return dataclasses.replace(cfg, n_layers=units)
+
+
+def layer_units(cfg: LMConfig) -> int:
+    """Number of layer-units the full config has (see with_layer_units)."""
+    if cfg.block_pattern:
+        return cfg.n_layers // len(cfg.block_pattern)
+    return cfg.n_layers
+
+
+def pad_heads_for_tp(cfg: LMConfig, model_size: int) -> LMConfig:
+    """Pad attention heads up to a multiple of the TP degree (standard
+    Megatron practice): e.g. minicpm 36 heads -> 48 on a 16-way model
+    axis.  Zero-padded heads are mathematically inert; here (cost
+    analysis) they appear as +33% attention width in exchange for 16x
+    sharding instead of full replication — §Perf iteration."""
+    def up(n):
+        return -(-n // model_size) * model_size
+    h = up(cfg.n_heads)
+    hk = up(cfg.n_kv_heads) if cfg.n_kv_heads == cfg.n_heads \
+        else cfg.n_kv_heads
+    return dataclasses.replace(cfg, n_heads=h, n_kv_heads=hk)
+
+
+def _strip_fsdp(spec_tree):
+    """Inference param layout: TP ('model') only, replicated over the data
+    axes — kills per-step FSDP weight all-gathers at serving time."""
+    def fix(sp):
+        return P(*[None if ax in ("data", "pod") else
+                   (tuple(a for a in ax if a not in ("data", "pod")) or None
+                    if isinstance(ax, tuple) else ax)
+                   for ax in sp])
+    return jax.tree_util.tree_map(fix, spec_tree,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(cfg: LMConfig, shape: ShapeConfig, mesh: Mesh,
+               analysis_unroll: bool = True,
+               bfp_weights=None,            # BFPPolicy -> int8 wire format
+               inference_no_fsdp: bool = False,
+               pad_heads: bool = False) -> Cell:
+    cfg = dataclasses.replace(cfg, compute_dtype="bfloat16",
+                              analysis_unroll=analysis_unroll)
+    if pad_heads:
+        model_size = dict(zip(mesh.axis_names,
+                              mesh.devices.shape)).get("model", 1)
+        cfg = pad_heads_for_tp(cfg, model_size)
+    rules = cell_rules(cfg, shape, mesh)
+    batch_axes = rules["batch"]
+    ins = input_specs(cfg, shape, mesh)
+
+    def _make_params(key):
+        p = Mdl.init_params(cfg, key)
+        if bfp_weights is not None:
+            from repro.core.prequant import quantize_param_tree
+            p = quantize_param_tree(p, bfp_weights)
+        return p
+
+    params_sds = jax.eval_shape(_make_params, jax.random.PRNGKey(0))
+    pspecs = SP.param_specs(cfg, params_sds, mesh)
+    if inference_no_fsdp:
+        pspecs = _strip_fsdp(pspecs)
+
+    if shape.kind == "train":
+        state_sds = TrainState(params=params_sds,
+                               opt_state=jax.eval_shape(opt.adamw_init,
+                                                        params_sds),
+                               step=_sds((), jnp.int32))
+        sspecs = TrainState(params=pspecs,
+                            opt_state=opt.OptState(step=P(), mu=pspecs,
+                                                   nu=pspecs),
+                            step=P())
+        step_fn = make_train_step(cfg, opt.constant_schedule(1e-4))
+
+        def fn(state, tokens, targets):
+            new_state, metrics = step_fn(state, (tokens, targets))
+            return new_state, metrics["loss"]
+
+        bspec = P(batch_axes, None)
+        return Cell(cfg.name, shape, fn,
+                    (state_sds, ins["tokens"], ins["targets"]),
+                    (sspecs, bspec, bspec),
+                    (sspecs, P()), donate=(0,), rules=rules)
+
+    if shape.kind == "prefill":
+        if cfg.is_encdec:
+            def fn(params, tokens, enc_feats):
+                logits, _ = Mdl.forward(params, cfg, tokens,
+                                        enc_feats=enc_feats)
+                return logits[:, -1]
+            espec = P(batch_axes, None, None)
+            return Cell(cfg.name, shape, fn,
+                        (params_sds, ins["tokens"], ins["enc_feats"]),
+                        (pspecs, P(batch_axes, None), espec),
+                        P(batch_axes, None), donate=(), rules=rules)
+
+        def fn(params, tokens):
+            logits, _ = Mdl.forward(params, cfg, tokens)
+            return logits[:, -1]
+        return Cell(cfg.name, shape, fn, (params_sds, ins["tokens"]),
+                    (pspecs, P(batch_axes, None)),
+                    P(batch_axes, None), donate=(), rules=rules)
+
+    # decode: serve_step with a cache of seq_len tokens
+    cache_sds = jax.eval_shape(
+        functools.partial(Mdl.init_cache, cfg, shape.global_batch,
+                          shape.seq_len))
+    if cfg.is_encdec:
+        cache_sds = dict(cache_sds, enc_out=_sds(
+            (shape.global_batch, cfg.enc_seq_stub, cfg.d_model),
+            jnp.bfloat16))
+    cspecs = SP.cache_specs(cfg, cache_sds, mesh)
+    if rules["batch"] is None:  # long_500k: strip batch sharding from cache
+        cspecs = jax.tree_util.tree_map(
+            lambda sp: P(*[None if ax in ("pod", "data",
+                                          ("pod", "data"), ("data",))
+                           else ax for ax in sp]),
+            cspecs, is_leaf=lambda x: isinstance(x, P))
+
+    def fn(params, cache, tokens, pos):
+        logits, new_cache = Mdl.decode_step(params, cfg, cache, tokens, pos)
+        return logits, new_cache
+
+    return Cell(cfg.name, shape, fn,
+                (params_sds, cache_sds, ins["tokens"], ins["pos"]),
+                (pspecs, cspecs, P(batch_axes, None), P()),
+                (P(batch_axes, None, None), cspecs),
+                donate=(1,), rules=rules)

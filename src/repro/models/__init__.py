@@ -1,0 +1,1 @@
+"""Model zoo: paper-faithful CNNs + the 10 assigned LM architectures."""

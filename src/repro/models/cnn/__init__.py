@@ -1,0 +1,1 @@
+"""CNN zoo with the BFP conv datapath (paper-faithful models)."""

@@ -1,0 +1,103 @@
+"""Paper Table 4 — per-layer SNR validation on VGG-style sequential CNNs.
+
+Runs the float reference and the BFP path side by side through the conv
+stack, measuring per-layer input/weight/output SNR and comparing against
+the single-layer (eq. 18) and multi-layer (eq. 19-20) analytical models.
+ReLU and pooling are traversed exactly as the paper does: ReLU is
+SNR-neutral, pooling output SNR feeds the next layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import nsr
+from repro.core.bfp_dot import bfp_matmul_2d
+from repro.core.policy import BFPPolicy
+from repro.models.cnn import layers as L
+from repro.models.cnn import vgg
+
+__all__ = ["LayerRow", "analyze_vgg"]
+
+
+@dataclasses.dataclass
+class LayerRow:
+    """One conv layer's row of the paper's Table 4 (SNRs in dB)."""
+    name: str
+    input_ex: float       # experimental input SNR
+    input_single: float   # single-layer model
+    input_multi: float    # multi-layer model
+    weight_ex: float
+    weight_model: float
+    output_ex: float
+    output_single: float
+    output_multi: float
+    relu_ex: float        # SNR after ReLU (paper: ~= output SNR)
+
+
+def _conv_as_matrices(params, x, name):
+    kh, kw, in_ch, out_ch = params[name]["w"].shape
+    cols, (b, oh, ow) = L.im2col(x, kh, kw, 1, "SAME")
+    w = jnp.transpose(params[name]["w"], (2, 0, 1, 3)).reshape(
+        in_ch * kh * kw, out_ch)
+    return cols, w, params[name]["b"], (b, oh, ow, out_ch)
+
+
+def analyze_vgg(params, x: jax.Array, policy: BFPPolicy,
+                max_layers: Optional[int] = None) -> List[LayerRow]:
+    """Dual-path (float / BFP) walk over the VGG conv stack."""
+    policy = policy.with_(straight_through=False)
+    rows: List[LayerRow] = []
+    x_f = x.astype(jnp.float32)
+    x_q = x.astype(jnp.float32)
+    eta_multi = 0.0
+    done = 0
+    for name, _ in vgg.VGG16_CONV_PLAN:
+        if name == "pool":
+            x_f, x_q = L.max_pool(x_f), L.max_pool(x_q)
+            continue
+        if max_layers is not None and done >= max_layers:
+            break
+        cols_f, w, b, oshape = _conv_as_matrices(params, x_f, name)
+        cols_q, _, _, _ = _conv_as_matrices(params, x_q, name)
+
+        # --- input SNRs ----------------------------------------------------
+        from repro.core.bfp_dot import quantize_activations
+        in_fmt = quantize_activations(cols_q, policy).dequantize()
+        input_ex = float(nsr.snr_db(cols_f, in_fmt))
+        input_single = float(nsr.predict_matrix_snr(cols_f, policy.l_i, "i",
+                                                    policy))
+        eta_fresh = float(nsr.nsr_from_snr_db(
+            nsr.predict_matrix_snr(cols_q, policy.l_i, "i", policy)))
+        eta_in_multi = float(nsr.chain_input_nsr(eta_multi, eta_fresh))
+        input_multi = float(nsr.snr_db_from_nsr(jnp.asarray(eta_in_multi)))
+
+        # --- weight SNRs ---------------------------------------------------
+        weight_ex = float(nsr.measure_matrix_snr(w, policy.l_w, "w", policy))
+        weight_model = float(nsr.predict_matrix_snr(w, policy.l_w, "w",
+                                                    policy))
+        eta_w = float(nsr.nsr_from_snr_db(weight_model))
+
+        # --- conv outputs ----------------------------------------------------
+        y_f = (cols_f @ w + b).reshape(oshape)
+        y_q = (bfp_matmul_2d(cols_q, w, policy) + b).reshape(oshape)
+        output_ex = float(nsr.snr_db(y_f, y_q))
+        output_single = float(nsr.single_layer_output_snr(
+            jnp.asarray(input_single), jnp.asarray(weight_model)))
+        eta_out_multi = eta_in_multi + eta_w
+        output_multi = float(nsr.snr_db_from_nsr(jnp.asarray(eta_out_multi)))
+
+        # --- ReLU (paper: SNR-neutral check) --------------------------------
+        r_f, r_q = L.relu(y_f), L.relu(y_q)
+        relu_ex = float(nsr.snr_db(r_f, r_q))
+
+        rows.append(LayerRow(name, input_ex, input_single, input_multi,
+                             weight_ex, weight_model, output_ex,
+                             output_single, output_multi, relu_ex))
+        x_f, x_q = r_f, r_q
+        eta_multi = eta_out_multi
+        done += 1
+    return rows

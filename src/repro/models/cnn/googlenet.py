@@ -1,0 +1,122 @@
+"""GoogLeNet (Szegedy et al. 2015) with the three classifier heads the
+paper reports (loss1/loss2/loss3 columns of Table 3)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import BFPPolicy
+from repro.models.cnn import layers as L
+
+# (name, out_1x1, red_3x3, out_3x3, red_5x5, out_5x5, pool_proj)
+_INCEPTION = [
+    ("3a", 64, 96, 128, 16, 32, 32),
+    ("3b", 128, 128, 192, 32, 96, 64),
+    ("pool", 0, 0, 0, 0, 0, 0),
+    ("4a", 192, 96, 208, 16, 48, 64),
+    ("4b", 160, 112, 224, 24, 64, 64),
+    ("4c", 128, 128, 256, 24, 64, 64),
+    ("4d", 112, 144, 288, 32, 64, 64),
+    ("4e", 256, 160, 320, 32, 128, 128),
+    ("pool", 0, 0, 0, 0, 0, 0),
+    ("5a", 256, 160, 320, 32, 128, 128),
+    ("5b", 384, 192, 384, 48, 128, 128),
+]
+_AUX_AFTER = {"4a": "loss1", "4d": "loss2"}
+
+
+def _inception_init(key, in_ch, cfg, width_mult):
+    _, o1, r3, o3, r5, o5, pp = cfg
+    scale = lambda c: max(4, int(c * width_mult))
+    k = jax.random.split(key, 6)
+    return {
+        "b1": L.conv2d_init(k[0], in_ch, scale(o1), 1, 1),
+        "b3r": L.conv2d_init(k[1], in_ch, scale(r3), 1, 1),
+        "b3": L.conv2d_init(k[2], scale(r3), scale(o3), 3, 3),
+        "b5r": L.conv2d_init(k[3], in_ch, scale(r5), 1, 1),
+        "b5": L.conv2d_init(k[4], scale(r5), scale(o5), 5, 5),
+        "bp": L.conv2d_init(k[5], in_ch, scale(pp), 1, 1),
+    }, scale(o1) + scale(o3) + scale(o5) + scale(pp)
+
+
+def _inception(p, x, policy):
+    b1 = L.relu(L.conv2d(p["b1"], x, 1, "SAME", policy))
+    b3 = L.relu(L.conv2d(p["b3r"], x, 1, "SAME", policy))
+    b3 = L.relu(L.conv2d(p["b3"], b3, 1, "SAME", policy))
+    b5 = L.relu(L.conv2d(p["b5r"], x, 1, "SAME", policy))
+    b5 = L.relu(L.conv2d(p["b5"], b5, 1, "SAME", policy))
+    bp = L.max_pool(x, 3, 1, "SAME")
+    bp = L.relu(L.conv2d(p["bp"], bp, 1, "SAME", policy))
+    return jnp.concatenate([b1, b3, b5, bp], axis=-1)
+
+
+def _aux_init(key, in_ch, num_classes, width_mult):
+    k1, k2, k3 = jax.random.split(key, 3)
+    mid = max(16, int(128 * width_mult))
+    fc = max(32, int(1024 * width_mult))
+    return {"conv": L.conv2d_init(k1, in_ch, mid, 1, 1),
+            "fc1_in": mid * 16, "mid": mid,
+            "fc1": L.dense_init(k2, mid * 16, fc),
+            "fc2": L.dense_init(k3, fc, num_classes)}
+
+
+def _aux(p, x, policy):
+    # adaptive 4x4 average pool
+    h, w = x.shape[1], x.shape[2]
+    x = L.avg_pool(x, h // 4, h // 4) if h >= 4 else x
+    x = L.relu(L.conv2d(p["conv"], x, 1, "SAME", policy))
+    x = x.reshape(x.shape[0], -1)[:, :p["fc1_in"]]
+    x = L.relu(L.dense(p["fc1"], x, policy))
+    return L.dense(p["fc2"], x, policy)
+
+
+def init(key, num_classes: int = 1000, in_ch: int = 3,
+         width_mult: float = 1.0):
+    scale = lambda c: max(8, int(c * width_mult))
+    key, k1, k2, k3 = jax.random.split(key, 4)
+    params = {"stem1": L.conv2d_init(k1, in_ch, scale(64), 7, 7),
+              "stem2r": L.conv2d_init(k2, scale(64), scale(64), 1, 1),
+              "stem2": L.conv2d_init(k3, scale(64), scale(192), 3, 3)}
+    ch = scale(192)
+    for cfg in _INCEPTION:
+        if cfg[0] == "pool":
+            continue
+        key, sub = jax.random.split(key)
+        params[f"inc{cfg[0]}"], ch_out = _inception_init(sub, ch, cfg,
+                                                         width_mult)
+        if cfg[0] in _AUX_AFTER:
+            key, sub = jax.random.split(key)
+            params[_AUX_AFTER[cfg[0]]] = _aux_init(sub, ch_out, num_classes,
+                                                   width_mult)
+        ch = ch_out
+    key, sub = jax.random.split(key)
+    params["fc"] = L.dense_init(sub, ch, num_classes)
+    return params
+
+
+def apply(params, x: jax.Array, policy: Optional[BFPPolicy] = None,
+          with_aux: bool = True):
+    """Returns (loss3_logits, loss1_logits, loss2_logits) — the paper's
+    three GoogLeNet columns."""
+    x = L.relu(L.conv2d(params["stem1"], x, 2, "SAME", policy))
+    x = L.max_pool(x, 3, 2, "SAME")
+    x = L.relu(L.conv2d(params["stem2r"], x, 1, "SAME", policy))
+    x = L.relu(L.conv2d(params["stem2"], x, 1, "SAME", policy))
+    x = L.max_pool(x, 3, 2, "SAME")
+    aux1 = aux2 = None
+    for cfg in _INCEPTION:
+        if cfg[0] == "pool":
+            x = L.max_pool(x, 3, 2, "SAME")
+            continue
+        x = _inception(params[f"inc{cfg[0]}"], x, policy)
+        if with_aux and cfg[0] in _AUX_AFTER:
+            a = _aux(params[_AUX_AFTER[cfg[0]]], x, policy)
+            if cfg[0] == "4a":
+                aux1 = a
+            else:
+                aux2 = a
+    x = L.global_avg_pool(x)
+    main = L.dense(params["fc"], x, policy)
+    return (main, aux1, aux2) if with_aux else main

@@ -1,0 +1,133 @@
+"""CNN layers with the BFP datapath (paper §3.2-3.4).
+
+Convolution is expressed as the paper's matrix form: im2col expands
+receptive fields into rows of an input matrix I, the kernels form W, and
+``O = I @ W`` runs through :func:`repro.core.bfp_dot` — block formatting +
+fixed-point MAC, exactly the paper's Fig. 2 pipeline.  ``policy=None``
+gives the float reference path.
+
+Parameters are plain pytrees (dicts); every layer is a pure function.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bfp_dot import bfp_dot
+from repro.core.policy import BFPPolicy
+
+__all__ = ["conv2d_init", "conv2d", "im2col", "dense_init", "dense",
+           "batchnorm_init", "batchnorm", "max_pool", "avg_pool",
+           "global_avg_pool", "relu"]
+
+
+def _he_init(key, shape, fan_in):
+    return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+# ---------------------------------------------------------------------------
+# Convolution as matrix multiplication (paper Fig. 1)
+# ---------------------------------------------------------------------------
+
+def conv2d_init(key, in_ch: int, out_ch: int, kh: int, kw: int):
+    """Weights stored HWIO [kh, kw, in_ch, out_ch]; the GEMM view (paper
+    W^T: each column is one filter == one paper W row) is taken inside
+    conv2d.  Shape info lives in the array shape (jit-static)."""
+    k = kh * kw * in_ch
+    wkey, bkey = jax.random.split(key)
+    return {
+        "w": _he_init(wkey, (kh, kw, in_ch, out_ch), k),
+        "b": jnp.zeros((out_ch,), jnp.float32),
+    }
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int,
+           padding: str) -> Tuple[jax.Array, Tuple[int, int, int]]:
+    """NHWC -> patch matrix [B*OH*OW, kh*kw*C] (receptive fields as rows).
+
+    This is the paper's I matrix (transposed to NN orientation): row n is
+    the n-th receptive field, matching bfp_dot's per-row activation blocks.
+    """
+    b = x.shape[0]
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    oh, ow = patches.shape[1], patches.shape[2]
+    # conv_general_dilated_patches yields features ordered as C*kh*kw
+    # (channel-major); weight layout below matches it.
+    return patches.reshape(b * oh * ow, -1), (b, oh, ow)
+
+
+def conv2d(params, x: jax.Array, stride: int = 1, padding: str = "SAME",
+           policy: Optional[BFPPolicy] = None) -> jax.Array:
+    """BFP convolution via im2col GEMM.  x: NHWC float."""
+    kh, kw, in_ch, out_ch = params["w"].shape
+    cols, (b, oh, ow) = im2col(x, kh, kw, stride, padding)
+    # patches come out channel-major (C, kh, kw) -> match weight row order
+    w = jnp.transpose(params["w"], (2, 0, 1, 3)).reshape(
+        in_ch * kh * kw, out_ch)
+    out = bfp_dot(cols, w, policy) + params["b"]
+    return out.reshape(b, oh, ow, out_ch)
+
+
+# ---------------------------------------------------------------------------
+# Dense / norm / pooling
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int):
+    wkey, _ = jax.random.split(key)
+    return {"w": _he_init(wkey, (in_dim, out_dim), in_dim),
+            "b": jnp.zeros((out_dim,), jnp.float32)}
+
+
+def dense(params, x: jax.Array,
+          policy: Optional[BFPPolicy] = None) -> jax.Array:
+    return bfp_dot(x, params["w"], policy) + params["b"]
+
+
+def batchnorm_init(ch: int):
+    return {"gamma": jnp.ones((ch,), jnp.float32),
+            "beta": jnp.zeros((ch,), jnp.float32),
+            "mean": jnp.zeros((ch,), jnp.float32),
+            "var": jnp.ones((ch,), jnp.float32)}
+
+
+def batchnorm(params, x: jax.Array, training: bool = False,
+              eps: float = 1e-5):
+    """Inference-mode BN (paper setting: deployed models, no retraining).
+
+    In training mode uses batch statistics (no running-average state
+    threading — the small CNNs trained in-repo use this path).
+    """
+    if training:
+        axes = tuple(range(x.ndim - 1))
+        mean = jnp.mean(x, axes)
+        var = jnp.var(x, axes)
+    else:
+        mean, var = params["mean"], params["var"]
+    inv = jax.lax.rsqrt(var + eps) * params["gamma"]
+    return x * inv + (params["beta"] - mean * inv)
+
+
+def max_pool(x: jax.Array, window: int = 2, stride: int = 2,
+             padding: str = "VALID") -> jax.Array:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, window, window, 1),
+        (1, stride, stride, 1), padding)
+
+
+def avg_pool(x: jax.Array, window: int, stride: int,
+             padding: str = "VALID") -> jax.Array:
+    s = jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, window, window, 1),
+        (1, stride, stride, 1), padding)
+    return s / (window * window)
+
+
+def global_avg_pool(x: jax.Array) -> jax.Array:
+    return jnp.mean(x, axis=(1, 2))
+
+
+relu = jax.nn.relu

@@ -1,0 +1,110 @@
+"""ResNet-18 / ResNet-50 (He et al. 2016) with the BFP conv datapath.
+
+Inference-mode batch norm (the paper deploys trained models without
+retraining); ``width_mult``/``stage_depths`` allow reduced smoke configs.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import BFPPolicy
+from repro.models.cnn import layers as L
+
+
+def _conv_bn_init(key, in_ch, out_ch, k):
+    return {"conv": L.conv2d_init(key, in_ch, out_ch, k, k),
+            "bn": L.batchnorm_init(out_ch)}
+
+
+def _conv_bn(p, x, stride, policy, training, act=True):
+    x = L.conv2d(p["conv"], x, stride, "SAME", policy)
+    x = L.batchnorm(p["bn"], x, training)
+    return L.relu(x) if act else x
+
+
+def _basic_block_init(key, in_ch, out_ch, stride):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"c1": _conv_bn_init(k1, in_ch, out_ch, 3),
+         "c2": _conv_bn_init(k2, out_ch, out_ch, 3)}
+    if stride != 1 or in_ch != out_ch:
+        p["proj"] = _conv_bn_init(k3, in_ch, out_ch, 1)
+    return p
+
+
+def _basic_block(p, x, stride, policy, training):
+    h = _conv_bn(p["c1"], x, stride, policy, training)
+    h = _conv_bn(p["c2"], h, 1, policy, training, act=False)
+    sc = _conv_bn(p["proj"], x, stride, policy, training, act=False) \
+        if "proj" in p else x
+    return L.relu(h + sc)
+
+
+def _bottleneck_init(key, in_ch, mid_ch, stride):
+    out_ch = mid_ch * 4
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"c1": _conv_bn_init(k1, in_ch, mid_ch, 1),
+         "c2": _conv_bn_init(k2, mid_ch, mid_ch, 3),
+         "c3": _conv_bn_init(k3, mid_ch, out_ch, 1)}
+    if stride != 1 or in_ch != out_ch:
+        p["proj"] = _conv_bn_init(k4, in_ch, out_ch, 1)
+    return p
+
+
+def _bottleneck(p, x, stride, policy, training):
+    h = _conv_bn(p["c1"], x, 1, policy, training)
+    h = _conv_bn(p["c2"], h, stride, policy, training)
+    h = _conv_bn(p["c3"], h, 1, policy, training, act=False)
+    sc = _conv_bn(p["proj"], x, stride, policy, training, act=False) \
+        if "proj" in p else x
+    return L.relu(h + sc)
+
+
+_DEPTHS = {18: (2, 2, 2, 2), 50: (3, 4, 6, 3)}
+
+
+def init(key, depth: int = 18, num_classes: int = 1000, in_ch: int = 3,
+         width_mult: float = 1.0,
+         stage_depths: Optional[Sequence[int]] = None):
+    stage_depths = stage_depths or _DEPTHS[depth]
+    bottleneck = depth >= 50
+    base = max(8, int(64 * width_mult))
+    key, sub = jax.random.split(key)
+    params = {"stem": _conv_bn_init(sub, in_ch, base, 7)}
+    ch = base
+    blocks = []
+    for si, nblocks in enumerate(stage_depths):
+        out = base * (2 ** si)
+        for bi in range(nblocks):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            key, sub = jax.random.split(key)
+            if bottleneck:
+                blocks.append(_bottleneck_init(sub, ch, out, stride))
+                ch = out * 4
+            else:
+                blocks.append(_basic_block_init(sub, ch, out, stride))
+                ch = out
+    params["blocks"] = blocks
+    key, sub = jax.random.split(key)
+    params["fc"] = L.dense_init(sub, ch, num_classes)
+    params["meta"] = (depth, tuple(stage_depths), bottleneck)
+    return params
+
+
+def apply(params, x: jax.Array, policy: Optional[BFPPolicy] = None,
+          training: bool = False) -> jax.Array:
+    depth, stage_depths, bottleneck = params["meta"]
+    x = _conv_bn(params["stem"], x, 2, policy, training)
+    x = L.max_pool(x, 3, 2, "SAME")
+    bi = 0
+    for si, nblocks in enumerate(stage_depths):
+        for b in range(nblocks):
+            stride = 2 if (b == 0 and si > 0) else 1
+            blk = params["blocks"][bi]
+            x = (_bottleneck(blk, x, stride, policy, training) if bottleneck
+                 else _basic_block(blk, x, stride, policy, training))
+            bi += 1
+    x = L.global_avg_pool(x)
+    return L.dense(params["fc"], x, policy)

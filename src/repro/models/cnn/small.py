@@ -1,0 +1,54 @@
+"""Small trainable CNNs — the paper's "mnist" and "cifar10" columns.
+
+LeNet-5-style for 28x28x1 and CIFAR-quick for 32x32x3; both train to high
+accuracy on the in-repo synthetic datasets in seconds on CPU, which is how
+the Table-3-style accuracy-drop sweeps are produced without ILSVRC12
+(DESIGN.md §8.1)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import BFPPolicy
+from repro.models.cnn import layers as L
+
+
+def lenet_init(key, num_classes: int = 10, in_ch: int = 1):
+    k = jax.random.split(key, 4)
+    return {"c1": L.conv2d_init(k[0], in_ch, 16, 5, 5),
+            "c2": L.conv2d_init(k[1], 16, 32, 5, 5),
+            "fc1": L.dense_init(k[2], 32 * 7 * 7, 128),
+            "fc2": L.dense_init(k[3], 128, num_classes)}
+
+
+def lenet_apply(params, x, policy: Optional[BFPPolicy] = None):
+    x = L.relu(L.conv2d(params["c1"], x, 1, "SAME", policy))
+    x = L.max_pool(x)
+    x = L.relu(L.conv2d(params["c2"], x, 1, "SAME", policy))
+    x = L.max_pool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = L.relu(L.dense(params["fc1"], x, policy))
+    return L.dense(params["fc2"], x, policy)
+
+
+def cifarnet_init(key, num_classes: int = 10, in_ch: int = 3):
+    k = jax.random.split(key, 5)
+    return {"c1": L.conv2d_init(k[0], in_ch, 32, 3, 3),
+            "c2": L.conv2d_init(k[1], 32, 64, 3, 3),
+            "c3": L.conv2d_init(k[2], 64, 128, 3, 3),
+            "fc1": L.dense_init(k[3], 128 * 4 * 4, 256),
+            "fc2": L.dense_init(k[4], 256, num_classes)}
+
+
+def cifarnet_apply(params, x, policy: Optional[BFPPolicy] = None):
+    x = L.relu(L.conv2d(params["c1"], x, 1, "SAME", policy))
+    x = L.max_pool(x)
+    x = L.relu(L.conv2d(params["c2"], x, 1, "SAME", policy))
+    x = L.max_pool(x)
+    x = L.relu(L.conv2d(params["c3"], x, 1, "SAME", policy))
+    x = L.max_pool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = L.relu(L.dense(params["fc1"], x, policy))
+    return L.dense(params["fc2"], x, policy)

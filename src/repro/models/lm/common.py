@@ -1,0 +1,353 @@
+"""Shared transformer components: RMSNorm, RoPE (+M-RoPE), GQA attention
+(full / sliding-window, train + KV-cache decode), SwiGLU FFN.
+
+Every linear routes through ``repro.core.bfp_dot`` so the paper's BFP
+datapath applies uniformly (DESIGN.md §3); ``policy=None`` is float.
+Activations carry logical sharding annotations (repro.dist.sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.core.bfp_dot import bfp_dot
+from repro.core.policy import BFPPolicy
+from repro.dist.sharding import shard
+
+__all__ = ["rmsnorm", "rmsnorm_init", "rope", "mrope", "attention_init",
+           "attention", "attention_decode", "swiglu_init", "swiglu",
+           "linear_init", "linear", "embed_init"]
+
+Policy = Optional[BFPPolicy]
+
+
+def _init(key, shape, fan_in):
+    return (jax.random.normal(key, shape, jnp.float32)
+            * jnp.sqrt(1.0 / fan_in)).astype(jnp.float32)
+
+
+def linear_init(key, d_in: int, d_out: int, bias: bool = False):
+    p = {"w": _init(key, (d_in, d_out), d_in)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def linear(p, x: jax.Array, policy: Policy = None) -> jax.Array:
+    w = p["w"]
+    if isinstance(w, dict) and "m" in w:
+        # BFP wire format (core.prequant): int8 mantissas + per-(K-tile,
+        # col) power-of-two scales.  HBM/ICI move the int8 payload; the
+        # dequantized operand is a transient fused into the matmul.
+        m, sc = w["m"], w["s"]
+        bk = m.shape[-2] // sc.shape[-2]
+        s_full = jnp.repeat(sc, bk, axis=-2).astype(x.dtype)
+        w = m.astype(x.dtype) * s_full
+    else:
+        w = w.astype(x.dtype)        # params fp32, compute in x.dtype
+    y = bfp_dot(x, w, policy)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def rmsnorm_init(d: int):
+    return {"g": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * p["g"]).astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d: int):
+    return {"e": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + qwen2-vl M-RoPE)
+# ---------------------------------------------------------------------------
+
+def _rope_freqs(dh: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dh // 2, dtype=jnp.float32)
+                            / (dh // 2)))
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, Dh]; positions: [B, S] int32."""
+    freqs = _rope_freqs(x.shape[-1], theta)                    # [Dh/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs     # [B,S,Dh/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def mrope(x: jax.Array, positions3: jax.Array, theta: float,
+          sections: Tuple[int, int, int]) -> jax.Array:
+    """qwen2-vl multimodal RoPE: positions3 [3, B, S] = (t, h, w) ids.
+
+    The Dh/2 rotary frequencies are partitioned into (temporal, height,
+    width) sections; each section rotates by its own position stream.
+    For text tokens the three streams coincide, reducing to standard RoPE.
+    """
+    dh = x.shape[-1]
+    freqs = _rope_freqs(dh, theta)                                    # [Dh/2]
+    ang_3 = positions3[..., None].astype(jnp.float32) * freqs         # [3,B,S,Dh/2]
+    import numpy as np
+    sec_ids = np.repeat(np.arange(3), np.asarray(sections))[: dh // 2]
+    sel = jax.nn.one_hot(jnp.asarray(sec_ids), 3, dtype=jnp.float32)  # [Dh/2,3]
+    ang = jnp.einsum("pbsd,dp->bsd", ang_3, sel)                      # [B,S,Dh/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def _apply_rope(cfg: LMConfig, x, positions):
+    if cfg.mrope_sections is not None:
+        if positions.ndim == 2:  # text-only: all three streams equal
+            positions = jnp.broadcast_to(positions[None],
+                                         (3,) + positions.shape)
+        return mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    return rope(x, positions, cfg.rope_theta)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def attention_init(key, cfg: LMConfig, cross: bool = False):
+    d, dh, h, hk = cfg.d_model, cfg.dh, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": linear_init(ks[0], d, h * dh, cfg.qkv_bias),
+        "wk": linear_init(ks[1], d, hk * dh, cfg.qkv_bias),
+        "wv": linear_init(ks[2], d, hk * dh, cfg.qkv_bias),
+        "wo": linear_init(ks[3], h * dh, d),
+    }
+
+
+def _qkv(p, cfg: LMConfig, x, xkv, policy: Policy):
+    b, s = x.shape[0], x.shape[1]
+    skv = xkv.shape[1]
+    q = linear(p["wq"], x, policy).reshape(b, s, cfg.n_heads, cfg.dh)
+    k = linear(p["wk"], xkv, policy).reshape(b, skv, cfg.n_kv_heads, cfg.dh)
+    v = linear(p["wv"], xkv, policy).reshape(b, skv, cfg.n_kv_heads, cfg.dh)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def _sdpa(q, k, v, cfg: LMConfig, mask: Optional[jax.Array]) -> jax.Array:
+    """Grouped scaled dot-product attention.  q:[B,S,H,Dh] k,v:[B,T,Hk,Dh]."""
+    b, s, h, dh = q.shape
+    t, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    q = q.reshape(b, s, hk, g, dh)
+    scores = jnp.einsum("bshgd,bthd->bhgst", q, k,
+                        preferred_element_type=jnp.float32) / jnp.sqrt(dh)
+    if cfg.attn_logit_softcap:
+        c = cfg.attn_logit_softcap
+        scores = jnp.tanh(scores / c) * c
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, v)
+    return out.reshape(b, s, h, dh)
+
+
+def _flash_sdpa(q, k, v, cfg: LMConfig, causal: bool,
+                chunk: int = 512) -> jax.Array:
+    """Memory-efficient attention: lax.scan over KV chunks with an online
+    softmax (running max / normalizer) — O(S * chunk) live memory instead
+    of O(S^2), the standard production attention shape for long sequences.
+    With per-layer remat the backward recomputes chunks (flash-style).
+    """
+    b, s, h, dh = q.shape
+    t, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    if cfg.analysis_unroll:
+        # keep the unroll at <= ~16 chunk bodies (HLO size) in analysis mode
+        chunk = max(512, ((t // 16 + 127) // 128) * 128)
+    # operands stay in compute dtype (bf16 on TPU); accumulation is f32 via
+    # preferred_element_type — halves score/PV traffic (§Perf iteration A3)
+    qg = (q.reshape(b, s, hk, g, dh) / jnp.sqrt(dh).astype(q.dtype))
+    nc = -(-t // chunk)
+    pad = nc * chunk - t
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    q_idx = jnp.arange(s)
+
+    def body(carry, i):
+        m, l, acc = carry
+        ks = jax.lax.dynamic_slice_in_dim(kp, i * chunk, chunk, 1)
+        vs = jax.lax.dynamic_slice_in_dim(vp, i * chunk, chunk, 1)
+        scores = jnp.einsum("bshgd,bthd->bhgst", qg, ks,
+                            preferred_element_type=jnp.float32)
+        if cfg.attn_logit_softcap:
+            c = cfg.attn_logit_softcap
+            scores = jnp.tanh(scores / c) * c
+        k_idx = i * chunk + jnp.arange(chunk)
+        valid = k_idx[None, :] < t
+        if causal:
+            valid = valid & (k_idx[None, :] <= q_idx[:, None])
+        scores = jnp.where(valid[None, None, None], scores, -1e30)
+        m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        # p stays f32: casting it to bf16 materializes an extra s x chunk
+        # buffer that costs more than the PV read saves (refuted variant,
+        # §Perf A3b); converting the small vs chunk up to f32 is cheaper.
+        acc_new = (acc * alpha[..., None]
+                   + jnp.einsum("bhgst,bthd->bhgsd", p,
+                                vs.astype(jnp.float32)))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hk, g, s), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hk, g, s), jnp.float32)
+    a0 = jnp.zeros((b, hk, g, s, dh), jnp.float32)
+    if cfg.analysis_unroll:
+        carry = (m0, l0, a0)
+        for i in range(nc):
+            carry, _ = body(carry, jnp.asarray(i))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(nc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, dh).astype(q.dtype)
+
+
+# Sequence length at/above which the flash path replaces materialized
+# S x S scores for full attention.
+FLASH_THRESHOLD = 2048
+
+
+def _causal_mask(s: int, window: Optional[int]) -> jax.Array:
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    m = j <= i
+    if window is not None:
+        m &= (i - j) < window
+    return m  # [S, S] -> broadcast over [B,Hk,G,S,T]
+
+
+def attention(p, cfg: LMConfig, x: jax.Array, positions: jax.Array,
+              policy: Policy = None,
+              xkv: Optional[jax.Array] = None,
+              causal: bool = True) -> jax.Array:
+    """Full-sequence attention (training / prefill).
+
+    Sliding-window attention uses chunked computation: queries in chunks of
+    W attend to (own + previous) key chunk — O(S*2W) instead of O(S^2).
+    Cross-attention (xkv given) is non-causal.
+    """
+    cross = xkv is not None
+    xkv = x if xkv is None else xkv
+    q, k, v = _qkv(p, cfg, x, xkv, policy)
+    if not cross:
+        q = _apply_rope(cfg, q, positions)
+        k = _apply_rope(cfg, k, positions)
+
+    w = cfg.sliding_window
+    s = x.shape[1]
+    if (not cross) and w is not None and s > 2 * w and s % w == 0:
+        out = _swa_chunked(q, k, v, cfg, w)       # O(S * 2W) local attention
+    elif (not cross) and w is None and s >= FLASH_THRESHOLD:
+        out = _flash_sdpa(q, k, v, cfg, causal)   # online-softmax long-seq
+    else:
+        mask = None
+        if causal and not cross:
+            mask = _causal_mask(s, w)[None, None, None]
+        out = _sdpa(q, k, v, cfg, mask)
+    out = shard(out, "batch", "seq", "heads", None)
+    b = x.shape[0]
+    return linear(p["wo"], out.reshape(b, s, -1), policy)
+
+
+def _swa_chunked(q, k, v, cfg: LMConfig, w: int) -> jax.Array:
+    """Sliding-window attention in O(S * 2W): chunk queries by window size;
+    each chunk attends to its own and the previous key/value chunk."""
+    b, s, h, dh = q.shape
+    hk = k.shape[2]
+    nc = s // w
+    qc = q.reshape(b, nc, w, h, dh)
+    kc = k.reshape(b, nc, w, hk, dh)
+    vc = v.reshape(b, nc, w, hk, dh)
+    # previous chunk (zero-padded at the front; masked out anyway)
+    kp = jnp.concatenate([jnp.zeros_like(kc[:, :1]), kc[:, :-1]], axis=1)
+    vp = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], axis=1)
+    k2 = jnp.concatenate([kp, kc], axis=2)   # [B,nc,2W,Hk,Dh]
+    v2 = jnp.concatenate([vp, vc], axis=2)
+    g = h // hk
+    qg = qc.reshape(b, nc, w, hk, g, dh)
+    scores = jnp.einsum("bcshgd,bcthd->bchgst", qg, k2,
+                        preferred_element_type=jnp.float32) / jnp.sqrt(dh)
+    i = jnp.arange(w)[:, None]          # query offset in chunk
+    j = jnp.arange(2 * w)[None, :]      # key offset in [prev, own]
+    rel = (i + w) - j                    # distance >= 0 means j not after i
+    mask = (rel >= 0) & (rel < w)        # strictly inside the window
+    first = jnp.arange(nc) == 0          # first chunk has no prev
+    mask_all = mask[None] & ~(first[:, None, None] & (j < w)[None])
+    scores = jnp.where(mask_all[None, :, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bchgst,bcthd->bcshgd", probs, v2)
+    return out.reshape(b, s, h, dh)
+
+
+def attention_decode(p, cfg: LMConfig, x: jax.Array, pos: jax.Array,
+                     kcache: jax.Array, vcache: jax.Array,
+                     policy: Policy = None
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token decode with KV cache.
+
+    x: [B, 1, D]; kcache/vcache: [B, T, Hk, Dh] (T = max_len, or the
+    window size when sliding-window — ring buffer indexed pos % T).
+    Returns (out [B,1,D], new kcache, new vcache).
+    """
+    b = x.shape[0]
+    t = kcache.shape[1]
+    q = linear(p["wq"], x, policy).reshape(b, 1, cfg.n_heads, cfg.dh)
+    k = linear(p["wk"], x, policy).reshape(b, 1, cfg.n_kv_heads, cfg.dh)
+    v = linear(p["wv"], x, policy).reshape(b, 1, cfg.n_kv_heads, cfg.dh)
+    positions = jnp.broadcast_to(pos[None], (b, 1)) \
+        if pos.ndim == 0 else pos.reshape(b, 1)
+    q = _apply_rope(cfg, q, positions)
+    k = _apply_rope(cfg, k, positions)
+
+    slot = (pos % t).astype(jnp.int32)   # ring buffer for SWA; == pos otherwise
+    kcache = jax.lax.dynamic_update_slice_in_dim(kcache, k.astype(kcache.dtype),
+                                                 slot, axis=1)
+    vcache = jax.lax.dynamic_update_slice_in_dim(vcache, v.astype(vcache.dtype),
+                                                 slot, axis=1)
+    # valid positions: those already written (<= pos), within window if SWA
+    idx = jnp.arange(t)
+    written = jnp.where(pos >= t, t, pos + 1)      # ring full once pos >= t
+    valid = idx < written
+    mask = valid[None, None, None, None, :]        # [1,1,1,1,T]
+    out = _sdpa(q, kcache.astype(q.dtype), vcache.astype(q.dtype), cfg, mask)
+    return linear(p["wo"], out.reshape(b, 1, -1), policy), kcache, vcache
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU FFN
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key, d: int, f: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w1": linear_init(k1, d, f),    # gate
+            "w3": linear_init(k2, d, f),    # up
+            "w2": linear_init(k3, f, d)}    # down
+
+
+def swiglu(p, x: jax.Array, policy: Policy = None) -> jax.Array:
+    h = jax.nn.silu(linear(p["w1"], x, policy)) * linear(p["w3"], x, policy)
+    h = shard(h, "batch", "seq", "ffn")
+    return linear(p["w2"], h, policy)

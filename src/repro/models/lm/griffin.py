@@ -1,0 +1,120 @@
+"""RG-LRU recurrent block (Griffin / recurrentgemma, arXiv:2402.19427).
+
+Block: x -> [linear -> causal depthwise conv1d(4) -> RG-LRU] * [linear ->
+GeLU] -> linear.  RG-LRU per channel:
+
+    r_t = sigmoid(x_t @ Wr + br)          (recurrence gate)
+    i_t = sigmoid(x_t @ Wi + bi)          (input gate)
+    a_t = exp(-c * softplus(L) * r_t)     (data-dependent decay, c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill uses jax.lax.associative_scan over the sequence (the
+recurrence is a diagonal affine map -> associative composition).  The
+recurrence is elementwise (no GEMM) so BFP applies to the surrounding
+projections only (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.core.policy import BFPPolicy
+from repro.models.lm.common import linear, linear_init
+
+Policy = Optional[BFPPolicy]
+_C = 8.0
+
+
+def rglru_block_init(key, cfg: LMConfig):
+    d = cfg.d_model
+    lw = cfg.lru_width or d
+    ks = jax.random.split(key, 7)
+    # Lambda init so decay a in (0.9, 0.999) at r=1 (Griffin appendix)
+    lam = jax.random.uniform(ks[0], (lw,), jnp.float32, 0.9, 0.999)
+    softplus_inv = jnp.log(jnp.expm1(-jnp.log(lam) / _C))
+    return {
+        "in_x": linear_init(ks[1], d, lw),
+        "in_g": linear_init(ks[2], d, lw),
+        "conv_w": jax.random.normal(ks[3], (cfg.conv_width, lw),
+                                    jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((lw,), jnp.float32),
+        "wr": linear_init(ks[4], lw, lw),
+        "wi": linear_init(ks[5], lw, lw),
+        "lam": softplus_inv,
+        "out": linear_init(ks[6], lw, d),
+    }
+
+
+def _causal_conv(w, b, x, x_hist=None):
+    """Causal depthwise conv1d.  x: [B,S,C]; w: [W,C].
+
+    x_hist: [B, W-1, C] previous inputs for decode continuity (None = zeros).
+    """
+    width = w.shape[0]
+    w = w.astype(x.dtype)
+    if x_hist is None:
+        x_hist = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([x_hist.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    return out + b.astype(x.dtype)
+
+
+def _rglru(p, x: jax.Array, h0: Optional[jax.Array], policy: Policy
+           ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B,S,C] -> (y [B,S,C], h_last [B,C]) via associative scan."""
+    r = jax.nn.sigmoid(linear(p["wr"], x, policy).astype(jnp.float32))
+    i = jax.nn.sigmoid(linear(p["wi"], x, policy).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r            # [B,S,C]
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * \
+        (i * x.astype(jnp.float32))
+    if h0 is not None:
+        gated = gated.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_cum, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_block(p, cfg: LMConfig, x: jax.Array, state=None,
+                policy: Policy = None):
+    """Full-sequence Griffin recurrent block.
+
+    state: None (train) or (h0 [B,C], conv_hist [B,W-1,C]) for chunked
+    prefill continuation.  Returns (y, new_state).
+    """
+    h0, hist = state if state is not None else (None, None)
+    gate = jax.nn.gelu(linear(p["in_g"], x, policy))
+    u = linear(p["in_x"], x, policy)
+    u_conv = _causal_conv(p["conv_w"], p["conv_b"], u, hist)
+    h, h_last = _rglru(p, u_conv, h0, policy)
+    y = linear(p["out"], h * gate, policy)
+    width = p["conv_w"].shape[0]
+    new_hist = u[:, -(width - 1):] if u.shape[1] >= width - 1 else u
+    return y, (h_last, new_hist)
+
+
+def rglru_block_decode(p, cfg: LMConfig, x: jax.Array, state,
+                       policy: Policy = None):
+    """Single-token step.  x: [B,1,D]; state = (h [B,C], conv_hist)."""
+    h_prev, hist = state
+    gate = jax.nn.gelu(linear(p["in_g"], x, policy))
+    u = linear(p["in_x"], x, policy)                       # [B,1,C]
+    u_conv = _causal_conv(p["conv_w"], p["conv_b"], u, hist)
+    r = jax.nn.sigmoid(linear(p["wr"], u_conv, policy).astype(jnp.float32))
+    i = jax.nn.sigmoid(linear(p["wi"], u_conv, policy).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)[:, 0]
+    drive = (jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2 * log_a), 1e-12)) *
+             (i * u_conv.astype(jnp.float32)))[:, 0]
+    h = a * h_prev.astype(jnp.float32) + drive             # [B,C]
+    y = linear(p["out"], h[:, None].astype(x.dtype) * gate, policy)
+    new_hist = jnp.concatenate([hist[:, 1:], u], axis=1)
+    return y, (h, new_hist)

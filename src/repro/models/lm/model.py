@@ -1,0 +1,461 @@
+"""Unified LM: one config-driven model covering every assigned family.
+
+Layer stacks are built with ``jax.vmap`` at init (leaves stacked [L, ...])
+and executed with ``jax.lax.scan`` + per-layer ``jax.checkpoint`` — compact
+HLO (one traced layer body) and activation remat, which is what makes the
+full-size 40-cell dry-run compile quickly.
+
+Families:
+  dense / vlm      scan over {attn, swiglu} blocks (M-RoPE when configured)
+  moe              scan over {attn, moe} blocks (+ aux loss accumulated)
+  ssm (rwkv6)      scan over {time_mix, channel_mix} blocks
+  hybrid (griffin) scan over (rec, rec, attn) super-blocks + remainder
+  audio (enc-dec)  encoder scan + decoder scan with cross-attention
+
+API:
+  init_params(cfg, key)                  -> params pytree
+  forward(params, cfg, batch, policy)    -> logits (train / prefill)
+  init_cache(cfg, batch, max_len)        -> decode cache
+  decode_step(params, cfg, cache, tok, pos, policy) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.core.bfp_dot import bfp_dot
+from repro.core.policy import BFPPolicy
+from repro.dist.sharding import shard
+from repro.models.lm import common as C
+from repro.models.lm import griffin as G
+from repro.models.lm import moe as M
+from repro.models.lm import rwkv6 as R
+
+Policy = Optional[BFPPolicy]
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / apply for each block kind
+# ---------------------------------------------------------------------------
+
+def _attn_block_init(key, cfg: LMConfig, cross: bool = False):
+    ks = jax.random.split(key, 5)
+    p = {"ln1": C.rmsnorm_init(cfg.d_model),
+         "attn": C.attention_init(ks[0], cfg),
+         "ln2": C.rmsnorm_init(cfg.d_model),
+         "ffn": C.swiglu_init(ks[1], cfg.d_model, cfg.d_ff)}
+    if cross:
+        p["lnx"] = C.rmsnorm_init(cfg.d_model)
+        p["xattn"] = C.attention_init(ks[2], cfg)
+    return p
+
+
+def _attn_block(p, cfg, x, positions, policy, enc=None):
+    h = C.attention(p["attn"], cfg, C.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                    positions, policy)
+    x = x + h
+    if enc is not None:
+        h = C.attention(p["xattn"], cfg, C.rmsnorm(p["lnx"], x, cfg.norm_eps),
+                        positions, policy, xkv=enc)
+        x = x + h
+    x = x + C.swiglu(p["ffn"], C.rmsnorm(p["ln2"], x, cfg.norm_eps), policy)
+    return shard(x, "batch", "seq_res", "embed")
+
+
+def _moe_block_init(key, cfg: LMConfig):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": C.rmsnorm_init(cfg.d_model),
+            "attn": C.attention_init(k1, cfg),
+            "ln2": C.rmsnorm_init(cfg.d_model),
+            "moe": M.moe_init(k2, cfg)}
+
+
+def _moe_block(p, cfg, x, positions, policy):
+    x = x + C.attention(p["attn"], cfg, C.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                        positions, policy)
+    y, aux = M.moe_apply(p["moe"], cfg, C.rmsnorm(p["ln2"], x, cfg.norm_eps),
+                         policy)
+    return shard(x + y, "batch", "seq_res", "embed"), aux
+
+
+def _rwkv_block_init(key, cfg: LMConfig):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": C.rmsnorm_init(cfg.d_model),
+            "tm": R.time_mix_init(k1, cfg),
+            "ln2": C.rmsnorm_init(cfg.d_model),
+            "cm": R.channel_mix_init(k2, cfg)}
+
+
+def _rwkv_block(p, cfg, x, policy):
+    b = x.shape[0]
+    zero = jnp.zeros((b, x.shape[-1]), x.dtype)
+    x = x + R.time_mix(p["tm"], cfg, C.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                       zero, policy)
+    x = x + R.channel_mix(p["cm"], cfg, C.rmsnorm(p["ln2"], x, cfg.norm_eps),
+                          zero, policy)
+    return shard(x, "batch", "seq_res", "embed")
+
+
+def _rec_block_init(key, cfg: LMConfig):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": C.rmsnorm_init(cfg.d_model),
+            "rec": G.rglru_block_init(k1, cfg),
+            "ln2": C.rmsnorm_init(cfg.d_model),
+            "ffn": C.swiglu_init(k2, cfg.d_model, cfg.d_ff)}
+
+
+def _rec_block(p, cfg, x, policy, state=None):
+    y, new_state = G.rglru_block(p["rec"], cfg,
+                                 C.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                                 state, policy)
+    x = x + y
+    x = x + C.swiglu(p["ffn"], C.rmsnorm(p["ln2"], x, cfg.norm_eps), policy)
+    return shard(x, "batch", "seq_res", "embed"), new_state
+
+
+# ---------------------------------------------------------------------------
+# Hybrid pattern helpers (recurrentgemma)
+# ---------------------------------------------------------------------------
+
+def _hybrid_layout(cfg: LMConfig):
+    """(n_periods, remainder_kinds): 38 = 12 x (rec,rec,attn) + (rec,rec)."""
+    pat = cfg.block_pattern
+    n_periods = cfg.n_layers // len(pat)
+    rem = cfg.n_layers - n_periods * len(pat)
+    return n_periods, pat[:rem]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _stacked(init_fn, key, n: int):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def init_params(cfg: LMConfig, key) -> Dict[str, Any]:
+    ke, kl, ko = jax.random.split(key, 3)
+    params: Dict[str, Any] = {"embed": C.embed_init(ke, cfg.vocab_size,
+                                                    cfg.d_model)}
+    if cfg.is_encdec:
+        k1, k2 = jax.random.split(kl)
+        params["enc"] = _stacked(lambda k: _attn_block_init(k, cfg), k1,
+                                 cfg.encoder_layers)
+        params["dec"] = _stacked(lambda k: _attn_block_init(k, cfg, True),
+                                 k2, cfg.n_layers)
+        params["enc_ln"] = C.rmsnorm_init(cfg.d_model)
+    elif cfg.family == "ssm":
+        params["layers"] = _stacked(lambda k: _rwkv_block_init(k, cfg), kl,
+                                    cfg.n_layers)
+    elif cfg.block_pattern:
+        n_periods, rem = _hybrid_layout(cfg)
+
+        def period_init(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {"rec1": _rec_block_init(k1, cfg),
+                    "rec2": _rec_block_init(k2, cfg),
+                    "attn": _attn_block_init(k3, cfg)}
+
+        params["periods"] = _stacked(period_init, kl, n_periods)
+        kr = jax.random.split(ko, max(1, len(rem)))
+        params["rem"] = [_rec_block_init(kr[i], cfg)
+                         for i, kind in enumerate(rem)]
+    elif cfg.is_moe:
+        params["layers"] = _stacked(lambda k: _moe_block_init(k, cfg), kl,
+                                    cfg.n_layers)
+    else:
+        params["layers"] = _stacked(lambda k: _attn_block_init(k, cfg), kl,
+                                    cfg.n_layers)
+    params["ln_f"] = C.rmsnorm_init(cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = C.linear_init(ko, cfg.d_model, cfg.vocab_size)
+    return params
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+def _loop(body, carry, stacked, unroll: bool):
+    """scan-over-layers, or an unrolled python loop in analysis mode
+    (XLA cost_analysis visits while bodies once; unrolling makes the
+    dry-run FLOP/byte counts exact).  body: (carry, lp) -> (carry, None)."""
+    if not unroll:
+        return jax.lax.scan(jax.checkpoint(body), carry, stacked)[0]
+    n = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    for i in range(n):
+        lp = jax.tree_util.tree_map(lambda t: t[i], stacked)
+        carry, _ = jax.checkpoint(body)(carry, lp)
+    return carry
+
+
+def _loop_ys(body, carry, xs, unroll: bool):
+    """Like _loop but collects per-layer outputs (decode cache updates)."""
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xi = jax.tree_util.tree_map(lambda t: t[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    stacked = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+    return carry, stacked
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed(params, cfg: LMConfig, tokens: jax.Array) -> jax.Array:
+    x = params["embed"]["e"][tokens]
+    x = (x * jnp.sqrt(float(cfg.d_model))).astype(cfg.compute_dtype)
+    return shard(x, "batch", "seq_res", "embed")
+
+
+def _unembed(params, cfg: LMConfig, x: jax.Array, policy: Policy):
+    x = C.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = bfp_dot(x, params["embed"]["e"].T.astype(x.dtype), policy)
+    else:
+        logits = C.linear(params["lm_head"], x, policy)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def forward(params, cfg: LMConfig, tokens: jax.Array,
+            positions: Optional[jax.Array] = None,
+            enc_feats: Optional[jax.Array] = None,
+            policy: Policy = None) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward.  Returns (logits [B,S,V], aux_loss scalar).
+
+    enc_feats: [B, S_enc, D] precomputed frame/patch embeddings (audio/vlm
+    stub frontends).  For vlm they are prepended positions in the sequence
+    are assumed already accounted for in ``positions``.
+    """
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                     (b, s))
+    x = _embed(params, cfg, tokens)
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.is_encdec:
+        enc = enc_feats if enc_feats is not None else jnp.zeros(
+            (b, cfg.enc_seq_stub, cfg.d_model), x.dtype)
+        enc_pos = jnp.broadcast_to(
+            jnp.arange(enc.shape[1], dtype=jnp.int32)[None], enc.shape[:2])
+
+        def enc_layer(h, lp):
+            h = C.attention(lp["attn"], cfg,
+                            C.rmsnorm(lp["ln1"], h, cfg.norm_eps),
+                            enc_pos, policy, causal=False) + h
+            h = h + C.swiglu(lp["ffn"], C.rmsnorm(lp["ln2"], h, cfg.norm_eps),
+                             policy)
+            return shard(h, "batch", "seq_res", "embed"), None
+
+        enc = _loop(enc_layer, enc, params["enc"], cfg.analysis_unroll)
+        enc = C.rmsnorm(params["enc_ln"], enc, cfg.norm_eps)
+
+        def dec_layer(h, lp):
+            return _attn_block(lp, cfg, h, positions, policy, enc=enc), None
+
+        x = _loop(dec_layer, x, params["dec"], cfg.analysis_unroll)
+        return _unembed(params, cfg, x, policy), aux
+
+    if cfg.family == "ssm":
+        def layer(h, lp):
+            return _rwkv_block(lp, cfg, h, policy), None
+        x = _loop(layer, x, params["layers"], cfg.analysis_unroll)
+        return _unembed(params, cfg, x, policy), aux
+
+    if cfg.block_pattern:
+        def period(h, lp):
+            h, _ = _rec_block(lp["rec1"], cfg, h, policy)
+            h, _ = _rec_block(lp["rec2"], cfg, h, policy)
+            h = _attn_block(lp["attn"], cfg, h, positions, policy)
+            return h, None
+        x = _loop(period, x, params["periods"], cfg.analysis_unroll)
+        for rp in params["rem"]:
+            x, _ = _rec_block(rp, cfg, x, policy)
+        return _unembed(params, cfg, x, policy), aux
+
+    if cfg.is_moe:
+        def layer(carry, lp):
+            h, a = carry
+            h, aux_l = _moe_block(lp, cfg, h, positions, policy)
+            return (h, a + aux_l), None
+        x, aux = _loop(layer, (x, aux), params["layers"],
+                       cfg.analysis_unroll)
+        aux = aux / cfg.n_layers
+        return _unembed(params, cfg, x, policy), aux
+
+    def layer(h, lp):
+        return _attn_block(lp, cfg, h, positions, policy), None
+    x = _loop(layer, x, params["layers"], cfg.analysis_unroll)
+    return _unembed(params, cfg, x, policy), aux
+
+
+# ---------------------------------------------------------------------------
+# decode (KV cache / recurrent state)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Decode cache.  Attention KV buffers are ring buffers of size
+    min(max_len, sliding_window) (vLLM-style for SWA); recurrent families
+    carry constant-size states."""
+    t = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    hk, dh, d = cfg.n_kv_heads, cfg.dh, cfg.d_model
+    kv = lambda n: {"k": jnp.zeros((n, batch, t, hk, dh), dtype),
+                    "v": jnp.zeros((n, batch, t, hk, dh), dtype)}
+    if cfg.is_encdec:
+        return {"self": kv(cfg.n_layers), "enc_out": None}  # enc set at prefill
+    if cfg.family == "ssm":
+        h = cfg.n_heads
+        return {"x_att": jnp.zeros((cfg.n_layers, batch, d), jnp.float32),
+                "x_ffn": jnp.zeros((cfg.n_layers, batch, d), jnp.float32),
+                "S": jnp.zeros((cfg.n_layers, batch, h, dh, dh), jnp.float32)}
+    if cfg.block_pattern:
+        n_periods, rem = _hybrid_layout(cfg)
+        lw = cfg.lru_width or d
+        w = cfg.conv_width
+        rec = lambda n: {"h": jnp.zeros((n, batch, lw), jnp.float32),
+                         "hist": jnp.zeros((n, batch, w - 1, lw), dtype)}
+        return {"rec1": rec(n_periods), "rec2": rec(n_periods),
+                "attn": kv(n_periods),
+                "rem": rec(len(rem))}
+    return kv(cfg.n_layers)
+
+
+def decode_step(params, cfg: LMConfig, cache, tokens: jax.Array,
+                pos: jax.Array, policy: Policy = None,
+                ) -> Tuple[jax.Array, Any]:
+    """One decode step.  tokens: [B, 1]; pos: scalar int32 (current index).
+
+    Returns (logits [B, 1, V], updated cache).
+    """
+    x = _embed(params, cfg, tokens)
+    b = tokens.shape[0]
+
+    if cfg.is_encdec:
+        enc = cache["enc_out"]
+
+        def layer(h, xs):
+            lp, kc, vc = xs
+            y, k2, v2 = C.attention_decode(
+                lp["attn"], cfg, C.rmsnorm(lp["ln1"], h, cfg.norm_eps), pos,
+                kc, vc, policy)
+            h = h + y
+            h = h + C.attention(lp["xattn"], cfg,
+                                C.rmsnorm(lp["lnx"], h, cfg.norm_eps),
+                                jnp.full((b, 1), pos, jnp.int32), policy,
+                                xkv=enc)
+            h = h + C.swiglu(lp["ffn"], C.rmsnorm(lp["ln2"], h, cfg.norm_eps),
+                             policy)
+            return h, (k2, v2)
+
+        x, (ks, vs) = _loop_ys(
+            layer, x, (params["dec"], cache["self"]["k"],
+                       cache["self"]["v"]), cfg.analysis_unroll)
+        cache = dict(cache, **{"self": {"k": ks, "v": vs}})
+        return _unembed(params, cfg, x, policy), cache
+
+    if cfg.family == "ssm":
+        def layer(h, xs):
+            lp, xa, xf, S = xs
+            y, (xa2, S2) = R.time_mix_decode(
+                lp["tm"], cfg, C.rmsnorm(lp["ln1"], h, cfg.norm_eps), (xa, S))
+            h = h + y
+            y, xf2 = R.channel_mix_decode(
+                lp["cm"], cfg, C.rmsnorm(lp["ln2"], h, cfg.norm_eps), xf)
+            return h + y, (xa2, xf2, S2)
+
+        x, (xa, xf, S) = _loop_ys(
+            layer, x, (params["layers"], cache["x_att"], cache["x_ffn"],
+                       cache["S"]), cfg.analysis_unroll)
+        return _unembed(params, cfg, x, policy), \
+            {"x_att": xa, "x_ffn": xf, "S": S}
+
+    if cfg.block_pattern:
+        def rec_step(lp, h, st):
+            y, st2 = G.rglru_block_decode(
+                lp["rec"], cfg, C.rmsnorm(lp["ln1"], h, cfg.norm_eps),
+                st, policy)
+            h = h + y
+            h = h + C.swiglu(lp["ffn"], C.rmsnorm(lp["ln2"], h, cfg.norm_eps),
+                             policy)
+            return h, st2
+
+        def period(h, xs):
+            lp, r1h, r1x, r2h, r2x, kc, vc = xs
+            h, (r1h2, r1x2) = rec_step(lp["rec1"], h, (r1h, r1x))
+            h, (r2h2, r2x2) = rec_step(lp["rec2"], h, (r2h, r2x))
+            y, k2, v2 = C.attention_decode(
+                lp["attn"]["attn"], cfg,
+                C.rmsnorm(lp["attn"]["ln1"], h, cfg.norm_eps), pos, kc, vc,
+                policy)
+            h = h + y
+            h = h + C.swiglu(lp["attn"]["ffn"],
+                             C.rmsnorm(lp["attn"]["ln2"], h, cfg.norm_eps),
+                             policy)
+            return h, (r1h2, r1x2, r2h2, r2x2, k2, v2)
+
+        x, (r1h, r1x, r2h, r2x, ks, vs) = _loop_ys(
+            period, x,
+            (params["periods"], cache["rec1"]["h"], cache["rec1"]["hist"],
+             cache["rec2"]["h"], cache["rec2"]["hist"],
+             cache["attn"]["k"], cache["attn"]["v"]), cfg.analysis_unroll)
+        rem_h, rem_hist = [], []
+        for i, rp in enumerate(params["rem"]):
+            x, (h2, hist2) = rec_step(
+                rp, x, (cache["rem"]["h"][i], cache["rem"]["hist"][i]))
+            rem_h.append(h2)
+            rem_hist.append(hist2)
+        new_cache = {"rec1": {"h": r1h, "hist": r1x},
+                     "rec2": {"h": r2h, "hist": r2x},
+                     "attn": {"k": ks, "v": vs},
+                     "rem": {"h": jnp.stack(rem_h) if rem_h else cache["rem"]["h"],
+                             "hist": jnp.stack(rem_hist) if rem_hist else cache["rem"]["hist"]}}
+        return _unembed(params, cfg, x, policy), new_cache
+
+    # dense / vlm / moe
+    def layer(h, xs):
+        lp, kc, vc = xs
+        y, k2, v2 = C.attention_decode(
+            lp["attn"], cfg, C.rmsnorm(lp["ln1"], h, cfg.norm_eps), pos,
+            kc, vc, policy)
+        h = h + y
+        if cfg.is_moe:
+            y, _ = M.moe_apply(lp["moe"], cfg,
+                               C.rmsnorm(lp["ln2"], h, cfg.norm_eps), policy)
+        else:
+            y = C.swiglu(lp["ffn"], C.rmsnorm(lp["ln2"], h, cfg.norm_eps),
+                         policy)
+        return h + y, (k2, v2)
+
+    x, (ks, vs) = _loop_ys(layer, x,
+                           (params["layers"], cache["k"], cache["v"]),
+                           cfg.analysis_unroll)
+    return _unembed(params, cfg, x, policy), {"k": ks, "v": vs}
+
+
+def prefill_encoder(params, cfg: LMConfig, enc_feats: jax.Array,
+                    policy: Policy = None) -> jax.Array:
+    """Run the encoder once (enc-dec serving); result goes into the cache."""
+    enc_pos = jnp.broadcast_to(
+        jnp.arange(enc_feats.shape[1], dtype=jnp.int32)[None],
+        enc_feats.shape[:2])
+
+    def enc_layer(h, lp):
+        h = C.attention(lp["attn"], cfg, C.rmsnorm(lp["ln1"], h, cfg.norm_eps),
+                        enc_pos, policy, causal=False) + h
+        h = h + C.swiglu(lp["ffn"], C.rmsnorm(lp["ln2"], h, cfg.norm_eps),
+                         policy)
+        return h, None
+
+    enc, _ = jax.lax.scan(enc_layer, enc_feats, params["enc"])
+    return C.rmsnorm(params["enc_ln"], enc, cfg.norm_eps)

@@ -1,0 +1,106 @@
+"""Mixture-of-Experts layer (mixtral 8e top-2, olmoe 64e top-8).
+
+Sort-based capacity dispatch (production pjit MoE):
+
+  1. router top-k per token,
+  2. sort (token, k) slots by expert id, position-in-expert by running
+     offset, drop beyond capacity C = ceil(T*K/E * capacity_factor),
+  3. gather into [E, C, D], batched expert GEMMs (einsum 'ecd,edf->ecf' —
+     shardable over E = expert parallelism, or over f = TP inside experts),
+  4. weighted combine back to [T, D].
+
+Expert GEMMs route through bfp_dot semantics: the per-expert weights are
+BFP-formatted per (column, K-tile) exactly like dense layers (each expert
+is its own weight matrix -> its own row exponents, DESIGN.md §4).
+Returns the load-balancing auxiliary loss alongside the output.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.core.bfp_dot import bfp_dot
+from repro.core.policy import BFPPolicy
+from repro.dist.sharding import shard
+from repro.models.lm.common import linear_init
+
+Policy = Optional[BFPPolicy]
+
+
+def moe_init(key, cfg: LMConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    scale = jnp.sqrt(1.0 / d)
+    return {
+        "router": linear_init(ks[0], d, e),
+        "w1": jax.random.normal(ks[1], (e, d, f), jnp.float32) * scale,
+        "w3": jax.random.normal(ks[2], (e, d, f), jnp.float32) * scale,
+        "w2": jax.random.normal(ks[3], (e, f, d), jnp.float32) * jnp.sqrt(1.0 / f),
+    }
+
+
+def _expert_gemm(xe: jax.Array, we: jax.Array, policy: Policy) -> jax.Array:
+    """[E, C, d_in] x [E, d_in, d_out] -> [E, C, d_out], BFP per expert."""
+    if policy is None:
+        return jnp.einsum("ecd,edf->ecf", xe, we.astype(xe.dtype))
+    # vmap the BFP GEMM over experts: each expert's matrix gets its own
+    # block exponents (same contract as a dense layer).
+    from repro.core.bfp_dot import bfp_matmul_2d
+    return jax.vmap(lambda a, w: bfp_matmul_2d(a, w, policy))(xe, we)
+
+
+def moe_apply(p, cfg: LMConfig, x: jax.Array, policy: Policy = None
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, D] -> (out [B, S, D], aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = bfp_dot(xt, p["router"]["w"], None)        # router in float
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)   # [T, E]
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)               # [T, K]
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # load-balance aux loss (Switch): E * sum_e fraction_e * prob_e
+    density = jnp.mean(jax.nn.one_hot(expert_ids[:, 0], e), axis=0)
+    prob_mean = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(density * prob_mean)
+
+    cap = int(t * k / e * cfg.capacity_factor + 1)
+
+    # ---- sort-based dispatch ------------------------------------------------
+    flat_expert = expert_ids.reshape(-1)                 # [T*K]
+    flat_token = jnp.repeat(jnp.arange(t), k)            # [T*K]
+    flat_gate = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_expert)                     # stable
+    sorted_e = flat_expert[order]
+    sorted_tok = flat_token[order]
+    sorted_gate = flat_gate[order]
+    # position within expert segment
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+    pos_in_e = jnp.arange(t * k) - seg_start[sorted_e]
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, sorted_e * cap + pos_in_e, e * cap)  # drop bucket
+
+    # gather tokens into expert buffers [E*C+1, D] (last row = drop bucket)
+    buf = jnp.zeros((e * cap + 1, d), xt.dtype).at[slot].set(xt[sorted_tok])
+    xe = buf[:-1].reshape(e, cap, d)
+    xe = shard(xe, "experts", None, None)
+
+    # ---- expert FFN (SwiGLU) -------------------------------------------------
+    h = jax.nn.silu(_expert_gemm(xe, p["w1"], policy)) * \
+        _expert_gemm(xe, p["w3"], policy)
+    h = shard(h, "experts", None, "ffn")
+    ye = _expert_gemm(h, p["w2"], policy)                # [E, C, D]
+
+    # ---- combine ---------------------------------------------------------------
+    yflat = ye.reshape(e * cap, d)
+    contrib = jnp.where(keep[:, None], yflat[jnp.minimum(slot, e * cap - 1)],
+                        0.0) * sorted_gate[:, None]
+    out = jnp.zeros((t, d), x.dtype).at[sorted_tok].add(
+        contrib.astype(x.dtype))
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,190 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free time mixing with
+data-dependent per-channel decay.
+
+Recurrence per head (Dk = Dv = head_dim):
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+Train/prefill uses the CHUNKED formulation (production linear-attention
+style): lax.scan over chunks of 128 carrying S, quadratic within chunk —
+O(S * C) memory, compact HLO.  Decode is the single-step recurrence.
+
+The WKV recurrence itself is elementwise/outer-product (no GEMM), so BFP
+does not apply there (DESIGN.md §Arch-applicability); all projections
+(r,k,v,g,w-lora, output, channel-mix) go through bfp_dot.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.core.policy import BFPPolicy
+from repro.dist.sharding import shard
+from repro.models.lm.common import linear, linear_init, rmsnorm, rmsnorm_init
+
+Policy = Optional[BFPPolicy]
+
+_CHUNK = 32
+_LORA = 64  # decay lora rank (Finch uses 64 for ~3b)
+# Per-step log-decay clamp: keeps every exponential in the chunked
+# formulation inside fp32 range (chunk 32 x 2.0 = 64 < log(3.4e38) ~ 88).
+# w >= e^-2 per step still decays state to ~1.6e-28 within one chunk, so
+# the semantic difference from unclamped RWKV-6 is negligible (the
+# official CUDA kernels clamp the decay exponent the same way).
+_LOGW_MIN = -2.0
+
+
+def time_mix_init(key, cfg: LMConfig):
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.dh
+    ks = jax.random.split(key, 9)
+    p = {
+        "mu": jax.random.uniform(ks[0], (5, d), jnp.float32),  # shift mix r,k,v,w,g
+        "wr": linear_init(ks[1], d, d),
+        "wk": linear_init(ks[2], d, d),
+        "wv": linear_init(ks[3], d, d),
+        "wg": linear_init(ks[4], d, d),
+        "wo": linear_init(ks[5], d, d),
+        # data-dependent decay lora: w_t = exp(-exp(w0 + tanh(x@A)@B))
+        "w0": jnp.zeros((d,), jnp.float32) - 0.5,
+        "wA": linear_init(ks[6], d, _LORA),
+        "wB": linear_init(ks[7], _LORA, d),
+        "u": jax.random.normal(ks[8], (h, dh), jnp.float32) * 0.1,  # bonus
+        "ln": rmsnorm_init(d),   # per-head group norm approximated by rmsnorm
+    }
+    return p
+
+
+def _token_shift(x: jax.Array, x_prev: jax.Array) -> jax.Array:
+    """shifted sequence: [x_prev, x_0 .. x_{S-2}] (one-step delay line)."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def _projections(p, cfg: LMConfig, x, x_prev, policy: Policy):
+    b, s, d = x.shape
+    xs = _token_shift(x, x_prev.astype(x.dtype))
+    mu = p["mu"].astype(x.dtype)
+    mix = lambda i: x + mu[i] * (xs - x)
+    r = linear(p["wr"], mix(0), policy)
+    k = linear(p["wk"], mix(1), policy)
+    v = linear(p["wv"], mix(2), policy)
+    xw = mix(3)
+    g = linear(p["wg"], mix(4), policy)
+    # data-dependent decay (the Finch feature): low-rank modulation
+    logw = p["w0"] + linear(p["wB"], jnp.tanh(linear(p["wA"], xw, policy)),
+                            policy)
+    w = jnp.exp(-jnp.exp(logw.astype(jnp.float32)))   # in (0, 1)
+    h, dh = cfg.n_heads, cfg.dh
+    shp = (b, s, h, dh)
+    return (r.reshape(shp), k.reshape(shp), v.reshape(shp),
+            w.reshape(shp), jax.nn.silu(g))
+
+
+def _wkv_chunked(r, k, v, w, u) -> jax.Array:
+    """Chunked WKV.  r,k,v,w: [B,S,H,D]; u: [H,D] -> out [B,S,H,D].
+
+    Within a chunk (length C, fp32):
+      P_i   = prod_{j<=i} w_j           (inclusive cumulative decay)
+      r~_i  = r_i * P_{i-1},  k~_j = k_j / P_j
+      o_i   = r~_i @ S_0 + sum_{j<i} (r~_i . k~_j) v_j + ((r_i*u) . k_i) v_i
+      S_C   = diag(P_C) S_0 + sum_j diag(P_C/P_j) k_j^T v_j
+    """
+    b, s, h, d = r.shape
+    c = min(_CHUNK, s)
+    assert s % c == 0, f"seq {s} must be a multiple of chunk {c}"
+    n = s // c
+    f32 = jnp.float32
+    rc, kc, vc, wc = (t.astype(f32).reshape(b, n, c, h, d).transpose(1, 0, 3, 2, 4)
+                      for t in (r, k, v, w))   # [n,B,H,C,D]
+
+    logw = jnp.clip(jnp.log(jnp.maximum(wc, 1e-38)), _LOGW_MIN, 0.0)
+    logP = jnp.cumsum(logw, axis=3)            # inclusive [n,B,H,C,D]
+    P = jnp.exp(logP)
+    Pprev = jnp.exp(logP - logw)               # exclusive (P_{i-1})
+    r_t = rc * Pprev
+    k_t = kc * jnp.exp(-logP)                  # k_j / P_j
+    Pend = jnp.exp(logP[:, :, :, -1:, :])      # P_C  [n,B,H,1,D]
+
+    # intra-chunk attention: A[i,j] = (r~_i . k~_j) for j < i; diag uses u
+    mask = jnp.tril(jnp.ones((c, c), f32), k=-1)
+    A = jnp.einsum("nbhid,nbhjd->nbhij", r_t, k_t) * mask
+    diag = jnp.einsum("nbhid,nbhid->nbhi",
+                      rc * u.astype(f32)[None, None, :, None, :], kc)
+    intra = jnp.einsum("nbhij,nbhjd->nbhid", A, vc) + diag[..., None] * vc
+
+    # state contribution of each chunk: sum_j (P_C/P_j * k_j)^T v_j
+    kdec = kc * (Pend * jnp.exp(-logP))
+    chunk_state = jnp.einsum("nbhjd,nbhje->nbhde", kdec, vc)  # [n,B,H,D,Dv]
+
+    def step(S, inp):
+        r_ti, Pend_i, cs_i = inp
+        inter = jnp.einsum("bhid,bhde->bhie", r_ti, S)
+        S_new = S * Pend_i.transpose(0, 1, 3, 2) + cs_i  # decay along Dk
+        return S_new, inter
+
+    S0 = jnp.zeros((b, h, d, d), f32)
+    _, inter = jax.lax.scan(step, S0, (r_t, Pend, chunk_state))
+    out = (intra + inter).transpose(1, 0, 3, 2, 4).reshape(b, s, h, d)
+    return out.astype(r.dtype)
+
+
+def time_mix(p, cfg: LMConfig, x: jax.Array, x_prev: jax.Array,
+             policy: Policy = None) -> jax.Array:
+    """Full-sequence WKV (train/prefill).  x_prev: [B, D] delay-line state."""
+    r, k, v, w, g = _projections(p, cfg, x, x_prev, policy)
+    o = _wkv_chunked(r, k, v, w, p["u"])
+    b, s = x.shape[0], x.shape[1]
+    o = rmsnorm(p["ln"], o.reshape(b, s, -1), cfg.norm_eps)
+    return linear(p["wo"], o * g, policy)
+
+
+def time_mix_decode(p, cfg: LMConfig, x: jax.Array, state
+                    ) -> Tuple[jax.Array, Tuple]:
+    """One-token step.  x: [B, 1, D]; state = (x_prev [B,D], S [B,H,D,D])."""
+    x_prev, S = state
+    r, k, v, w, g = _projections(p, cfg, x, x_prev, None)
+    f32 = jnp.float32
+    r1, k1, v1, w1 = (t[:, 0].astype(f32) for t in (r, k, v, w))  # [B,H,D]
+    u = p["u"].astype(f32)
+    kv = jnp.einsum("bhd,bhe->bhde", k1, v1)
+    o = jnp.einsum("bhd,bhde->bhe", r1, S + u[None, :, :, None] * kv)
+    w1 = jnp.maximum(w1, jnp.exp(_LOGW_MIN))   # same clamp as the train path
+    S = S * w1[..., None] + kv
+    b = x.shape[0]
+    o = rmsnorm(p["ln"], o.reshape(b, 1, -1).astype(x.dtype), cfg.norm_eps)
+    out = linear(p["wo"], o * g, None)
+    return out, (x[:, -1], S)
+
+
+# ---------------------------------------------------------------------------
+# Channel mix (RWKV FFN)
+# ---------------------------------------------------------------------------
+
+def channel_mix_init(key, cfg: LMConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {"mu": jax.random.uniform(ks[0], (2, d), jnp.float32),
+            "wk": linear_init(ks[1], d, f),
+            "wv": linear_init(ks[2], f, d),
+            "wr": linear_init(jax.random.fold_in(key, 7), d, d)}
+
+
+def channel_mix(p, cfg: LMConfig, x: jax.Array, x_prev: jax.Array,
+                policy: Policy = None) -> jax.Array:
+    xs = _token_shift(x, x_prev.astype(x.dtype))
+    mu = p["mu"].astype(x.dtype)
+    xk = x + mu[0] * (xs - x)
+    xr = x + mu[1] * (xs - x)
+    k = jnp.square(jax.nn.relu(linear(p["wk"], xk, policy)))
+    k = shard(k, "batch", "seq", "ffn")
+    return jax.nn.sigmoid(linear(p["wr"], xr, policy)) * \
+        linear(p["wv"], k, policy)
+
+
+def channel_mix_decode(p, cfg: LMConfig, x: jax.Array, x_prev: jax.Array
+                       ) -> Tuple[jax.Array, jax.Array]:
+    out = channel_mix(p, cfg, x, x_prev, None)
+    return out, x[:, -1]

@@ -1,0 +1,129 @@
+"""Optimizers (pure JAX, optax-style init/update pairs) + LR schedules.
+
+Includes the WSD (warmup-stable-decay) schedule that minicpm-2b trains
+with (arXiv:2404.06395), cosine, and linear warmup.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adamw_init", "adamw_update", "sgd_init", "sgd_update",
+           "clip_by_global_norm", "global_norm",
+           "cosine_schedule", "wsd_schedule", "constant_schedule",
+           "OptState"]
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: any
+    nu: any
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)
+              if hasattr(x, "dtype")
+              and jnp.issubdtype(x.dtype, jnp.floating)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def _is_float(x) -> bool:
+    return hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: g * scale if _is_float(g) else g, grads), norm
+
+
+def adamw_init(params) -> OptState:
+    zeros = lambda p: jax.tree_util.tree_map(
+        lambda x: jnp.zeros_like(x, dtype=jnp.float32)
+        if _is_float(x) else x, p)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros(params),
+                    nu=zeros(params))
+
+
+def adamw_update(grads, state: OptState, params, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1) -> Tuple[any, OptState]:
+    # Non-float leaves (int metadata; float0 grads from allow_int=True)
+    # pass through untouched.
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    mu = jax.tree_util.tree_map(
+        lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32)
+        if _is_float(g) else m, state.mu, grads)
+    nu = jax.tree_util.tree_map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32))
+        if _is_float(g) else v, state.nu, grads)
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+
+    def upd(p, m, v):
+        if not _is_float(p):
+            return p
+        mhat = m / bc1
+        vhat = v / bc2
+        return (p.astype(jnp.float32)
+                - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay
+                        * p.astype(jnp.float32))).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+    return new_params, OptState(step=step, mu=mu, nu=nu)
+
+
+def sgd_init(params) -> OptState:
+    mom = jax.tree_util.tree_map(
+        lambda x: jnp.zeros_like(x, dtype=jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=mom, nu=None)
+
+
+def sgd_update(grads, state: OptState, params, lr, momentum: float = 0.9
+               ) -> Tuple[any, OptState]:
+    mu = jax.tree_util.tree_map(
+        lambda m, g: momentum * m + g.astype(jnp.float32), state.mu, grads)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+        params, mu)
+    return new_params, OptState(step=state.step + 1, mu=mu, nu=None)
+
+
+# ---------------------------------------------------------------------------
+# Schedules: step -> lr
+# ---------------------------------------------------------------------------
+
+def constant_schedule(lr: float) -> Callable:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(peak: float, warmup: int, total: int,
+                    floor_frac: float = 0.1) -> Callable:
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor_frac + (1 - floor_frac)
+                      * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return f
+
+
+def wsd_schedule(peak: float, warmup: int, stable: int, decay: int,
+                 floor_frac: float = 0.01) -> Callable:
+    """Warmup-Stable-Decay (minicpm): linear warmup, flat plateau, then a
+    short exponential-ish (here linear-log) decay to floor."""
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = peak * jnp.exp(jnp.log(floor_frac) * prog)
+        return jnp.where(step < warmup, warm,
+                         jnp.where(step < warmup + stable, peak, dec))
+    return f

@@ -1,0 +1,125 @@
+"""Roofline-term extraction from compiled dry-run artifacts (TPU v5e).
+
+    compute term    = HLO_FLOPs  / (chips * 197e12 FLOP/s)
+    memory term     = HLO_bytes  / (chips * 819e9 B/s)
+    collective term = coll_bytes / (chips * 2 * 50e9 B/s-ish per link class)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``.  Collective bytes
+are NOT in cost_analysis: we parse the post-SPMD optimized HLO text and sum
+the operand bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, weighted by the algorithmic traffic factor
+of each collective (ring: all-gather and reduce-scatter move (n-1)/n of the
+full payload per chip; all-reduce moves 2x that; all-to-all (n-1)/n).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HW", "collective_bytes", "roofline_terms", "RooflineReport"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    """TPU v5e per-chip constants (system-prompt hardware spec)."""
+    peak_flops: float = 197e12       # bf16 FLOP/s
+    hbm_bw: float = 819e9            # B/s
+    ici_bw: float = 50e9             # B/s per link
+    chips: int = 256
+
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+# matches e.g. "bf16[16,4096,5120]" (possibly with layout "{2,1,0}")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective kind from optimized HLO.
+
+    Uses the RESULT shape on the lhs of each collective instruction (for
+    tuples, all elements).  Done / -done ops are skipped (the -start op
+    carries the shape).
+    """
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        # result shape sits between '=' and the op name:  %x = bf16[..] op(
+        out[kind] = out.get(kind, 0) + _shape_bytes(m.group(1))
+    return out
+
+
+def _wire_bytes(coll: Dict[str, int], n_chips: int) -> float:
+    """Per-chip wire traffic with ring-algorithm factors."""
+    f = (n_chips - 1) / max(n_chips, 1)
+    total = 0.0
+    total += coll.get("all-gather", 0) * f
+    total += coll.get("reduce-scatter", 0) * f
+    total += coll.get("all-reduce", 0) * 2 * f
+    total += coll.get("all-to-all", 0) * f
+    total += coll.get("collective-permute", 0)
+    return total
+
+
+def roofline_terms(cost: Dict[str, float], coll: Dict[str, int],
+                   hw: HW = HW(), n_links: int = 4) -> Dict[str, float]:
+    """The three per-step roofline terms, in seconds.
+
+    cost: compiled.cost_analysis() dict (flops/bytes are PER CHIP under
+    SPMD — XLA reports the per-device program).  n_links: ICI links per
+    chip participating (v5e 2D torus: 4).
+    """
+    flops = float(cost.get("flops", 0.0))
+    bytes_hbm = float(cost.get("bytes accessed", 0.0))
+    t_compute = flops / hw.peak_flops
+    t_memory = bytes_hbm / hw.hbm_bw
+    t_coll = _wire_bytes(coll, hw.chips) / (hw.ici_bw * n_links)
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    return {"t_compute": t_compute, "t_memory": t_memory,
+            "t_collective": t_coll, "dominant": dominant,
+            "hlo_flops": flops, "hlo_bytes": bytes_hbm,
+            "collective_wire_bytes": _wire_bytes(coll, hw.chips)}
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    terms: Dict[str, float]
+    collectives: Dict[str, int]
+    memory_per_device: Optional[float]
+    model_flops: float               # 6*N*D (dense) or 6*N_active*D
+    useful_ratio: float              # model_flops / (chips * hlo_flops)
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)

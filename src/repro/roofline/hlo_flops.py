@@ -1,0 +1,73 @@
+"""Per-instruction FLOP attribution from optimized HLO text.
+
+The aggregate ``cost_analysis()`` says WHAT the program costs; this module
+says WHERE — it parses every ``dot`` instruction (shapes are printed
+inline post-optimization), computes 2*M*N*K FLOPs, and buckets by shape
+signature.  This is the "profile" of the dry-run methodology (§Perf):
+no wall-clock exists on CPU, so the lowered IR is the profile.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+__all__ = ["dot_flops", "top_dots", "summarize"]
+
+_DOT_RE = re.compile(
+    r"=\s*(\w+)\[([\d,]*)\][^=]*?\bdot\(\s*"
+    r"(\w+)\[([\d,]*)\][^,]*,\s*"
+    r"(\w+)\[([\d,]*)\]")
+_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]+)\}")
+
+
+def _dims(s: str) -> List[int]:
+    return [int(d) for d in s.split(",") if d]
+
+
+def dot_flops(hlo_text: str) -> List[Tuple[int, str, int]]:
+    """[(flops, 'lhs_shape x rhs_shape -> out_shape', count)] per signature.
+
+    flops = 2 * prod(out) * prod(contracting dims of lhs).
+    """
+    buckets: Dict[str, List[int]] = defaultdict(lambda: [0, 0])
+    for line in hlo_text.splitlines():
+        m = _DOT_RE.search(line)
+        if not m:
+            continue
+        out_dims = _dims(m.group(2))
+        lhs_dims = _dims(m.group(4))
+        rhs_dims = _dims(m.group(6))
+        c = _DIMS_RE.search(line)
+        if c:
+            k = 1
+            for ci in _dims(c.group(1)):
+                if ci < len(lhs_dims):
+                    k *= lhs_dims[ci]
+        else:
+            k = lhs_dims[-1] if lhs_dims else 1
+        out = 1
+        for d in out_dims:
+            out *= d
+        fl = 2 * out * k
+        sig = (f"{m.group(3)}[{m.group(4)}] x {m.group(5)}[{m.group(6)}] "
+               f"-> [{m.group(2)}]")
+        buckets[sig][0] += fl
+        buckets[sig][1] += 1
+    return sorted(((v[0], sig, v[1]) for sig, v in buckets.items()),
+                  reverse=True)
+
+
+def top_dots(hlo_text: str, n: int = 15) -> str:
+    rows = dot_flops(hlo_text)
+    total = sum(r[0] for r in rows)
+    lines = [f"total dot flops (per device): {total:.4g}"]
+    for fl, sig, cnt in rows[:n]:
+        lines.append(f"  {fl:12.4g} ({100*fl/max(total,1):5.1f}%) x{cnt:<4d} {sig}")
+    return "\n".join(lines)
+
+
+def summarize(hlo_text: str) -> Dict[str, float]:
+    rows = dot_flops(hlo_text)
+    return {"dot_flops": float(sum(r[0] for r in rows)),
+            "n_dot_signatures": len(rows)}

@@ -1,0 +1,91 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from dry-run JSONs.
+
+Usage:  PYTHONPATH=src python -m repro.roofline.report [--dir results/dryrun]
+Prints a markdown table per mesh: the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS, per-device memory, and a one-line
+"what would move the dominant term" note per row.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+_SUGGEST = {
+    ("memory", "train"): "bf16 master-grad + fused optimizer; BFP-8 "
+        "weight streaming halves HBM reads (paper's traffic argument)",
+    ("memory", "prefill"): "KV/activation in bf16 + BFP-8 weights; larger "
+        "flash chunks raise arithmetic intensity",
+    ("memory", "decode"): "decode is weight-streaming bound: BFP-8 "
+        "mantissa weights (+exp sidecar) cut HBM bytes ~4x vs f32",
+    ("compute", "train"): "int8 BFP MXU path doubles MACs/s vs bf16; "
+        "drop causal-masked flash waste (2x upper-triangle)",
+    ("compute", "prefill"): "int8 BFP MXU path; skip fully-masked "
+        "flash chunks (causal upper triangle)",
+    ("collective", "train"): "BFP-8 gradient compression on the "
+        "all-reduce (4x wire bytes); overlap via async collective start",
+    ("collective", "decode"): "replicate small KV shards to kill "
+        "all-gathers; batch-shard only",
+    ("collective", "prefill"): "reduce-scatter + all-gather decomposition "
+        "overlapped with per-layer compute",
+}
+
+
+def load(dir_: str, mesh: str, mode: str) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dir_, mesh,
+                                              f"*.{mode}.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b / 1e9:.2f}"
+
+
+def render(dir_: str = "results/dryrun"):
+    for mesh in ("single_pod_16x16", "multi_pod_2x16x16"):
+        comp = {(r["arch"], r["shape"]): r
+                for r in load(dir_, mesh, "compile")}
+        roof = {(r["arch"], r["shape"]): r
+                for r in load(dir_, mesh, "roofline")}
+        if not comp:
+            continue
+        print(f"\n### Mesh {mesh} ({next(iter(comp.values()))['n_devices']}"
+              f" devices)\n")
+        if roof:
+            print("| arch | shape | t_compute s | t_memory s | t_coll s |"
+                  " dominant | useful ratio | temp GB/dev | note |")
+            print("|---|---|---|---|---|---|---|---|---|")
+        else:
+            print("| arch | shape | compile_s | temp GB/dev |")
+            print("|---|---|---|---|")
+        for key in sorted(comp):
+            c = comp[key]
+            mem = c.get("memory_analysis") or {}
+            temp = fmt_bytes(mem.get("temp_bytes"))
+            r = roof.get(key)
+            if r:
+                t = r["roofline"]
+                kind = ("train" if key[1].startswith("train") else
+                        "decode" if "decode" in key[1] or "long" in key[1]
+                        else "prefill")
+                note = _SUGGEST.get((t["dominant"], kind), "")
+                print(f"| {key[0]} | {key[1]} | {t['t_compute']:.4f} |"
+                      f" {t['t_memory']:.4f} | {t['t_collective']:.4f} |"
+                      f" {t['dominant']} | {r['useful_flop_ratio']:.3f} |"
+                      f" {temp} | {note} |")
+            else:
+                print(f"| {key[0]} | {key[1]} | {c['compile_s']} | {temp} |")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    render(args.dir)

@@ -1,0 +1,166 @@
+"""Batched serving engine: prefill + decode with KV/recurrent caches.
+
+``generate`` drives the jitted decode_step over N tokens with greedy or
+temperature sampling.  ``ServeEngine`` adds continuous-batching-lite: a
+slot table where finished sequences are replaced by queued requests
+between decode steps (the Python driver swaps rows; the jitted step is
+shape-stable), plus optional BFP weight pre-quantization — the paper's
+deployment mode, where weights live in HBM as int8 mantissas + exponent
+sidecars and every GEMM runs the fixed-point datapath.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.core.policy import BFPPolicy
+from repro.models.lm import model as Mdl
+
+__all__ = ["prefill", "generate", "ServeEngine", "Request"]
+
+
+def prefill(params, cfg: LMConfig, tokens: jax.Array, cache,
+            policy: Optional[BFPPolicy] = None,
+            enc_feats: Optional[jax.Array] = None):
+    """Sequential prefill through decode_step (state-correct for every
+    family).  tokens: [B, S_prompt].  Returns (cache, last_logits)."""
+    if cfg.is_encdec and enc_feats is not None:
+        cache = dict(cache,
+                     enc_out=Mdl.prefill_encoder(params, cfg, enc_feats,
+                                                 policy))
+
+    def body(carry, t):
+        cache, _ = carry
+        logits, cache = Mdl.decode_step(params, cfg, cache,
+                                        tokens[:, t][:, None],
+                                        t.astype(jnp.int32), policy)
+        return (cache, logits), None
+
+    zero_logits = jnp.zeros((tokens.shape[0], 1, cfg.vocab_size),
+                            jnp.float32)
+    (cache, logits), _ = jax.lax.scan(body, (cache, zero_logits),
+                                      jnp.arange(tokens.shape[1]))
+    return cache, logits
+
+
+def generate(params, cfg: LMConfig, prompt: jax.Array, max_new: int,
+             policy: Optional[BFPPolicy] = None, temperature: float = 0.0,
+             key: Optional[jax.Array] = None,
+             enc_feats: Optional[jax.Array] = None,
+             max_len: Optional[int] = None) -> jax.Array:
+    """Greedy/temperature generation.  Returns [B, max_new] tokens."""
+    b, s = prompt.shape
+    max_len = max_len or (s + max_new)
+    cache = Mdl.init_cache(cfg, b, max_len)
+    cache, logits = prefill(params, cfg, prompt, cache, policy, enc_feats)
+    key = key if key is not None else jax.random.PRNGKey(0)
+
+    def sample(logits, k):
+        lg = logits[:, -1].astype(jnp.float32)
+        if temperature <= 0.0:
+            return jnp.argmax(lg, -1).astype(jnp.int32)
+        return jax.random.categorical(k, lg / temperature).astype(jnp.int32)
+
+    def body(carry, i):
+        cache, tok, k = carry
+        k, ks = jax.random.split(k)
+        logits, cache = Mdl.decode_step(params, cfg, cache, tok[:, None],
+                                        (s + i).astype(jnp.int32), policy)
+        nxt = sample(logits, ks)
+        return (cache, nxt, k), nxt
+
+    first = sample(logits, key)
+    (_, _, _), toks = jax.lax.scan(body, (cache, first, key),
+                                   jnp.arange(1, max_new))
+    return jnp.concatenate([first[:, None], toks.T], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching-lite
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Slot-table batched server (shape-stable jitted decode step).
+
+    Admission: empty slots take queued requests; their prompts prefill
+    into the slot's cache rows.  Each decode step advances every active
+    slot one token; finished slots free immediately (continuous batching).
+    """
+
+    def __init__(self, params, cfg: LMConfig, slots: int = 4,
+                 max_len: int = 512,
+                 policy: Optional[BFPPolicy] = None):
+        self.params, self.cfg, self.policy = params, cfg, policy
+        self.slots = slots
+        self.max_len = max_len
+        self.cache = Mdl.init_cache(cfg, slots, max_len)
+        self.slot_req: List[Optional[Request]] = [None] * slots
+        self.slot_pos = [0] * slots
+        self.queue: List[Request] = []
+        self._tok = jnp.zeros((slots, 1), jnp.int32)
+
+        def _step(cache, tok, pos):
+            return Mdl.decode_step(params, cfg, cache, tok, pos, policy)
+
+        self._step = jax.jit(_step)
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slot_req[s] = req
+                # per-slot prefill: step the shared cache on this row only
+                # (shape-stable: we step the whole batch but other rows'
+                # caches are overwritten with their own values -> mask via
+                # re-prefill; simple and correct for the lite engine)
+                for t, tok in enumerate(req.prompt):
+                    toks = self._tok.at[s, 0].set(tok)
+                    logits, self.cache = self._step(
+                        self.cache, toks, jnp.asarray(t, jnp.int32))
+                self.slot_pos[s] = len(req.prompt)
+                req._next = int(jnp.argmax(logits[s, -1]))
+
+    def step(self) -> int:
+        """One decode step over all active slots; returns #active."""
+        self._admit()
+        active = [s for s in range(self.slots) if self.slot_req[s]]
+        if not active:
+            return 0
+        toks = self._tok
+        for s in active:
+            req = self.slot_req[s]
+            toks = toks.at[s, 0].set(req._next if not req.out
+                                     else req.out[-1])
+        pos = jnp.asarray(max(self.slot_pos[s] for s in active), jnp.int32)
+        logits, self.cache = self._step(self.cache, toks, pos)
+        for s in active:
+            req = self.slot_req[s]
+            req.out.append(int(jnp.argmax(logits[s, -1])))
+            self.slot_pos[s] += 1
+            if len(req.out) >= req.max_new:
+                req.done = True
+                self.slot_req[s] = None
+        return len(active)
+
+    def run(self) -> List[Request]:
+        done: List[Request] = []
+        all_reqs = list(self.queue)
+        while self.queue or any(self.slot_req):
+            self.step()
+        return all_reqs

@@ -1,0 +1,112 @@
+"""Training step factory: loss, grad accumulation, remat, optimizer, BFP.
+
+``make_train_step(cfg, ...)`` returns a pure ``(state, batch) -> (state,
+metrics)`` suitable for jit/pjit.  Microbatching runs as lax.scan over
+gradient-accumulation chunks (constant memory in the number of chunks).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.core.policy import BFPPolicy
+from repro.models.lm import model as Mdl
+from repro.optim import optimizers as opt
+
+__all__ = ["TrainState", "make_train_step", "lm_loss"]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: opt.OptState
+    step: jax.Array
+
+
+def lm_loss(params, cfg: LMConfig, tokens, targets, policy=None,
+            enc_feats=None, aux_weight: float = 0.01,
+            z_weight: float = 1e-4) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token cross entropy + MoE aux + z-loss."""
+    logits, aux = Mdl.forward(params, cfg, tokens, enc_feats=enc_feats,
+                              policy=policy)
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    # one-hot contraction instead of gather: with vocab sharded over the
+    # model axis this is a local partial sum + psum (no logits all-gather)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    ll = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    nll = jnp.mean(logz - ll)
+    zloss = jnp.mean(jnp.square(logz))
+    loss = nll + aux_weight * aux + z_weight * zloss
+    return loss, {"nll": nll, "aux": aux, "zloss": zloss}
+
+
+def init_state(cfg: LMConfig, key) -> TrainState:
+    params = Mdl.init_params(cfg, key)
+    return TrainState(params=params, opt_state=opt.adamw_init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(
+    cfg: LMConfig,
+    lr_schedule: Callable = None,
+    grad_accum: int = 1,
+    max_grad_norm: float = 1.0,
+    policy: Optional[BFPPolicy] = None,
+    weight_decay: float = 0.1,
+    grad_transform: Optional[Callable[[Any], Any]] = None,
+) -> Callable[[TrainState, Tuple[jax.Array, jax.Array]],
+              Tuple[TrainState, Dict[str, jax.Array]]]:
+    """Build the train step.
+
+    grad_transform: optional hook applied to the accumulated grads BEFORE
+    the optimizer — used for BFP gradient compression (dist.compress).
+    """
+    lr_schedule = lr_schedule or opt.constant_schedule(3e-4)
+
+    def loss_fn(params, tokens, targets):
+        return lm_loss(params, cfg, tokens, targets, policy=policy)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch):
+        tokens, targets = batch
+        if grad_accum > 1:
+            b = tokens.shape[0]
+            mb = b // grad_accum
+            tk = tokens.reshape(grad_accum, mb, -1)
+            tg = targets.reshape(grad_accum, mb, -1)
+
+            def accum(carry, xs):
+                gsum, lsum = carry
+                (l, _), g = grad_fn(state.params, xs[0], xs[1])
+                gsum = jax.tree_util.tree_map(jnp.add, gsum, g)
+                return (gsum, lsum + l), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (gsum, lsum), _ = jax.lax.scan(accum, (zeros, 0.0), (tk, tg))
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, gsum)
+            loss = lsum / grad_accum
+            metrics: Dict[str, jax.Array] = {}
+        else:
+            (loss, metrics), grads = grad_fn(state.params, tokens, targets)
+
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        grads, gnorm = opt.clip_by_global_norm(grads, max_grad_norm)
+        lr = lr_schedule(state.step)
+        params, opt_state = opt.adamw_update(
+            grads, state.opt_state, state.params, lr,
+            weight_decay=weight_decay)
+        new_state = TrainState(params=params, opt_state=opt_state,
+                               step=state.step + 1)
+        out = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        out.update(metrics)
+        return new_state, out
+
+    return train_step

@@ -1,0 +1,129 @@
+"""Per-kernel correctness: Pallas (interpret=True) vs pure-jnp oracle.
+
+Sweeps shapes/dtypes/bit-widths and asserts allclose (mostly bit-exact)
+against ref.py, and triangulates against the core-library emulated path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BFPPolicy, Scheme
+from repro.core.bfp_dot import bfp_matmul_2d
+from repro.kernels import ops, ref
+from repro.kernels.bfp_matmul import bfp_matmul_pallas
+from repro.kernels.bfp_quantize import bfp_quantize_pallas
+
+
+def _rand(key, shape, dtype, scale=1.0):
+    x = jax.random.normal(key, shape, jnp.float32) * scale
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("b,k,n", [(8, 128, 8), (128, 256, 128),
+                                   (64, 512, 32), (256, 1024, 128)])
+@pytest.mark.parametrize("bits", [4, 6, 8])
+def test_matmul_kernel_matches_ref(b, k, n, bits):
+    x = _rand(jax.random.PRNGKey(0), (b, k), jnp.float32, 2.0)
+    w = _rand(jax.random.PRNGKey(1), (k, n), jnp.float32, 0.1)
+    bk = min(128, k)
+    out_k = bfp_matmul_pallas(x, w, l_i=bits, l_w=bits, bm=min(128, b),
+                              bn=min(128, n), bk=bk, interpret=True)
+    out_r = ref.bfp_matmul_ref(x, w, bits, bits, bk)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_kernel_dtypes(dtype):
+    x = _rand(jax.random.PRNGKey(2), (128, 256), dtype)
+    w = _rand(jax.random.PRNGKey(3), (256, 128), dtype, 0.05)
+    pol = BFPPolicy(scheme=Scheme.TILED, block_k=128, straight_through=False)
+    out_k = ops.bfp_matmul(x, w, pol, interpret=True)
+    out_r = ref.bfp_matmul_ref(x.astype(jnp.float32),
+                               w.astype(jnp.float32), 8, 8, 128)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_matmul_kernel_matches_core_library():
+    x = _rand(jax.random.PRNGKey(4), (128, 512), jnp.float32, 4.0)
+    w = _rand(jax.random.PRNGKey(5), (512, 128), jnp.float32, 0.2)
+    pol = BFPPolicy(scheme=Scheme.TILED, block_k=128, straight_through=False)
+    out_k = ops.bfp_matmul(x, w, pol, interpret=True)
+    out_c = bfp_matmul_2d(x, w, pol)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_c),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_matmul_kernel_ragged_padding():
+    """Non-multiple shapes go through ops.py padding and stay exact."""
+    x = _rand(jax.random.PRNGKey(6), (100, 300), jnp.float32)
+    w = _rand(jax.random.PRNGKey(7), (300, 70), jnp.float32, 0.1)
+    pol = BFPPolicy(scheme=Scheme.TILED, block_k=128, straight_through=False)
+    out = ops.bfp_matmul(x, w, pol, interpret=True)
+    assert out.shape == (100, 70)
+    xp = jnp.pad(x, ((0, 28), (0, 84)))
+    wp = jnp.pad(w, ((0, 84), (0, 58)))
+    out_r = ref.bfp_matmul_ref(xp, wp, 8, 8, 128)[:100, :70]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_r),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_matmul_kernel_accuracy_vs_float():
+    """BFP-8 GEMM should be within ~2% relative error of the float GEMM."""
+    x = _rand(jax.random.PRNGKey(8), (256, 512), jnp.float32)
+    w = _rand(jax.random.PRNGKey(9), (512, 256), jnp.float32, 0.05)
+    pol = BFPPolicy(scheme=Scheme.TILED, block_k=128, straight_through=False)
+    out = ops.bfp_matmul(x, w, pol, interpret=True)
+    rel = float(jnp.linalg.norm(out - x @ w) / jnp.linalg.norm(x @ w))
+    assert rel < 0.02, rel
+
+
+def test_matmul_kernel_overflow_guard():
+    x = jnp.ones((128, 65536 * 2), jnp.float32)
+    w = jnp.ones((65536 * 2, 128), jnp.float32)
+    with pytest.raises(ValueError, match="overflow"):
+        bfp_matmul_pallas(x, w, l_i=8, l_w=8, bk=65536 * 2, interpret=True)
+
+
+@pytest.mark.parametrize("m,k,bk", [(256, 512, 128), (8, 128, 128),
+                                    (256, 2048, 512)])
+@pytest.mark.parametrize("bits", [4, 8])
+def test_quantize_kernel_matches_ref(m, k, bk, bits):
+    x = _rand(jax.random.PRNGKey(10), (m, k), jnp.float32, 3.0)
+    mq, eq = bfp_quantize_pallas(x, bits=bits, bm=min(256, m), bk=bk,
+                                 interpret=True)
+    mr, er = ref.bfp_quantize_ref(x, bits, bk)
+    np.testing.assert_array_equal(np.asarray(mq), np.asarray(mr))
+    np.testing.assert_array_equal(np.asarray(eq), np.asarray(er))
+
+
+def test_quantize_kernel_zero_block():
+    x = jnp.zeros((8, 128), jnp.float32)
+    mq, eq = bfp_quantize_pallas(x, bits=8, bm=8, bk=128, interpret=True)
+    assert int(jnp.max(jnp.abs(mq))) == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([8, 16, 64]),
+    kt=st.sampled_from([1, 2, 4]),
+    n=st.sampled_from([8, 32, 128]),
+    bits=st.integers(min_value=3, max_value=9),
+    scale_pow=st.integers(min_value=-8, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matmul_kernel_property(b, kt, n, bits, scale_pow, seed):
+    """Property: kernel == oracle for random shapes/bits/dynamic ranges."""
+    bk = 128
+    k = kt * bk
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (b, k)) * (2.0 ** scale_pow)
+    w = jax.random.normal(kw, (k, n))
+    out_k = bfp_matmul_pallas(x, w, l_i=bits, l_w=bits, bm=min(128, b),
+                              bn=min(128, n), bk=bk, interpret=True)
+    out_r = ref.bfp_matmul_ref(x, w, bits, bits, bk)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-6, atol=1e-30)

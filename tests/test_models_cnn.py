@@ -1,0 +1,92 @@
+"""CNN zoo: shape/NaN smoke for every paper model + BFP accuracy behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BFPPolicy, PAPER_DEFAULT
+from repro.core.bfp import Scheme
+from repro.models.cnn import analysis, googlenet, layers as L, resnet, small, vgg
+
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_im2col_matches_conv():
+    """im2col + GEMM == lax.conv (the paper's matrix form is exact)."""
+    x = jax.random.normal(KEY, (2, 8, 8, 3))
+    p = L.conv2d_init(jax.random.PRNGKey(1), 3, 5, 3, 3)
+    out = L.conv2d(p, x, 1, "SAME", None)
+    w_hwio = p["w"]
+    ref = jax.lax.conv_general_dilated(
+        x, w_hwio, (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["b"]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("model,init,apply,shape", [
+    ("vgg", lambda k: vgg.init(k, 10, width_mult=0.125, input_hw=32,
+                               fc_dim=64),
+     vgg.apply, (2, 32, 32, 3)),
+    ("resnet18", lambda k: resnet.init(k, 18, 10, width_mult=0.25),
+     resnet.apply, (2, 32, 32, 3)),
+    ("resnet50", lambda k: resnet.init(k, 50, 10, width_mult=0.125,
+                                       stage_depths=(1, 1, 1, 1)),
+     resnet.apply, (2, 32, 32, 3)),
+    ("lenet", small.lenet_init, small.lenet_apply, (2, 28, 28, 1)),
+    ("cifarnet", small.cifarnet_init, small.cifarnet_apply, (2, 32, 32, 3)),
+])
+def test_cnn_smoke(model, init, apply, shape):
+    params = init(KEY)
+    x = jax.random.normal(KEY, shape)
+    for policy in (None, PAPER_DEFAULT.with_(straight_through=False)):
+        out = apply(params, x, policy)
+        assert out.shape == (2, 10)
+        assert bool(jnp.all(jnp.isfinite(out))), (model, policy)
+
+
+def test_googlenet_three_heads():
+    params = googlenet.init(KEY, 10, width_mult=0.125)
+    x = jax.random.normal(KEY, (2, 64, 64, 3))
+    main, aux1, aux2 = googlenet.apply(params, x, PAPER_DEFAULT.with_(
+        straight_through=False))
+    for o in (main, aux1, aux2):   # the paper's loss1/loss2/loss3 columns
+        assert o.shape == (2, 10) and bool(jnp.all(jnp.isfinite(o)))
+
+
+def test_bfp_output_close_to_float():
+    """8-bit BFP conv output stays within ~2% of float (paper Table 3)."""
+    params = small.cifarnet_init(KEY)
+    x = jax.random.normal(KEY, (4, 32, 32, 3))
+    y_f = small.cifarnet_apply(params, x, None)
+    y_q = small.cifarnet_apply(params, x,
+                               PAPER_DEFAULT.with_(straight_through=False))
+    rel = float(jnp.linalg.norm(y_q - y_f) / jnp.linalg.norm(y_f))
+    assert rel < 0.05, rel
+
+
+def test_vgg_table4_analysis():
+    """Table-4 driver: measured output SNR within the paper envelope of the
+    multi-layer model on a reduced VGG."""
+    params = vgg.init(KEY, 10, width_mult=0.25, input_hw=32, fc_dim=64)
+    x = jax.random.normal(KEY, (2, 32, 32, 3))
+    rows = analysis.analyze_vgg(params, x, BFPPolicy(), max_layers=6)
+    assert len(rows) == 6
+    for r in rows:
+        assert abs(r.output_ex - r.output_multi) < 8.9, r
+        # ReLU SNR-neutrality (paper §4.4, verified in their Table 4)
+        assert abs(r.relu_ex - r.output_ex) < 1.5, r
+
+
+def test_bit_width_monotonicity():
+    """More mantissa bits -> output closer to float (paper Table 3 trend)."""
+    params = small.lenet_init(KEY)
+    x = jax.random.normal(KEY, (4, 28, 28, 1))
+    y_f = small.lenet_apply(params, x, None)
+    errs = []
+    for bits in (4, 6, 8, 10):
+        pol = BFPPolicy(l_w=bits, l_i=bits, straight_through=False)
+        y_q = small.lenet_apply(params, x, pol)
+        errs.append(float(jnp.linalg.norm(y_q - y_f)))
+    assert errs[0] > errs[1] > errs[2] > errs[3]
