@@ -1,0 +1,75 @@
+"""Engine throughput: cached pre-quantized weights vs per-step requant.
+
+The paper's deployment stores weights block-formatted in HBM; the engine
+mirrors that with the ``{"m", "s"}`` wire format.  This bench measures
+what that buys on the emulated datapath: an inference-shaped GEMM
+(small batch, large weight) where per-forward weight re-quantization is
+a significant fraction of the work.
+
+Rows:
+  engine/requant_each_step   float weights, quantized inside every call
+  engine/cached_prequant     int8+scale weights, quantized once offline
+  engine/float_baseline      no quantization (reference)
+  engine/lenet_requant|prequant  the same effect through a whole CNN
+
+Run:  PYTHONPATH=src python -m benchmarks.run engine
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro import engine as EG
+from repro.core.bfp import Scheme
+from repro.core.policy import BFPPolicy
+from repro.core.prequant import prequant_leaf
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    b, k, n = 8, 2048, 2048           # decode-like: weight >> activations
+    x = jax.random.normal(key, (b, k))
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.05
+    pol = BFPPolicy(scheme=Scheme.TILED, block_k=128,
+                    straight_through=False)
+    pq = prequant_leaf(w, pol)
+    flops = 2 * b * k * n
+
+    f_float = jax.jit(lambda x, w: EG.gemm(x, w, None))
+    f_req = jax.jit(lambda x, w: EG.gemm(x, w, pol))
+    f_pre = jax.jit(lambda x, m, s: EG.gemm(x, {"m": m, "s": s}, pol))
+
+    iters = dict(warmup=3, iters=15)  # medians over enough reps to hold
+    us_float = time_call(f_float, x, w, **iters)
+    us_req = time_call(f_req, x, w, **iters)
+    us_pre = time_call(f_pre, x, pq["m"], pq["s"], **iters)
+    emit("engine/float_baseline", us_float, f"GFLOPs={flops/us_float/1e3:.1f}")
+    emit("engine/requant_each_step", us_req, f"GFLOPs={flops/us_req/1e3:.1f}")
+    emit("engine/cached_prequant", us_pre,
+         f"GFLOPs={flops/us_pre/1e3:.1f};speedup_vs_requant="
+         f"{us_req / us_pre:.2f}x")
+
+    # whole-model view: LeNet forward, weights quantized per step vs once
+    from repro.models.cnn import small
+    params = small.lenet_init(jax.random.PRNGKey(2))
+    img = jax.random.normal(jax.random.PRNGKey(3), (8, 28, 28, 1))
+    eq4 = BFPPolicy(straight_through=False)
+    params_pq = EG.prequantize_cnn(params, eq4)
+    g_req = jax.jit(lambda p, x: small.lenet_apply(p, x, eq4))
+    g_pre = jax.jit(lambda p, x: small.lenet_apply(p, x, eq4))
+    us_g_req = time_call(g_req, params, img, **iters)
+    us_g_pre = time_call(g_pre, params_pq, img, **iters)
+    emit("engine/lenet_requant", us_g_req, "")
+    emit("engine/lenet_prequant", us_g_pre,
+         f"speedup_vs_requant={us_g_req / us_g_pre:.2f}x")
+
+    # wire-format storage cut (the paper's §3.1 traffic argument)
+    f32_bytes = w.size * 4
+    wire_bytes = pq["m"].size * 1 + pq["s"].size * 4
+    emit("engine/weight_bytes_f32_vs_wire", 0.0,
+         f"{f32_bytes}->{wire_bytes};cut={f32_bytes / wire_bytes:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

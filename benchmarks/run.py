@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
   table4_nsr           paper Table 4 (per-layer SNR: measured vs model)
   kernel_bench         E6 kernel microbench + Fig. 2 datapath sizing
   blocksize_ablation   E10 TPU K-tile block-size ablation (beyond paper)
+  engine_bench         E11 engine: cached prequant weights vs per-step
+                       re-quantization (ISSUE 1 acceptance)
 
 Roofline/dry-run numbers are produced by ``repro.launch.dryrun`` (they
 need the 512-device env) and summarized in EXPERIMENTS.md.
@@ -18,8 +20,9 @@ import sys
 import time
 import traceback
 
-from benchmarks import (blocksize_ablation, kernel_bench, table1_storage,
-                        table2_scheme, table3_sweep, table4_nsr)
+from benchmarks import (blocksize_ablation, engine_bench, kernel_bench,
+                        table1_storage, table2_scheme, table3_sweep,
+                        table4_nsr)
 
 _ALL = {
     "table1": table1_storage.run,
@@ -28,6 +31,7 @@ _ALL = {
     "table4": table4_nsr.run,
     "kernel": kernel_bench.run,
     "blocksize": blocksize_ablation.run,
+    "engine": engine_bench.run,
 }
 
 

@@ -27,6 +27,9 @@ def main():
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--bfp", action="store_true")
+    ap.add_argument("--prequant", action="store_true",
+                    help="cache pre-quantized int8 weights in the engine "
+                         "(quantize once, not per decode step)")
     args = ap.parse_args()
 
     cfg = reduced(ARCHS[args.arch], n_layers=4, d_model=128, d_ff=256,
@@ -34,9 +37,14 @@ def main():
     params = init_params(cfg, jax.random.PRNGKey(0))
     policy = PAPER_DEFAULT.with_(straight_through=False) if args.bfp else None
 
-    print(f"serving {cfg.name} bfp={args.bfp} slots={args.slots}")
+    print(f"serving {cfg.name} bfp={args.bfp} prequant={args.prequant} "
+          f"slots={args.slots}")
+    # --prequant without --bfp is still meaningful: weights live as
+    # int8+scale (4x smaller) and the float path dequantizes on the fly.
+    prequant = (PAPER_DEFAULT.with_(straight_through=False)
+                if args.prequant else None)
     eng = ServeEngine(params, cfg, slots=args.slots, max_len=128,
-                      policy=policy)
+                      policy=policy, prequant=prequant)
     for i in range(args.requests):
         eng.submit(Request(rid=i, prompt=[1 + i, 7, 3, 2], max_new=args.max_new))
     t0 = time.perf_counter()

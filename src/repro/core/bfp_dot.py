@@ -38,8 +38,8 @@ from repro.core import bfp
 from repro.core.bfp import BFPBlock, Rounding, Scheme
 from repro.core.policy import BFPPolicy
 
-__all__ = ["bfp_dot", "bfp_matmul_2d", "quantize_activations",
-           "quantize_weights"]
+__all__ = ["bfp_dot", "bfp_matmul_2d", "bfp_matmul_2d_prequant",
+           "quantize_activations", "quantize_weights"]
 
 
 def _flatten_leading(x: jax.Array) -> Tuple[jax.Array, Tuple[int, ...]]:
@@ -173,23 +173,81 @@ def bfp_matmul_2d(x2d: jax.Array, w: jax.Array, policy: BFPPolicy,
     return _bfp_matmul_2d_impl(x2d, w, policy, key)
 
 
-def bfp_dot(x: jax.Array, w: jax.Array,
-            policy: Optional[BFPPolicy] = None,
-            key: Optional[jax.Array] = None) -> jax.Array:
+def bfp_matmul_2d_prequant(x2d: jax.Array, wm: jax.Array, ws: jax.Array,
+                           policy: BFPPolicy,
+                           key: Optional[jax.Array] = None) -> jax.Array:
+    """BFP x2d[B,K] @ pre-quantized weight (int mantissa + scale sidecar).
+
+    ``wm`` is the int mantissa [K, N]; ``ws`` the power-of-two steps
+    [K//bk, N] produced by :func:`repro.core.prequant.prequant_leaf`.
+    The weight-side quantization is SKIPPED (that is the point); the
+    activation side follows ``policy``.  For Scheme.TILED with matching
+    ``block_k`` — and for eq. (3)/(4) with per-column sidecars (bk == K) —
+    this is bit-exact to ``quantize_weights`` + :func:`bfp_matmul_2d`,
+    because ``ws`` IS the quantizer's step array.
+
+    Inference path: no straight-through estimator (weights are already
+    integers; there is nothing to train through on the weight side).
+    """
+    b, k = x2d.shape
+    kw, n = wm.shape
+    t = ws.shape[0]
+    if kw != k or t == 0 or k % t:
+        raise ValueError(f"prequant shapes x{x2d.shape} m{wm.shape} "
+                         f"s{ws.shape} inconsistent")
+    bk = k // t
+    if policy.block_k not in (None, bk) and policy.scheme is Scheme.TILED:
+        raise ValueError(f"policy.block_k={policy.block_k} != prequant "
+                         f"block {bk}")
+    if not policy.quantize_inputs:
+        s_full = jnp.repeat(ws, bk, axis=0)
+        return x2d @ (wm.astype(jnp.float32) * s_full)
+
+    l_sum = policy.l_w + policy.l_i
+    if t == 1:
+        # one weight block per column: same contraction as the paper
+        # schemes; _int_matmul handles K beyond the int32-safe bound.
+        bx = (quantize_activations(x2d, policy, key)
+              if policy.scheme is not Scheme.TILED else
+              bfp.bfp_quantize_matrix(x2d, policy.l_i, "w", Scheme.TILED,
+                                      bk, policy.rounding, key))
+        sx = (bx.scale if policy.scheme is not Scheme.TILED else
+              jnp.exp2((bx.exponent - (policy.l_i - 2)).astype(jnp.float32)))
+        mo = _int_matmul(bx.mantissa, wm, l_sum)
+        return mo * (sx.reshape(b, 1) if sx.size != 1 else sx) * ws
+
+    if bk > bfp.max_safe_k(policy.l_w, policy.l_i):
+        raise ValueError(
+            f"prequant block {bk} overflows int32 accumulation for "
+            f"L_W+L_I={l_sum} (paper Fig. 2 sizing)")
+    if policy.scheme is Scheme.TILED:
+        bx = bfp.bfp_quantize_matrix(x2d, policy.l_i, "w", Scheme.TILED,
+                                     bk, policy.rounding, key)
+        sx_e = jnp.exp2((bx.exponent - (policy.l_i - 2))
+                        .astype(jnp.float32)).T[:, :, None]      # [t,B,1]
+    else:
+        bx = quantize_activations(x2d, policy, key)
+        sx_e = bx.scale[None]                                    # [1,B|1,1]
+    mx = bx.mantissa.reshape(b, t, bk)
+    mw = wm.reshape(t, bk, n)
+    part = jnp.einsum("btk,tkn->tbn", mx.astype(jnp.int32),
+                      mw.astype(jnp.int32),
+                      preferred_element_type=jnp.int32).astype(jnp.float32)
+    scaled = part * sx_e * ws[:, None, :]
+    return jnp.sum(scaled, axis=0)
+
+
+def bfp_dot(x: jax.Array, w, policy=None,
+            key: Optional[jax.Array] = None,
+            path: Optional[str] = None) -> jax.Array:
     """``x[..., K] @ w[K, N]`` with optional BFP datapath.
 
-    The single entry point every layer in the framework uses.  ``policy``
-    None -> float (paper's reference); otherwise the BFP datapath above.
-    Optional Pallas kernel dispatch (policy.use_kernel) for the TPU target.
+    Thin compatibility shim over :func:`repro.engine.gemm` — the single
+    execution layer that owns backend selection (float / emulated /
+    pallas), per-layer policy resolution (``policy`` may be a
+    ``repro.engine.PolicyMap``; ``path`` names the calling layer), and
+    first-class pre-quantized weights (``w`` may be the prequant
+    ``{"m", "s"}`` wire format).
     """
-    if policy is None:
-        return x @ w
-    if policy.use_kernel:
-        from repro.kernels import ops  # local import: kernels are optional
-        x2d, lead = _flatten_leading(x)
-        out = ops.bfp_matmul(x2d, w, policy)
-        return out.reshape(*lead, w.shape[-1])
-    x2d, lead = _flatten_leading(x)
-    out = bfp_matmul_2d(x2d, w, policy, key)
-    out = out.astype(jnp.result_type(x.dtype, w.dtype))
-    return out.reshape(*lead, w.shape[-1])
+    from repro import engine  # local import: engine builds on this module
+    return engine.gemm(x, w, policy, path=path, key=key)

@@ -4,6 +4,10 @@ A :class:`BFPPolicy` is threaded through every GEMM-bearing layer.  ``None``
 means pure float math (the paper's floating-point reference).  The default
 policy reproduces the paper's chosen configuration: scheme eq. (4), 8-bit
 mantissas (incl. sign) for both W and I, round-off.
+
+Per-LAYER policies (paper Table 3's layer-wise sweep) are expressed with
+:class:`repro.engine.PolicyMap`, which resolves a layer path to a
+``BFPPolicy`` (or ``None`` for float); every layer accepts either.
 """
 from __future__ import annotations
 
@@ -12,7 +16,7 @@ from typing import Optional
 
 from repro.core.bfp import Rounding, Scheme
 
-__all__ = ["BFPPolicy", "PAPER_DEFAULT", "TPU_TILED"]
+__all__ = ["BFPPolicy", "PAPER_DEFAULT", "TPU_TILED", "PALLAS_TILED"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,7 +33,13 @@ class BFPPolicy:
       quantize_weights / quantize_inputs: per-operand enable switches.
       straight_through: if True, bfp_dot uses a straight-through estimator
         so gradients flow as if the GEMM were float (BFP-QAT, beyond-paper).
-      use_kernel: prefer the Pallas kernel path where available.
+      backend: execution backend name ("float" | "emulated" | "pallas");
+        None selects via ``use_kernel`` (compat) and falls back to
+        "emulated".  A backend that cannot honour the policy (e.g. pallas
+        with a non-TILED scheme) falls back to "emulated" — see
+        repro.engine.backends.select_backend / DESIGN.md §7.
+      use_kernel: legacy alias for ``backend="pallas"``; kept so existing
+        configs keep working.
     """
 
     l_w: int = 8
@@ -41,12 +51,20 @@ class BFPPolicy:
     quantize_weights: bool = True
     quantize_inputs: bool = True
     straight_through: bool = True
+    backend: Optional[str] = None
     use_kernel: bool = False
 
     def __post_init__(self):
         for name, v in (("l_w", self.l_w), ("l_i", self.l_i)):
             if not 2 <= v <= 24:
                 raise ValueError(f"{name}={v} out of range [2, 24]")
+
+    @property
+    def backend_name(self) -> str:
+        """Requested backend, folding in the legacy use_kernel flag."""
+        if self.backend is not None:
+            return self.backend
+        return "pallas" if self.use_kernel else "emulated"
 
     def with_(self, **kw) -> "BFPPolicy":
         return dataclasses.replace(self, **kw)
@@ -58,3 +76,6 @@ PAPER_DEFAULT = BFPPolicy()
 #: TPU-native tiled variant (DESIGN.md §2): K-tiles of 128 matched to the
 #: MXU contraction tiling; strictly lower quantization noise than EQ4.
 TPU_TILED = BFPPolicy(scheme=Scheme.TILED, block_k=128)
+
+#: TPU_TILED executed by the fused Pallas kernel (interpret=True off-TPU).
+PALLAS_TILED = TPU_TILED.with_(backend="pallas")

@@ -6,11 +6,20 @@ power-of-two scale sidecar (block exponents), so every weight read moves
 shrink by the same factor — the paper's off-chip-traffic argument
 (§1, §3.1) applied to TPU HBM and ICI.
 
-``quantize_param_tree`` converts every >=2-D float leaf into
-``{"m": int8 mantissa, "s": f32 per-(K-tile, out-column) scale}``
-(Scheme.TILED with block_k, or per-column when block_k is None = paper
-eq. 4).  ``models.lm.common.linear`` consumes either representation, so
-the same model code serves float or BFP weights.
+Wire format (consumed FIRST-CLASS by every repro.engine backend):
+
+    {"m": int mantissa [.., K, N],  "s": f32 scale [.., K//bk, N]}
+
+``s`` holds the quantizer's power-of-two steps ``2^(e - (L_W - 2))``, so
+the emulated integer datapath and the Pallas prequant kernel reproduce
+BIT-EXACTLY what in-line ``quantize_weights`` would have produced for
+Scheme.TILED with the same ``block_k`` (or per-column / eq. 4 blocks when
+``block_k`` is None) — but the quantization runs ONCE, not per forward.
+
+``quantize_param_tree`` converts LM-style trees (>=2-D GEMM leaves,
+possibly stacked [L, K, N]); ``quantize_cnn_param_tree`` walks CNN trees,
+transposing HWIO conv kernels through their im2col GEMM view.  Both accept
+a single :class:`BFPPolicy` or a per-layer ``repro.engine.PolicyMap``.
 """
 from __future__ import annotations
 
@@ -22,11 +31,19 @@ import jax.numpy as jnp
 from repro.core import bfp
 from repro.core.policy import BFPPolicy
 
-__all__ = ["quantize_param_tree", "prequant_leaf", "is_prequant"]
+__all__ = ["quantize_param_tree", "quantize_cnn_param_tree", "prequant_leaf",
+           "prequant_conv_leaf", "dequantize_prequant", "is_prequant"]
 
 
 def is_prequant(w: Any) -> bool:
     return isinstance(w, dict) and "m" in w and "s" in w
+
+
+def _resolve(policy: Any, path: Optional[str]) -> Optional[BFPPolicy]:
+    # Lazy import: engine.policy_map depends on core.policy; importing it
+    # at module scope here would cycle through repro.engine.__init__.
+    from repro.engine.policy_map import resolve_policy
+    return resolve_policy(policy, path)
 
 
 def prequant_leaf(w: jax.Array, policy: BFPPolicy) -> Any:
@@ -51,25 +68,139 @@ def prequant_leaf(w: jax.Array, policy: BFPPolicy) -> Any:
             "s": s.reshape(*lead, k // bk, n)}
 
 
-def _eligible(path_s: str) -> bool:
-    # embedding stays float (gather path); every GEMM weight is eligible
-    return not path_s.endswith("embed/e")
+def prequant_conv_leaf(w_hwio: jax.Array, policy: BFPPolicy) -> Any:
+    """HWIO conv kernel -> prequant dict with the mantissa kept in HWIO.
+
+    Quantization happens in the im2col GEMM view ([C*kh*kw, out]; the
+    layout ``models.cnn.layers.conv2d`` contracts over), then the mantissa
+    is inverse-transposed back to HWIO so the layer can still read
+    (kh, kw, in_ch, out_ch) off the array shape.  ``s`` stays in the GEMM
+    view [K//bk, N].
+    """
+    if w_hwio.ndim != 4:
+        return w_hwio
+    kh, kw, c, n = w_hwio.shape
+    w2d = jnp.transpose(w_hwio, (2, 0, 1, 3)).reshape(c * kh * kw, n)
+    d = prequant_leaf(w2d, policy)
+    if not is_prequant(d):
+        return w_hwio  # block_k does not divide C*kh*kw
+    m_hwio = jnp.transpose(d["m"].reshape(c, kh, kw, n), (1, 2, 0, 3))
+    return {"m": m_hwio, "s": d["s"]}
 
 
-def quantize_param_tree(params: Any, policy: Optional[BFPPolicy]) -> Any:
-    """Walk the param tree; convert GEMM weights to the BFP wire format."""
+def dequantize_prequant(w: Any, dtype=jnp.float32) -> jax.Array:
+    """Materialize a prequant dict back to a dense float weight.
+
+    Supports leading batch dims ([.., K, N] mantissa with [.., K//bk, N]
+    scales).  4-D HWIO conv mantissas must be lowered to the GEMM view by
+    the caller first (conv2d does).
+    """
+    m, s = w["m"], w["s"]
+    bk = m.shape[-2] // s.shape[-2]
+    s_full = jnp.repeat(s, bk, axis=-2)
+    return (m.astype(dtype) * s_full.astype(dtype))
+
+
+def _path_keys(path):
+    return [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+
+
+#: Leaf names that hold GEMM weights in LM trees: linear_init's "w" and
+#: the MoE batched expert matrices.  Everything else (norm gains, biases,
+#: recurrence parameters, embeddings — the gather path) stays float.
+_GEMM_LEAF_NAMES = ("w", "w1", "w2", "w3")
+
+#: Leading stack-container keys that runtime layer paths do not carry
+#: (layers run under lax.scan; linear() sees "attn/wq", not
+#: "layers/attn/wq").  "enc" is NOT stripped — encoder paths keep it.
+_LM_STACK_PREFIXES = ("layers", "dec", "periods", "rem")
+
+
+def _lm_rule_path(keys) -> str:
+    """Pytree path -> the runtime layer path PolicyMap rules see.
+
+    Strips the trailing "/w" leaf name and leading stack-container/index
+    segments so "layers/attn/wq/w" resolves as "attn/wq" — the same
+    string models.lm.common.linear passes to the engine.  MoE expert
+    leaves keep their matrix name ("moe/w1" vs runtime "moe"), so write
+    substring rules ("^moe", not "^moe$") to cover both.
+    """
+    ks = list(keys)
+    if ks and ks[-1] == "w":
+        ks = ks[:-1]
+    while ks and (ks[0] in _LM_STACK_PREFIXES or ks[0].isdigit()):
+        ks = ks[1:]
+    return "/".join(ks)
+
+
+def _lm_eligible(keys) -> bool:
+    if not keys or keys[-1] not in _GEMM_LEAF_NAMES:
+        return False
+    if len(keys) >= 2 and keys[-2] == "router":
+        return False  # MoE router always runs in float (moe_apply contract)
+    return "/".join(keys) != "embed/e"
+
+
+def quantize_param_tree(params: Any, policy: Any) -> Any:
+    """Walk an LM param tree; convert GEMM weights to the BFP wire format.
+
+    ``policy`` may be None (no-op), a BFPPolicy (uniform), or a
+    repro.engine.PolicyMap (per-layer; a rule resolving to None keeps
+    that leaf in float).  PolicyMap rules are matched against the SAME
+    layer paths the runtime GEMMs use ("attn/wq", "ffn/w1", "lm_head"),
+    so a per-layer assignment quantizes exactly the weights it executes.
+    Stacked-layer leaves ([L, K, N], or [L, E, K, N] MoE experts)
+    quantize each trailing [K, N] matrix independently.
+    """
     if policy is None:
         return params
 
     def one(path, leaf):
-        parts = []
-        for kk in path:
-            parts.append(str(getattr(kk, "key", getattr(kk, "idx", kk))))
-        if not _eligible("/".join(parts)):
+        keys = _path_keys(path)
+        if not _lm_eligible(keys):
+            return leaf
+        pol = _resolve(policy, _lm_rule_path(keys))
+        if pol is None:
             return leaf
         if hasattr(leaf, "ndim") and leaf.ndim >= 2 and \
                 jnp.issubdtype(leaf.dtype, jnp.floating):
-            return prequant_leaf(leaf, policy)
+            return prequant_leaf(leaf, pol)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def quantize_cnn_param_tree(params: Any, policy: Any) -> Any:
+    """Walk a CNN param tree (models.cnn conventions) into the wire format.
+
+    Only leaves literally named ``w`` are touched: 4-D HWIO conv kernels
+    go through :func:`prequant_conv_leaf`, 2-D dense weights through
+    :func:`prequant_leaf`.  Biases / batch-norm / metadata stay as-is.
+    The policy is resolved against the leaf's tree path with the
+    trailing ``/w`` (and the ``/conv`` nesting of conv+bn blocks)
+    stripped, which is exactly the layer path the model apply functions
+    pass to the engine ("stem", "blocks/3/c1", "conv1_1", "fc") — a
+    PolicyMap quantizes precisely the layers it will execute in BFP.
+    """
+    if policy is None:
+        return params
+
+    def one(path, leaf):
+        keys = _path_keys(path)
+        if not keys or keys[-1] != "w" or not hasattr(leaf, "ndim"):
+            return leaf
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf
+        rule_keys = keys[:-1]
+        if rule_keys and rule_keys[-1] == "conv":
+            rule_keys = rule_keys[:-1]      # resnet {"conv", "bn"} nesting
+        pol = _resolve(policy, "/".join(rule_keys))
+        if pol is None:
+            return leaf
+        if leaf.ndim == 4:
+            return prequant_conv_leaf(leaf, pol)
+        if leaf.ndim == 2:
+            return prequant_leaf(leaf, pol)
         return leaf
 
     return jax.tree_util.tree_map_with_path(one, params)

@@ -1,0 +1,10 @@
+"""Distributed-execution utilities: logical-axis sharding annotations,
+parameter/cache PartitionSpec trees, and BFP gradient compression.
+
+The model code annotates activations with LOGICAL axis names
+(``sharding.shard(x, "batch", "seq", "heads", None)``); the launchers bind
+logical names to physical mesh axes with ``sharding.axis_rules``.  Outside
+an ``axis_rules`` context every annotation is the identity, so the same
+model code runs unmodified on a single CPU host (tests) and on the
+production meshes (launch.dryrun / launch.train).
+"""

@@ -1,0 +1,81 @@
+"""BFP gradient compression with error feedback (beyond-paper E9).
+
+The paper's off-chip-traffic argument (§1, §3.1) applied to the training
+interconnect: gradients are block-formatted before the cross-pod
+all-reduce, cutting wire bytes ~4x at 8 bits.  Plain quantization of
+gradients is biased step-to-step; the standard fix is ERROR FEEDBACK
+(Seide et al. 2014; Karimireddy et al. 2019): the residual of each
+quantization is carried and added back before the next one, so the
+compressed sum converges to the true sum.
+
+``quantize_leaf`` is the wire model (round-trip through the BFP format);
+``make_compressor`` packages init + transform for
+``train.step.make_train_step(grad_transform=...)``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bfp
+
+__all__ = ["quantize_leaf", "make_compressor"]
+
+#: Elements per shared exponent on the wire (one int32 exponent per block;
+#: 512 matches the paper's Table-1 storage sweet spot: +8/512 bits/elem).
+WIRE_BLOCK = 512
+
+
+def quantize_leaf(g: jax.Array, bits: int,
+                  block: int = WIRE_BLOCK) -> jax.Array:
+    """Round-trip one leaf through the BFP wire format (same shape out).
+
+    The leaf is flattened, split into ``block``-element blocks (zero
+    padded), block-formatted at ``bits`` (incl. sign), and dequantized —
+    exactly the error the int8+exponent wire introduces.
+    """
+    if not jnp.issubdtype(g.dtype, jnp.floating):
+        return g
+    flat = g.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    nb = -(-n // block)
+    padded = jnp.pad(flat, (0, nb * block - n)).reshape(nb, block)
+    q = bfp.quantize(padded, bits, (1,)).dequantize()
+    return q.reshape(-1)[:n].reshape(g.shape).astype(g.dtype)
+
+
+def make_compressor(bits: int = 8, block: int = WIRE_BLOCK
+                    ) -> Tuple[Callable[[Any], Any],
+                               Callable[[Any, Any], Tuple[Any, Any]]]:
+    """Error-feedback BFP compressor for gradient pytrees.
+
+    Returns ``(init_fn, transform)``:
+
+      init_fn(params)            -> zero residual tree
+      transform(grads, residual) -> (compressed_grads, new_residual)
+
+    with ``e = g + r;  q = Q(e);  r' = e - q`` per leaf, which keeps the
+    accumulated compressed gradient unbiased (test_system asserts the
+    50-step sum converges to the true sum).
+    """
+
+    def init_fn(params: Any) -> Any:
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def transform(grads: Any, residual: Any) -> Tuple[Any, Any]:
+        def one(g, r):
+            e = g.astype(jnp.float32) + r
+            q = quantize_leaf(e, bits, block)
+            return q.astype(g.dtype), e - q
+
+        pairs = jax.tree_util.tree_map(one, grads, residual)
+        q = jax.tree_util.tree_map(lambda t: t[0], pairs,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+        r = jax.tree_util.tree_map(lambda t: t[1], pairs,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+        return q, r
+
+    return init_fn, transform

@@ -1,0 +1,93 @@
+"""Logical-axis sharding annotations (DESIGN.md §5).
+
+Model code names the MEANING of each tensor dimension; the launcher names
+the HARDWARE.  ``axis_rules`` installs a (rules, mesh) binding for the
+current thread; inside it, ``shard`` lowers logical names to
+``jax.lax.with_sharding_constraint`` with a :class:`NamedSharding`.
+Outside any binding ``shard`` is the identity, which is what lets the
+tier-1 test suite exercise the exact production model code on one CPU
+device.
+
+Rules values may be a physical axis name (``"model"``), a tuple of axis
+names (``("pod", "data")`` — the multi-pod batch axis), or ``None``
+(replicate).  A rule whose axis size does not divide the dimension is
+dropped to ``None`` instead of failing, so reduced smoke configs never
+trip divisibility errors.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["DEFAULT_RULES", "axis_rules", "shard", "current_rules"]
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+#: Logical -> physical defaults for the production meshes
+#: (launch.mesh: axes ("data", "model") or ("pod", "data", "model")).
+#: ``launch.input_specs.cell_rules`` patches these per (arch x shape) cell.
+DEFAULT_RULES: Dict[str, Axis] = {
+    "batch": "data",        # pure data parallelism
+    "seq": None,            # full sequences per shard
+    "seq_res": None,        # residual-stream seq axis (Megatron SP opt-in)
+    "embed": None,          # d_model stays replicated (activations)
+    "heads": "model",       # tensor parallel attention
+    "kv_heads": "model",
+    "ffn": "model",         # tensor parallel MLP hidden
+    "vocab": "model",       # sharded logits / lm_head
+    "experts": "model",     # expert parallelism (MoE)
+}
+
+_STATE = threading.local()
+
+
+def current_rules() -> Optional[Tuple[Dict[str, Axis], Mesh]]:
+    """The active (rules, mesh) binding, or None outside axis_rules."""
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Dict[str, Axis], mesh: Mesh):
+    """Bind logical axis names to physical mesh axes for this thread."""
+    prev = current_rules()
+    _STATE.ctx = (dict(rules), mesh)
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def _axis_size(mesh: Mesh, ax: Axis) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if isinstance(ax, (tuple, list)):
+        n = 1
+        for a in ax:
+            n *= sizes.get(a, 1)
+        return n
+    return sizes.get(ax, 1)
+
+
+def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Annotate ``x`` with one logical axis name (or None) per dimension.
+
+    Identity outside an :func:`axis_rules` context.  Unknown names and
+    indivisible dimensions replicate.
+    """
+    ctx = current_rules()
+    if ctx is None:
+        return x
+    rules, mesh = ctx
+    if x.ndim != len(logical_axes):  # defensive: never fail model code
+        return x
+    phys = []
+    for dim, name in zip(x.shape, logical_axes):
+        ax = rules.get(name) if isinstance(name, str) else None
+        if ax is not None and dim % _axis_size(mesh, ax) != 0:
+            ax = None
+        phys.append(tuple(ax) if isinstance(ax, list) else ax)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*phys)))

@@ -1,0 +1,121 @@
+"""PartitionSpec trees for parameters and decode caches (DESIGN.md §5).
+
+Megatron-style tensor parallelism over the ``"model"`` axis plus FSDP
+over the data axes:
+
+  * column-parallel linears (wq/wk/wv, w1/w3, gates, lm_head): output dim
+    on "model", input dim FSDP-sharded over ("pod", "data");
+  * row-parallel linears (wo, w2, out): input dim on "model";
+  * embedding: vocab dim on "model" (sharded logits pair with the
+    "vocab" activation rule);
+  * BFP prequant leaves ({"m", "s"} wire format): the int8 mantissa
+    follows its owner's layout; the small scale sidecar shards only its
+    output dim (column-parallel owners) and otherwise replicates.
+
+Every assignment is divisibility-guarded — a dim the axis does not divide
+replicates instead of failing, so reduced configs lower on any mesh.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+__all__ = ["param_specs", "cache_specs"]
+
+#: Immediate-owner names whose GEMM contracts over the "model"-sharded dim
+#: (row parallel); everything else 2-D+ is treated column parallel.
+_ROW_PARALLEL = ("wo", "w2", "out")
+
+
+def _axes(mesh: Mesh):
+    names = mesh.axis_names
+    data: Any = tuple(a for a in ("pod", "data") if a in names)
+    if len(data) == 1:
+        data = data[0]
+    elif not data:
+        data = None
+    model = "model" if "model" in names else None
+    return data, model
+
+
+def _size(mesh: Mesh, ax) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if isinstance(ax, (tuple, list)):
+        n = 1
+        for a in ax:
+            n *= sizes.get(a, 1)
+        return n
+    return sizes.get(ax, 1)
+
+
+def _fit(mesh: Mesh, dim: int, ax):
+    return ax if ax is not None and dim % _size(mesh, ax) == 0 else None
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    return tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def param_specs(cfg, params_sds: Any, mesh: Mesh) -> Any:
+    """PartitionSpec tree matching ``params_sds`` (ShapeDtypeStruct tree)."""
+    data, model = _axes(mesh)
+
+    def one(path, leaf):
+        nd = getattr(leaf, "ndim", 0)
+        if nd < 2:
+            return P()
+        keys = _path_keys(path)
+        name = keys[-1]
+        parent = keys[-2] if len(keys) > 1 else ""
+        holder = parent if name in ("w", "b", "m", "s") else name
+        shape = leaf.shape
+        spec = [None] * nd
+
+        if "embed" in keys:  # [vocab, d_model]
+            spec[-2] = _fit(mesh, shape[-2], model)
+            return P(*spec)
+
+        row = holder in _ROW_PARALLEL
+        if name == "s":
+            # scale sidecar [.., K//bk, N]: keep the tiny tensor simple —
+            # shard only the output dim of column-parallel owners.
+            if not row:
+                spec[-1] = _fit(mesh, shape[-1], model)
+            return P(*spec)
+        if row:
+            spec[-2] = _fit(mesh, shape[-2], model)
+            spec[-1] = _fit(mesh, shape[-1], data)      # FSDP
+        else:
+            spec[-1] = _fit(mesh, shape[-1], model)
+            spec[-2] = _fit(mesh, shape[-2], data)      # FSDP
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_sds)
+
+
+def cache_specs(cfg, cache_sds: Any, mesh: Mesh) -> Any:
+    """PartitionSpec tree for decode caches (model.init_cache layout).
+
+    KV buffers [L, B, T, Hk, Dh] shard batch over the data axes and KV
+    heads over "model"; recurrent states [L, B, ...] shard batch only;
+    ``enc_out`` [B, S, D] shards its leading batch dim.
+    """
+    data, model = _axes(mesh)
+
+    def one(path, leaf):
+        nd = getattr(leaf, "ndim", 0)
+        if leaf is None or nd == 0:
+            return P()
+        keys = _path_keys(path)
+        shape = leaf.shape
+        spec = [None] * nd
+        batch_dim = 0 if (keys and keys[-1] == "enc_out") else min(1, nd - 1)
+        spec[batch_dim] = _fit(mesh, shape[batch_dim], data)
+        if nd == 5:  # [L, B, T, Hk, Dh]
+            spec[3] = _fit(mesh, shape[3], model)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(
+        one, cache_sds, is_leaf=lambda x: x is None)

@@ -1,0 +1,27 @@
+"""Unified BFP GEMM execution engine.
+
+One execution layer for the paper's datapath (block-format -> fixed-point
+MAC -> power-of-two rescale, Fig. 2) behind every model GEMM:
+
+  * backend registry: float / emulated / pallas (``backends``),
+  * per-layer policies: :class:`PolicyMap` resolved on layer paths
+    (``policy_map``) — the paper's Table-3 layer-wise sweeps as config,
+  * first-class pre-quantized weights on all paths (``prequantize`` /
+    ``prequantize_cnn`` + the ``{"m", "s"}`` wire format).
+
+``repro.core.bfp_dot.bfp_dot`` remains as a thin compatibility shim over
+:func:`gemm`.
+"""
+from repro.core.prequant import is_prequant
+from repro.engine.backends import (available_backends, get_backend,
+                                   register_backend, select_backend)
+from repro.engine.core import gemm, prequantize, prequantize_cnn
+from repro.engine.policy_map import (PolicyLike, PolicyMap, join_path,
+                                     resolve_policy)
+
+__all__ = [
+    "gemm", "prequantize", "prequantize_cnn", "is_prequant",
+    "PolicyMap", "PolicyLike", "resolve_policy", "join_path",
+    "register_backend", "get_backend", "available_backends",
+    "select_backend",
+]

@@ -1,0 +1,124 @@
+"""Backend registry for the BFP GEMM engine (DESIGN.md §7).
+
+One datapath, three executions:
+
+  float     disabled-quant baseline: plain ``x @ w`` (prequant weights are
+            dequantized first) — the paper's floating-point reference.
+  emulated  pure-jnp integer datapath (repro.core.bfp_dot): exact
+            fixed-point MACs in int32, works for every scheme/rounding,
+            differentiable via STE.
+  pallas    fused TPU kernel (repro.kernels): Scheme.TILED only, runs
+            interpret=True off-TPU.  With prequant weights it dispatches
+            the sidecar-consuming kernel variant that skips in-kernel
+            weight quantization entirely.
+
+``select_backend`` honours ``policy.backend`` (or the legacy
+``use_kernel`` flag) but falls back to ``emulated`` when the requested
+backend cannot execute the policy faithfully — e.g. pallas with a paper
+scheme, stochastic rounding, or an int16 prequant mantissa.  This folds
+the previously scattered ``use_kernel`` / ``interpret=not _on_tpu()``
+dispatch decisions into one place.
+
+External backends (future: GPU Triton, int8 XLA dot) register with
+:func:`register_backend`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bfp_dot import bfp_matmul_2d, bfp_matmul_2d_prequant
+from repro.core.bfp import Rounding, Scheme
+from repro.core.policy import BFPPolicy
+from repro.core.prequant import dequantize_prequant, is_prequant
+
+__all__ = ["Backend", "register_backend", "get_backend",
+           "available_backends", "select_backend"]
+
+#: (x2d, w_or_prequant, policy, key) -> out [B, N]
+MatmulFn = Callable[[jax.Array, object, Optional[BFPPolicy],
+                     Optional[jax.Array]], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    name: str
+    matmul: MatmulFn
+    supports: Callable[[BFPPolicy, object], bool]
+
+
+_REGISTRY: Dict[str, Backend] = {}
+
+
+def register_backend(name: str, matmul: MatmulFn,
+                     supports: Optional[Callable] = None) -> None:
+    _REGISTRY[name] = Backend(name, matmul, supports or (lambda pol, w: True))
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown BFP backend {name!r}; available: "
+                       f"{available_backends()}") from None
+
+
+def available_backends():
+    return sorted(_REGISTRY)
+
+
+def select_backend(policy: BFPPolicy, w) -> Backend:
+    """Requested backend if it supports (policy, w); else emulated."""
+    be = get_backend(policy.backend_name)
+    if not be.supports(policy, w):
+        be = _REGISTRY["emulated"]
+    return be
+
+
+# ---------------------------------------------------------------------------
+# Built-in backends
+# ---------------------------------------------------------------------------
+
+def _float_matmul(x2d, w, policy=None, key=None):
+    if is_prequant(w):
+        w = dequantize_prequant(w, x2d.dtype)
+    return x2d @ w
+
+
+def _emulated_matmul(x2d, w, policy, key=None):
+    if is_prequant(w):
+        out = bfp_matmul_2d_prequant(x2d, w["m"], w["s"], policy, key)
+        return out.astype(x2d.dtype)
+    out = bfp_matmul_2d(x2d, w, policy, key)
+    return out.astype(jnp.result_type(x2d.dtype, w.dtype))
+
+
+def _pallas_matmul(x2d, w, policy, key=None):
+    from repro.kernels import ops  # local import: kernels are optional
+    if is_prequant(w):
+        return ops.bfp_matmul_prequant(x2d, w["m"], w["s"], policy)
+    return ops.bfp_matmul(x2d, w, policy)
+
+
+def _pallas_supports(policy: BFPPolicy, w) -> bool:
+    # The fused kernel implements exactly Scheme.TILED with block == K
+    # tile, round-to-nearest, both operands quantized.  Anything else is
+    # the emulated path's job (silent semantic drift is worse than a
+    # fallback; the old use_kernel flag ran TILED math for ANY scheme).
+    if policy.scheme is not Scheme.TILED or policy.block_k is None:
+        return False
+    if policy.rounding is not Rounding.ROUND:
+        return False
+    if not (policy.quantize_weights and policy.quantize_inputs):
+        return False
+    if is_prequant(w) and w["m"].dtype != jnp.int8:
+        return False  # prequant kernel streams int8 mantissas (L_W <= 8)
+    return True
+
+
+register_backend("float", _float_matmul)
+register_backend("emulated", _emulated_matmul)
+register_backend("pallas", _pallas_matmul, _pallas_supports)

@@ -1,0 +1,66 @@
+"""The unified BFP GEMM execution layer (DESIGN.md §7).
+
+Every model GEMM in the repo — CNN convs via im2col, LM linears, MoE
+expert GEMMs, the tied lm_head — lands on :func:`gemm`:
+
+    gemm(x, w, policy, path="blocks/3/c1")
+
+* ``w`` is a float matrix OR the prequant ``{"m", "s"}`` wire format
+  (int8 mantissas + power-of-two scale sidecar); pre-quantized weights
+  are first-class on every backend, so inference quantizes weights ONCE
+  (see ``prequantize`` / ``prequantize_cnn`` and benchmarks/engine_bench).
+* ``policy`` is None (float), a BFPPolicy (uniform), or a PolicyMap
+  (per-layer rules resolved against ``path`` — the paper's Table-3
+  layer-wise assignments as config).
+* the backend registry (float / emulated / pallas) picks the execution,
+  folding in the legacy ``use_kernel`` flag and the CPU-interpret
+  dispatch that used to be scattered across call sites.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+from repro.core.prequant import (is_prequant, quantize_cnn_param_tree,
+                                 quantize_param_tree)
+from repro.engine import backends as BK
+from repro.engine.policy_map import PolicyLike, resolve_policy
+
+__all__ = ["gemm", "prequantize", "prequantize_cnn"]
+
+
+def gemm(x: jax.Array, w: Any, policy: PolicyLike = None, *,
+         path: Optional[str] = None,
+         key: Optional[jax.Array] = None) -> jax.Array:
+    """``x[..., K] @ w[K, N]`` through the policy-selected BFP backend.
+
+    ``w``: float [K, N] or prequant ``{"m": [K, N], "s": [K//bk, N]}``.
+    Leading dims of ``x`` are flattened for the 2-D backends and restored.
+    """
+    pol = resolve_policy(policy, path)
+    n = (w["m"] if is_prequant(w) else w).shape[-1]
+    lead = x.shape[:-1]
+    x2d = x.reshape(-1, x.shape[-1])
+    if pol is None:
+        # registered "float" backend, so re-registering it (instrumented
+        # or accelerated variants) also covers policy-None GEMMs
+        out = BK.get_backend("float").matmul(x2d, w, None, key)
+    else:
+        out = BK.select_backend(pol, w).matmul(x2d, w, pol, key)
+    return out.reshape(*lead, n)
+
+
+def prequantize(params: Any, policy: PolicyLike) -> Any:
+    """Quantize an LM param tree's GEMM weights once (wire format).
+
+    Per-layer maps work: a PolicyMap rule resolving to None keeps that
+    leaf float.  The returned tree feeds the same model code — every
+    backend consumes the wire format directly.
+    """
+    return quantize_param_tree(params, policy)
+
+
+def prequantize_cnn(params: Any, policy: PolicyLike) -> Any:
+    """CNN counterpart of :func:`prequantize` (HWIO convs + dense)."""
+    return quantize_cnn_param_tree(params, policy)

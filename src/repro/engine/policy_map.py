@@ -1,0 +1,109 @@
+"""Per-layer BFP policy resolution — paper Table 3 as configuration.
+
+The paper's layer-wise sweep (first/last layers in float, conv layers at
+one word width, FC layers at another) becomes a :class:`PolicyMap`: an
+ordered list of (regex, policy) rules matched against a LAYER PATH
+("conv1_1", "blocks/3/c1", "attn/wq", "fc", ...).  First match wins; a
+rule whose policy is ``None`` pins that layer to float; unmatched paths
+fall through to ``default``.
+
+Every GEMM-bearing layer accepts ``policy`` as either a plain
+:class:`BFPPolicy` (uniform), a :class:`PolicyMap` (per-layer), or
+``None`` (float) — ``resolve_policy`` collapses all three.  PolicyMap is
+frozen/hashable, so it is safe to close over in jitted functions exactly
+like BFPPolicy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import lru_cache
+from typing import Any, Dict, Optional, Tuple, Union
+
+from repro.core.bfp import Rounding, Scheme
+from repro.core.policy import BFPPolicy
+
+__all__ = ["PolicyMap", "PolicyLike", "resolve_policy", "join_path"]
+
+
+@lru_cache(maxsize=1024)
+def _compiled(pattern: str) -> "re.Pattern[str]":
+    return re.compile(pattern)
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyMap:
+    """Ordered (pattern, policy) rules; first ``re.search`` match wins.
+
+    Example — the paper's Table-3 mixed assignment on a CNN ("first conv
+    and classifier in float, every other conv at L=8, FC at L=6"):
+
+        PolicyMap.of(
+            ("^conv1_1$", None),
+            ("^fc8$", None),
+            (r"^fc", BFPPolicy(l_w=6, l_i=6)),
+            default=BFPPolicy(l_w=8, l_i=8),
+        )
+    """
+
+    rules: Tuple[Tuple[str, Optional[BFPPolicy]], ...] = ()
+    default: Optional[BFPPolicy] = None
+
+    @classmethod
+    def of(cls, *pairs: Tuple[str, Optional[BFPPolicy]],
+           default: Optional[BFPPolicy] = None) -> "PolicyMap":
+        return cls(rules=tuple((str(p), pol) for p, pol in pairs),
+                   default=default)
+
+    def resolve(self, path: Optional[str]) -> Optional[BFPPolicy]:
+        """Policy for ``path`` (None path -> default)."""
+        if path is not None:
+            for pattern, pol in self.rules:
+                if _compiled(pattern).search(path):
+                    return pol
+        return self.default
+
+    def with_default(self, default: Optional[BFPPolicy]) -> "PolicyMap":
+        return dataclasses.replace(self, default=default)
+
+    # -- config (de)serialization -------------------------------------------
+
+    @classmethod
+    def from_dict(cls, cfg: Dict[str, Any]) -> "PolicyMap":
+        """Build from plain data, e.g. loaded from JSON:
+
+            {"rules": [{"pattern": "^stem", "policy": null},
+                       {"pattern": "fc", "policy": {"l_w": 6, "l_i": 6}}],
+             "default": {"l_w": 8, "l_i": 8, "scheme": "tiled",
+                         "block_k": 128}}
+        """
+        def mk(d):
+            if d is None:
+                return None
+            kw = dict(d)
+            if "scheme" in kw:
+                kw["scheme"] = Scheme(kw["scheme"])
+            if "rounding" in kw:
+                kw["rounding"] = Rounding(kw["rounding"])
+            return BFPPolicy(**kw)
+
+        rules = tuple((r["pattern"], mk(r.get("policy")))
+                      for r in cfg.get("rules", ()))
+        return cls(rules=rules, default=mk(cfg.get("default")))
+
+
+PolicyLike = Union[None, BFPPolicy, PolicyMap]
+
+
+def resolve_policy(policy: PolicyLike,
+                   path: Optional[str] = None) -> Optional[BFPPolicy]:
+    """Collapse a PolicyLike to a concrete per-GEMM policy (or None)."""
+    if isinstance(policy, PolicyMap):
+        return policy.resolve(path)
+    return policy
+
+
+def join_path(*parts: Optional[str]) -> Optional[str]:
+    """'/'-join non-empty path components; None if all empty."""
+    ps = [p for p in parts if p]
+    return "/".join(ps) if ps else None

@@ -77,6 +77,16 @@ def _bfp_matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, l_i: int, l_w: int,
         o_ref[...] = acc_ref[...]
 
 
+def _check_tiles(b, k, n, bm, bn, bk, l_sum):
+    if b % bm or n % bn or k % bk:
+        raise ValueError(f"shapes ({b},{k})x({k},{n}) not multiples of "
+                         f"tiles ({bm},{bn},{bk})")
+    # Paper Fig. 2 accumulator sizing: int32 must hold bk products.
+    import math
+    if l_sum + math.ceil(math.log2(bk)) > 32:
+        raise ValueError(f"bk={bk} overflows int32 for L_I+L_W={l_sum}")
+
+
 @functools.partial(jax.jit, static_argnames=("l_i", "l_w", "bm", "bn", "bk",
                                              "interpret"))
 def bfp_matmul_pallas(x: jax.Array, w: jax.Array, *, l_i: int = 8,
@@ -91,13 +101,7 @@ def bfp_matmul_pallas(x: jax.Array, w: jax.Array, *, l_i: int = 8,
     k2, n = w.shape
     if k != k2:
         raise ValueError(f"contraction mismatch {x.shape} @ {w.shape}")
-    if b % bm or n % bn or k % bk:
-        raise ValueError(f"shapes ({b},{k})x({k2},{n}) not multiples of "
-                         f"tiles ({bm},{bn},{bk})")
-    # Paper Fig. 2 accumulator sizing: int32 must hold bk products.
-    import math
-    if l_i + l_w + math.ceil(math.log2(bk)) > 32:
-        raise ValueError(f"bk={bk} overflows int32 for L_I+L_W={l_i + l_w}")
+    _check_tiles(b, k, n, bm, bn, bk, l_i + l_w)
 
     n_k = k // bk
     grid = (b // bm, n // bn, n_k)
@@ -114,3 +118,75 @@ def bfp_matmul_pallas(x: jax.Array, w: jax.Array, *, l_i: int = 8,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(x, w)
+
+
+def _bfp_matmul_prequant_kernel(x_ref, wm_ref, ws_ref, o_ref, acc_ref, *,
+                                l_i: int, n_k: int):
+    """Prequant variant of one (i, j, k) grid step.
+
+    The weight tile arrives ALREADY block-formatted: int8 mantissas
+    (wm_ref) plus this K-tile's power-of-two step row (ws_ref, [1, bn]).
+    Only the activation tile is quantized in-kernel — the weight half of
+    the paper's block-formatting stage moved offline, which also cuts the
+    weight tile's HBM traffic 4x (int8 vs f32).
+    """
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    mx, sx = _block_format(x_ref[...], l_i, axis=1)   # [bm,bk], [bm,1]
+    mw = wm_ref[...].astype(jnp.int32)                # [bk,bn] int8 in HBM
+    part = jax.lax.dot(mx.astype(jnp.int32), mw,
+                       preferred_element_type=jnp.int32)
+    # identical accumulation expression to the fused kernel: ws IS the
+    # same power-of-two step the in-kernel weight quantizer would compute,
+    # so fused and prequant paths agree bit-exactly.
+    acc_ref[...] += part.astype(jnp.float32) * (sx * ws_ref[...])
+
+    @pl.when(k_step == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("l_i", "l_w", "bm", "bn", "bk",
+                                             "interpret"))
+def bfp_matmul_prequant_pallas(x: jax.Array, wm: jax.Array, ws: jax.Array,
+                               *, l_i: int = 8, l_w: int = 8, bm: int = 128,
+                               bn: int = 128, bk: int = 128,
+                               interpret: bool = False) -> jax.Array:
+    """x[B,K] @ prequant weight (int8 mantissa [K,N] + steps [K//bk,N]).
+
+    ``bk`` must equal the prequant block size (K // ws.shape[0]); the BFP
+    block IS the K tile, as in the fused kernel.  ``l_w`` only sizes the
+    overflow check — weight quantization already happened offline.
+    """
+    b, k = x.shape
+    k2, n = wm.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch {x.shape} @ {wm.shape}")
+    if ws.shape != (k // bk, n):
+        raise ValueError(f"scale sidecar {ws.shape} != {(k // bk, n)} "
+                         f"for bk={bk}")
+    if wm.dtype != jnp.int8:
+        raise ValueError(f"prequant kernel streams int8 mantissas, got "
+                         f"{wm.dtype}")
+    _check_tiles(b, k, n, bm, bn, bk, l_i + l_w)
+
+    n_k = k // bk
+    grid = (b // bm, n // bn, n_k)
+    kernel = functools.partial(_bfp_matmul_prequant_kernel, l_i=l_i, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, wm, ws)

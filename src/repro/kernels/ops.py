@@ -4,7 +4,9 @@ Handles shape padding to tile multiples, CPU-interpret dispatch (this
 container has no TPU; ``interpret=True`` runs the kernel body in Python),
 and policy plumbing.  The contract is identical to the emulated path in
 ``repro.core.bfp_dot`` with Scheme.TILED and ``block_k == bk`` — tests
-assert all three (kernel, ref oracle, core library) agree.
+assert all three (kernel, ref oracle, core library) agree.  Model code
+reaches these through ``repro.engine`` (backend "pallas"), never
+directly.
 """
 from __future__ import annotations
 
@@ -14,33 +16,51 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.policy import BFPPolicy
-from repro.kernels.bfp_matmul import bfp_matmul_pallas
+from repro.kernels.bfp_matmul import (bfp_matmul_pallas,
+                                      bfp_matmul_prequant_pallas)
 from repro.kernels.bfp_quantize import bfp_quantize_pallas
 
-__all__ = ["bfp_matmul", "bfp_quantize", "default_tiles"]
+__all__ = ["bfp_matmul", "bfp_matmul_prequant", "bfp_quantize",
+           "default_tiles"]
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _pad_to(x: jax.Array, mult: Tuple[int, ...]) -> jax.Array:
+def _pad_to(x: jax.Array, mult: Tuple[int, ...],
+            values=0.0) -> jax.Array:
     pads = [(0, (-d) % m) for d, m in zip(x.shape, mult)]
     if any(p[1] for p in pads):
-        return jnp.pad(x, pads)
+        return jnp.pad(x, pads, constant_values=values)
     return x
 
 
-def default_tiles(b: int, k: int, n: int,
-                  block_k: Optional[int]) -> Tuple[int, int, int]:
-    """Pick MXU-aligned tile sizes.
+def _pow2_ge(d: int) -> int:
+    """Smallest power of two >= d (d >= 1)."""
+    return 1 << max(0, d - 1).bit_length()
 
-    bm/bn: 128 (MXU dimension) unless the problem is smaller; bk: the BFP
-    block size when given (must be the K tile so block == tile), else 512.
+
+def default_tiles(b: int, k: int, n: int, block_k: Optional[int],
+                  l_sum: int = 16) -> Tuple[int, int, int]:
+    """Pick MXU-aligned tile sizes for a (b, k) x (k, n) problem.
+
+    bm/bn: 128 (the MXU dimension) capped below at 8 and shrunk to the
+    next power of two when the problem dimension is smaller — small or
+    odd shapes pad to the NEAREST aligned tile instead of a full 128.
+    bk: the BFP block size when given (block == K tile by construction);
+    otherwise 512 for deep contractions and 128 for shallow ones, capped
+    by the int32 overflow bound 2**(32 - l_sum) (paper Fig. 2 sizing) so
+    auto-picked tiles are always accumulation-safe for the policy's
+    mantissa widths.
     """
-    bm = min(128, max(8, 1 << (b - 1).bit_length())) if b < 128 else 128
-    bn = min(128, max(128, 0)) if n >= 128 else max(8, 1 << (n - 1).bit_length())
-    bk = block_k or min(512, max(128, 1 << (k - 1).bit_length()) if k < 512 else 512)
+    bm = min(128, max(8, _pow2_ge(b)))
+    bn = min(128, max(8, _pow2_ge(n)))
+    if block_k:
+        bk = block_k
+    else:
+        bk = 512 if k >= 512 else min(128, max(8, _pow2_ge(k)))
+        bk = min(bk, 1 << max(0, 32 - l_sum))   # always accumulation-safe
     return bm, bn, bk
 
 
@@ -55,11 +75,46 @@ def bfp_matmul(x2d: jax.Array, w: jax.Array, policy: BFPPolicy,
         interpret = not _on_tpu()
     b, k = x2d.shape
     n = w.shape[1]
-    bm, bn, bk = default_tiles(b, k, n, policy.block_k)
+    bm, bn, bk = default_tiles(b, k, n, policy.block_k,
+                               policy.l_w + policy.l_i)
     xp = _pad_to(x2d.astype(jnp.float32), (bm, bk))
     wp = _pad_to(w.astype(jnp.float32), (bk, bn))
     out = bfp_matmul_pallas(xp, wp, l_i=policy.l_i, l_w=policy.l_w,
                             bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out[:b, :n]
+
+
+def bfp_matmul_prequant(x2d: jax.Array, wm: jax.Array, ws: jax.Array,
+                        policy: BFPPolicy,
+                        interpret: Optional[bool] = None) -> jax.Array:
+    """x2d[B,K] @ prequant weight via the sidecar-consuming kernel.
+
+    ``wm``: int8 mantissa [K, N]; ``ws``: f32 power-of-two steps
+    [K//bk, N] (core.prequant wire format).  The prequant block size IS
+    the kernel K tile, so K needs no padding (it is a bk multiple by
+    construction); B and N pad to tile multiples.  Scale padding uses 1.0
+    — padded mantissas are zero, so the value is inert but stays finite.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, k = x2d.shape
+    n = wm.shape[1]
+    t = ws.shape[0]
+    if t == 0 or k % t:
+        raise ValueError(f"sidecar {ws.shape} incompatible with K={k}")
+    bk = k // t
+    if policy.block_k not in (None, bk):
+        # same contract as the emulated path: a sidecar blocked at bk
+        # cannot honour a policy asking for different blocks
+        raise ValueError(f"policy.block_k={policy.block_k} != prequant "
+                         f"block {bk}")
+    bm, bn, _ = default_tiles(b, k, n, bk, policy.l_w + policy.l_i)
+    xp = _pad_to(x2d.astype(jnp.float32), (bm, bk))
+    wmp = _pad_to(wm, (bk, bn))
+    wsp = _pad_to(ws.astype(jnp.float32), (1, bn), values=1.0)
+    out = bfp_matmul_prequant_pallas(xp, wmp, wsp, l_i=policy.l_i,
+                                     l_w=policy.l_w, bm=bm, bn=bn, bk=bk,
+                                     interpret=interpret)
     return out[:b, :n]
 
 
@@ -69,7 +124,7 @@ def bfp_quantize(x: jax.Array, bits: int, block_k: int,
     if interpret is None:
         interpret = not _on_tpu()
     m_rows, k = x.shape
-    bm = 256 if m_rows >= 256 else max(8, 1 << (m_rows - 1).bit_length())
+    bm = 256 if m_rows >= 256 else max(8, _pow2_ge(m_rows))
     xp = _pad_to(x.astype(jnp.float32), (bm, block_k))
     m, e = bfp_quantize_pallas(xp, bits=bits, bm=bm, bk=block_k,
                                interpret=interpret)

@@ -7,7 +7,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import BFPPolicy
+from repro.engine import PolicyLike, join_path
 from repro.models.cnn import layers as L
 
 # (name, out_1x1, red_3x3, out_3x3, red_5x5, out_5x5, pool_proj)
@@ -41,14 +41,13 @@ def _inception_init(key, in_ch, cfg, width_mult):
     }, scale(o1) + scale(o3) + scale(o5) + scale(pp)
 
 
-def _inception(p, x, policy):
-    b1 = L.relu(L.conv2d(p["b1"], x, 1, "SAME", policy))
-    b3 = L.relu(L.conv2d(p["b3r"], x, 1, "SAME", policy))
-    b3 = L.relu(L.conv2d(p["b3"], b3, 1, "SAME", policy))
-    b5 = L.relu(L.conv2d(p["b5r"], x, 1, "SAME", policy))
-    b5 = L.relu(L.conv2d(p["b5"], b5, 1, "SAME", policy))
-    bp = L.max_pool(x, 3, 1, "SAME")
-    bp = L.relu(L.conv2d(p["bp"], bp, 1, "SAME", policy))
+def _inception(p, x, policy, path=None):
+    cv = lambda name, inp: L.relu(L.conv2d(p[name], inp, 1, "SAME", policy,
+                                           path=join_path(path, name)))
+    b1 = cv("b1", x)
+    b3 = cv("b3", cv("b3r", x))
+    b5 = cv("b5", cv("b5r", x))
+    bp = cv("bp", L.max_pool(x, 3, 1, "SAME"))
     return jnp.concatenate([b1, b3, b5, bp], axis=-1)
 
 
@@ -62,14 +61,15 @@ def _aux_init(key, in_ch, num_classes, width_mult):
             "fc2": L.dense_init(k3, fc, num_classes)}
 
 
-def _aux(p, x, policy):
+def _aux(p, x, policy, path=None):
     # adaptive 4x4 average pool
     h, w = x.shape[1], x.shape[2]
     x = L.avg_pool(x, h // 4, h // 4) if h >= 4 else x
-    x = L.relu(L.conv2d(p["conv"], x, 1, "SAME", policy))
+    x = L.relu(L.conv2d(p["conv"], x, 1, "SAME", policy,
+                        path=join_path(path, "conv")))
     x = x.reshape(x.shape[0], -1)[:, :p["fc1_in"]]
-    x = L.relu(L.dense(p["fc1"], x, policy))
-    return L.dense(p["fc2"], x, policy)
+    x = L.relu(L.dense(p["fc1"], x, policy, path=join_path(path, "fc1")))
+    return L.dense(p["fc2"], x, policy, path=join_path(path, "fc2"))
 
 
 def init(key, num_classes: int = 1000, in_ch: int = 3,
@@ -96,27 +96,33 @@ def init(key, num_classes: int = 1000, in_ch: int = 3,
     return params
 
 
-def apply(params, x: jax.Array, policy: Optional[BFPPolicy] = None,
+def apply(params, x: jax.Array, policy: PolicyLike = None,
           with_aux: bool = True):
     """Returns (loss3_logits, loss1_logits, loss2_logits) — the paper's
-    three GoogLeNet columns."""
-    x = L.relu(L.conv2d(params["stem1"], x, 2, "SAME", policy))
+    three GoogLeNet columns.  Layer paths: "stem1|stem2r|stem2",
+    "inc<name>/b1|b3r|b3|b5r|b5|bp", "loss1|loss2/conv|fc1|fc2", "fc"."""
+    x = L.relu(L.conv2d(params["stem1"], x, 2, "SAME", policy,
+                        path="stem1"))
     x = L.max_pool(x, 3, 2, "SAME")
-    x = L.relu(L.conv2d(params["stem2r"], x, 1, "SAME", policy))
-    x = L.relu(L.conv2d(params["stem2"], x, 1, "SAME", policy))
+    x = L.relu(L.conv2d(params["stem2r"], x, 1, "SAME", policy,
+                        path="stem2r"))
+    x = L.relu(L.conv2d(params["stem2"], x, 1, "SAME", policy,
+                        path="stem2"))
     x = L.max_pool(x, 3, 2, "SAME")
     aux1 = aux2 = None
     for cfg in _INCEPTION:
         if cfg[0] == "pool":
             x = L.max_pool(x, 3, 2, "SAME")
             continue
-        x = _inception(params[f"inc{cfg[0]}"], x, policy)
+        x = _inception(params[f"inc{cfg[0]}"], x, policy,
+                       path=f"inc{cfg[0]}")
         if with_aux and cfg[0] in _AUX_AFTER:
-            a = _aux(params[_AUX_AFTER[cfg[0]]], x, policy)
+            a = _aux(params[_AUX_AFTER[cfg[0]]], x, policy,
+                     path=_AUX_AFTER[cfg[0]])
             if cfg[0] == "4a":
                 aux1 = a
             else:
                 aux2 = a
     x = L.global_avg_pool(x)
-    main = L.dense(params["fc"], x, policy)
+    main = L.dense(params["fc"], x, policy, path="fc")
     return (main, aux1, aux2) if with_aux else main

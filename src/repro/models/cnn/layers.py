@@ -2,9 +2,13 @@
 
 Convolution is expressed as the paper's matrix form: im2col expands
 receptive fields into rows of an input matrix I, the kernels form W, and
-``O = I @ W`` runs through :func:`repro.core.bfp_dot` — block formatting +
+``O = I @ W`` runs through :func:`repro.engine.gemm` — block formatting +
 fixed-point MAC, exactly the paper's Fig. 2 pipeline.  ``policy=None``
-gives the float reference path.
+gives the float reference path; a ``repro.engine.PolicyMap`` resolves a
+per-layer policy against the layer's ``path`` (paper Table-3 layer-wise
+assignments).  Weights may be pre-quantized to the ``{"m", "s"}`` wire
+format (``repro.engine.prequantize_cnn``): the engine consumes it on
+every backend, so inference skips per-forward weight re-quantization.
 
 Parameters are plain pytrees (dicts); every layer is a pure function.
 """
@@ -15,8 +19,8 @@ from typing import Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.bfp_dot import bfp_dot
-from repro.core.policy import BFPPolicy
+from repro import engine as EG
+from repro.engine import PolicyLike
 
 __all__ = ["conv2d_init", "conv2d", "im2col", "dense_init", "dense",
            "batchnorm_init", "batchnorm", "max_pool", "avg_pool",
@@ -61,14 +65,27 @@ def im2col(x: jax.Array, kh: int, kw: int, stride: int,
 
 
 def conv2d(params, x: jax.Array, stride: int = 1, padding: str = "SAME",
-           policy: Optional[BFPPolicy] = None) -> jax.Array:
-    """BFP convolution via im2col GEMM.  x: NHWC float."""
-    kh, kw, in_ch, out_ch = params["w"].shape
+           policy: PolicyLike = None,
+           path: Optional[str] = None) -> jax.Array:
+    """BFP convolution via im2col GEMM.  x: NHWC float.
+
+    ``params["w"]`` is an HWIO float kernel or its prequant form (int8
+    HWIO mantissa + GEMM-view scale sidecar); for prequant only the cheap
+    int8 transpose into the GEMM view runs per forward — the float
+    quantization happened once, offline.
+    """
+    w = params["w"]
+    prequant = EG.is_prequant(w)
+    kh, kw, in_ch, out_ch = (w["m"] if prequant else w).shape
     cols, (b, oh, ow) = im2col(x, kh, kw, stride, padding)
     # patches come out channel-major (C, kh, kw) -> match weight row order
-    w = jnp.transpose(params["w"], (2, 0, 1, 3)).reshape(
-        in_ch * kh * kw, out_ch)
-    out = bfp_dot(cols, w, policy) + params["b"]
+    if prequant:
+        wmat = {"m": jnp.transpose(w["m"], (2, 0, 1, 3)).reshape(
+            in_ch * kh * kw, out_ch), "s": w["s"]}
+    else:
+        wmat = jnp.transpose(w, (2, 0, 1, 3)).reshape(
+            in_ch * kh * kw, out_ch)
+    out = EG.gemm(cols, wmat, policy, path=path) + params["b"]
     return out.reshape(b, oh, ow, out_ch)
 
 
@@ -82,9 +99,9 @@ def dense_init(key, in_dim: int, out_dim: int):
             "b": jnp.zeros((out_dim,), jnp.float32)}
 
 
-def dense(params, x: jax.Array,
-          policy: Optional[BFPPolicy] = None) -> jax.Array:
-    return bfp_dot(x, params["w"], policy) + params["b"]
+def dense(params, x: jax.Array, policy: PolicyLike = None,
+          path: Optional[str] = None) -> jax.Array:
+    return EG.gemm(x, params["w"], policy, path=path) + params["b"]
 
 
 def batchnorm_init(ch: int):

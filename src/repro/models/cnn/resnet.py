@@ -10,7 +10,7 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import BFPPolicy
+from repro.engine import PolicyLike, join_path
 from repro.models.cnn import layers as L
 
 
@@ -19,8 +19,8 @@ def _conv_bn_init(key, in_ch, out_ch, k):
             "bn": L.batchnorm_init(out_ch)}
 
 
-def _conv_bn(p, x, stride, policy, training, act=True):
-    x = L.conv2d(p["conv"], x, stride, "SAME", policy)
+def _conv_bn(p, x, stride, policy, training, act=True, path=None):
+    x = L.conv2d(p["conv"], x, stride, "SAME", policy, path=path)
     x = L.batchnorm(p["bn"], x, training)
     return L.relu(x) if act else x
 
@@ -34,11 +34,13 @@ def _basic_block_init(key, in_ch, out_ch, stride):
     return p
 
 
-def _basic_block(p, x, stride, policy, training):
-    h = _conv_bn(p["c1"], x, stride, policy, training)
-    h = _conv_bn(p["c2"], h, 1, policy, training, act=False)
-    sc = _conv_bn(p["proj"], x, stride, policy, training, act=False) \
-        if "proj" in p else x
+def _basic_block(p, x, stride, policy, training, path=None):
+    h = _conv_bn(p["c1"], x, stride, policy, training,
+                 path=join_path(path, "c1"))
+    h = _conv_bn(p["c2"], h, 1, policy, training, act=False,
+                 path=join_path(path, "c2"))
+    sc = _conv_bn(p["proj"], x, stride, policy, training, act=False,
+                  path=join_path(path, "proj")) if "proj" in p else x
     return L.relu(h + sc)
 
 
@@ -53,12 +55,15 @@ def _bottleneck_init(key, in_ch, mid_ch, stride):
     return p
 
 
-def _bottleneck(p, x, stride, policy, training):
-    h = _conv_bn(p["c1"], x, 1, policy, training)
-    h = _conv_bn(p["c2"], h, stride, policy, training)
-    h = _conv_bn(p["c3"], h, 1, policy, training, act=False)
-    sc = _conv_bn(p["proj"], x, stride, policy, training, act=False) \
-        if "proj" in p else x
+def _bottleneck(p, x, stride, policy, training, path=None):
+    h = _conv_bn(p["c1"], x, 1, policy, training,
+                 path=join_path(path, "c1"))
+    h = _conv_bn(p["c2"], h, stride, policy, training,
+                 path=join_path(path, "c2"))
+    h = _conv_bn(p["c3"], h, 1, policy, training, act=False,
+                 path=join_path(path, "c3"))
+    sc = _conv_bn(p["proj"], x, stride, policy, training, act=False,
+                  path=join_path(path, "proj")) if "proj" in p else x
     return L.relu(h + sc)
 
 
@@ -93,18 +98,24 @@ def init(key, depth: int = 18, num_classes: int = 1000, in_ch: int = 3,
     return params
 
 
-def apply(params, x: jax.Array, policy: Optional[BFPPolicy] = None,
+def apply(params, x: jax.Array, policy: PolicyLike = None,
           training: bool = False) -> jax.Array:
+    """Layer paths: "stem", "blocks/<i>/c1|c2|c3|proj", "fc" — e.g.
+    PolicyMap.of(("^stem", None), default=BFPPolicy(l_w=8, l_i=8)) is the
+    paper's first-layer-in-float mixed assignment."""
     depth, stage_depths, bottleneck = params["meta"]
-    x = _conv_bn(params["stem"], x, 2, policy, training)
+    x = _conv_bn(params["stem"], x, 2, policy, training, path="stem")
     x = L.max_pool(x, 3, 2, "SAME")
     bi = 0
     for si, nblocks in enumerate(stage_depths):
         for b in range(nblocks):
             stride = 2 if (b == 0 and si > 0) else 1
             blk = params["blocks"][bi]
-            x = (_bottleneck(blk, x, stride, policy, training) if bottleneck
-                 else _basic_block(blk, x, stride, policy, training))
+            bpath = f"blocks/{bi}"
+            x = (_bottleneck(blk, x, stride, policy, training, path=bpath)
+                 if bottleneck
+                 else _basic_block(blk, x, stride, policy, training,
+                                   path=bpath))
             bi += 1
     x = L.global_avg_pool(x)
-    return L.dense(params["fc"], x, policy)
+    return L.dense(params["fc"], x, policy, path="fc")

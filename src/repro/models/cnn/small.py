@@ -3,15 +3,14 @@
 LeNet-5-style for 28x28x1 and CIFAR-quick for 32x32x3; both train to high
 accuracy on the in-repo synthetic datasets in seconds on CPU, which is how
 the Table-3-style accuracy-drop sweeps are produced without ILSVRC12
-(DESIGN.md §8.1)."""
+(DESIGN.md §8.1).  Layer paths ("c1", "c2", ..., "fc1", "fc2") feed
+PolicyMap per-layer rules."""
 from __future__ import annotations
-
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import BFPPolicy
+from repro.engine import PolicyLike
 from repro.models.cnn import layers as L
 
 
@@ -23,14 +22,14 @@ def lenet_init(key, num_classes: int = 10, in_ch: int = 1):
             "fc2": L.dense_init(k[3], 128, num_classes)}
 
 
-def lenet_apply(params, x, policy: Optional[BFPPolicy] = None):
-    x = L.relu(L.conv2d(params["c1"], x, 1, "SAME", policy))
+def lenet_apply(params, x, policy: PolicyLike = None):
+    x = L.relu(L.conv2d(params["c1"], x, 1, "SAME", policy, path="c1"))
     x = L.max_pool(x)
-    x = L.relu(L.conv2d(params["c2"], x, 1, "SAME", policy))
+    x = L.relu(L.conv2d(params["c2"], x, 1, "SAME", policy, path="c2"))
     x = L.max_pool(x)
     x = x.reshape(x.shape[0], -1)
-    x = L.relu(L.dense(params["fc1"], x, policy))
-    return L.dense(params["fc2"], x, policy)
+    x = L.relu(L.dense(params["fc1"], x, policy, path="fc1"))
+    return L.dense(params["fc2"], x, policy, path="fc2")
 
 
 def cifarnet_init(key, num_classes: int = 10, in_ch: int = 3):
@@ -42,13 +41,13 @@ def cifarnet_init(key, num_classes: int = 10, in_ch: int = 3):
             "fc2": L.dense_init(k[4], 256, num_classes)}
 
 
-def cifarnet_apply(params, x, policy: Optional[BFPPolicy] = None):
-    x = L.relu(L.conv2d(params["c1"], x, 1, "SAME", policy))
+def cifarnet_apply(params, x, policy: PolicyLike = None):
+    x = L.relu(L.conv2d(params["c1"], x, 1, "SAME", policy, path="c1"))
     x = L.max_pool(x)
-    x = L.relu(L.conv2d(params["c2"], x, 1, "SAME", policy))
+    x = L.relu(L.conv2d(params["c2"], x, 1, "SAME", policy, path="c2"))
     x = L.max_pool(x)
-    x = L.relu(L.conv2d(params["c3"], x, 1, "SAME", policy))
+    x = L.relu(L.conv2d(params["c3"], x, 1, "SAME", policy, path="c3"))
     x = L.max_pool(x)
     x = x.reshape(x.shape[0], -1)
-    x = L.relu(L.dense(params["fc1"], x, policy))
-    return L.dense(params["fc2"], x, policy)
+    x = L.relu(L.dense(params["fc1"], x, policy, path="fc1"))
+    return L.dense(params["fc2"], x, policy, path="fc2")

@@ -11,7 +11,7 @@ from typing import List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import BFPPolicy
+from repro.engine import PolicyLike
 from repro.models.cnn import layers as L
 
 # (type, *args): ("conv", name, out_ch) stride-1 SAME 3x3 / ("pool",) 2x2
@@ -48,17 +48,20 @@ def init(key, num_classes: int = 1000, in_ch: int = 3,
     return params
 
 
-def apply(params, x: jax.Array, policy: Optional[BFPPolicy] = None
-          ) -> jax.Array:
+def apply(params, x: jax.Array, policy: PolicyLike = None) -> jax.Array:
+    """Layer paths are the plan names ("conv1_1" ... "fc8"), so a
+    PolicyMap rule like ("^conv1_1$", None) pins the first conv to float
+    (paper Table-3 layer-wise experiments)."""
     for name, _ in VGG16_CONV_PLAN:
         if name == "pool":
             x = L.max_pool(x)
         else:
-            x = L.relu(L.conv2d(params[name], x, 1, "SAME", policy))
+            x = L.relu(L.conv2d(params[name], x, 1, "SAME", policy,
+                                path=name))
     x = x.reshape(x.shape[0], -1)
-    x = L.relu(L.dense(params["fc6"], x, policy))
-    x = L.relu(L.dense(params["fc7"], x, policy))
-    return L.dense(params["fc8"], x, policy)
+    x = L.relu(L.dense(params["fc6"], x, policy, path="fc6"))
+    x = L.relu(L.dense(params["fc7"], x, policy, path="fc7"))
+    return L.dense(params["fc8"], x, policy, path="fc8")
 
 
 def conv_names() -> List[str]:

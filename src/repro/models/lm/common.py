@@ -1,9 +1,15 @@
 """Shared transformer components: RMSNorm, RoPE (+M-RoPE), GQA attention
 (full / sliding-window, train + KV-cache decode), SwiGLU FFN.
 
-Every linear routes through ``repro.core.bfp_dot`` so the paper's BFP
-datapath applies uniformly (DESIGN.md §3); ``policy=None`` is float.
-Activations carry logical sharding annotations (repro.dist.sharding).
+Every linear routes through ``repro.engine.gemm`` so the paper's BFP
+datapath applies uniformly (DESIGN.md §3); ``policy=None`` is float, and
+a ``repro.engine.PolicyMap`` resolves per-component policies against the
+layer ``path`` ("attn/wq", "ffn/w1", ...).  Pre-quantized weights (the
+``{"m", "s"}`` wire format from ``repro.engine.prequantize``) pass to
+the engine AS-IS: the int8 mantissas + scale sidecar feed the integer
+datapath directly instead of being dequantized and re-quantized per
+forward.  Activations carry logical sharding annotations
+(repro.dist.sharding).
 """
 from __future__ import annotations
 
@@ -13,16 +19,16 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import engine as EG
 from repro.configs.base import LMConfig
-from repro.core.bfp_dot import bfp_dot
-from repro.core.policy import BFPPolicy
 from repro.dist.sharding import shard
+from repro.engine import PolicyLike, join_path
 
 __all__ = ["rmsnorm", "rmsnorm_init", "rope", "mrope", "attention_init",
            "attention", "attention_decode", "swiglu_init", "swiglu",
            "linear_init", "linear", "embed_init"]
 
-Policy = Optional[BFPPolicy]
+Policy = PolicyLike
 
 
 def _init(key, shape, fan_in):
@@ -37,19 +43,12 @@ def linear_init(key, d_in: int, d_out: int, bias: bool = False):
     return p
 
 
-def linear(p, x: jax.Array, policy: Policy = None) -> jax.Array:
+def linear(p, x: jax.Array, policy: Policy = None,
+           path: Optional[str] = None) -> jax.Array:
     w = p["w"]
-    if isinstance(w, dict) and "m" in w:
-        # BFP wire format (core.prequant): int8 mantissas + per-(K-tile,
-        # col) power-of-two scales.  HBM/ICI move the int8 payload; the
-        # dequantized operand is a transient fused into the matmul.
-        m, sc = w["m"], w["s"]
-        bk = m.shape[-2] // sc.shape[-2]
-        s_full = jnp.repeat(sc, bk, axis=-2).astype(x.dtype)
-        w = m.astype(x.dtype) * s_full
-    else:
+    if not EG.is_prequant(w):
         w = w.astype(x.dtype)        # params fp32, compute in x.dtype
-    y = bfp_dot(x, w, policy)
+    y = EG.gemm(x, w, policy, path=path)
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
     return y
@@ -133,12 +132,15 @@ def attention_init(key, cfg: LMConfig, cross: bool = False):
     }
 
 
-def _qkv(p, cfg: LMConfig, x, xkv, policy: Policy):
+def _qkv(p, cfg: LMConfig, x, xkv, policy: Policy, path=None):
     b, s = x.shape[0], x.shape[1]
     skv = xkv.shape[1]
-    q = linear(p["wq"], x, policy).reshape(b, s, cfg.n_heads, cfg.dh)
-    k = linear(p["wk"], xkv, policy).reshape(b, skv, cfg.n_kv_heads, cfg.dh)
-    v = linear(p["wv"], xkv, policy).reshape(b, skv, cfg.n_kv_heads, cfg.dh)
+    q = linear(p["wq"], x, policy,
+               join_path(path, "wq")).reshape(b, s, cfg.n_heads, cfg.dh)
+    k = linear(p["wk"], xkv, policy,
+               join_path(path, "wk")).reshape(b, skv, cfg.n_kv_heads, cfg.dh)
+    v = linear(p["wv"], xkv, policy,
+               join_path(path, "wv")).reshape(b, skv, cfg.n_kv_heads, cfg.dh)
     q = shard(q, "batch", "seq", "heads", None)
     k = shard(k, "batch", "seq", "kv_heads", None)
     v = shard(v, "batch", "seq", "kv_heads", None)
@@ -242,7 +244,8 @@ def _causal_mask(s: int, window: Optional[int]) -> jax.Array:
 def attention(p, cfg: LMConfig, x: jax.Array, positions: jax.Array,
               policy: Policy = None,
               xkv: Optional[jax.Array] = None,
-              causal: bool = True) -> jax.Array:
+              causal: bool = True,
+              path: Optional[str] = None) -> jax.Array:
     """Full-sequence attention (training / prefill).
 
     Sliding-window attention uses chunked computation: queries in chunks of
@@ -251,7 +254,7 @@ def attention(p, cfg: LMConfig, x: jax.Array, positions: jax.Array,
     """
     cross = xkv is not None
     xkv = x if xkv is None else xkv
-    q, k, v = _qkv(p, cfg, x, xkv, policy)
+    q, k, v = _qkv(p, cfg, x, xkv, policy, path)
     if not cross:
         q = _apply_rope(cfg, q, positions)
         k = _apply_rope(cfg, k, positions)
@@ -269,7 +272,8 @@ def attention(p, cfg: LMConfig, x: jax.Array, positions: jax.Array,
         out = _sdpa(q, k, v, cfg, mask)
     out = shard(out, "batch", "seq", "heads", None)
     b = x.shape[0]
-    return linear(p["wo"], out.reshape(b, s, -1), policy)
+    return linear(p["wo"], out.reshape(b, s, -1), policy,
+                  join_path(path, "wo"))
 
 
 def _swa_chunked(q, k, v, cfg: LMConfig, w: int) -> jax.Array:
@@ -304,7 +308,8 @@ def _swa_chunked(q, k, v, cfg: LMConfig, w: int) -> jax.Array:
 
 def attention_decode(p, cfg: LMConfig, x: jax.Array, pos: jax.Array,
                      kcache: jax.Array, vcache: jax.Array,
-                     policy: Policy = None
+                     policy: Policy = None,
+                     path: Optional[str] = None
                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Single-token decode with KV cache.
 
@@ -314,9 +319,12 @@ def attention_decode(p, cfg: LMConfig, x: jax.Array, pos: jax.Array,
     """
     b = x.shape[0]
     t = kcache.shape[1]
-    q = linear(p["wq"], x, policy).reshape(b, 1, cfg.n_heads, cfg.dh)
-    k = linear(p["wk"], x, policy).reshape(b, 1, cfg.n_kv_heads, cfg.dh)
-    v = linear(p["wv"], x, policy).reshape(b, 1, cfg.n_kv_heads, cfg.dh)
+    q = linear(p["wq"], x, policy,
+               join_path(path, "wq")).reshape(b, 1, cfg.n_heads, cfg.dh)
+    k = linear(p["wk"], x, policy,
+               join_path(path, "wk")).reshape(b, 1, cfg.n_kv_heads, cfg.dh)
+    v = linear(p["wv"], x, policy,
+               join_path(path, "wv")).reshape(b, 1, cfg.n_kv_heads, cfg.dh)
     positions = jnp.broadcast_to(pos[None], (b, 1)) \
         if pos.ndim == 0 else pos.reshape(b, 1)
     q = _apply_rope(cfg, q, positions)
@@ -333,7 +341,8 @@ def attention_decode(p, cfg: LMConfig, x: jax.Array, pos: jax.Array,
     valid = idx < written
     mask = valid[None, None, None, None, :]        # [1,1,1,1,T]
     out = _sdpa(q, kcache.astype(q.dtype), vcache.astype(q.dtype), cfg, mask)
-    return linear(p["wo"], out.reshape(b, 1, -1), policy), kcache, vcache
+    return (linear(p["wo"], out.reshape(b, 1, -1), policy,
+                   join_path(path, "wo")), kcache, vcache)
 
 
 # ---------------------------------------------------------------------------
@@ -347,7 +356,9 @@ def swiglu_init(key, d: int, f: int):
             "w2": linear_init(k3, f, d)}    # down
 
 
-def swiglu(p, x: jax.Array, policy: Policy = None) -> jax.Array:
-    h = jax.nn.silu(linear(p["w1"], x, policy)) * linear(p["w3"], x, policy)
+def swiglu(p, x: jax.Array, policy: Policy = None,
+           path: Optional[str] = None) -> jax.Array:
+    h = jax.nn.silu(linear(p["w1"], x, policy, join_path(path, "w1"))) \
+        * linear(p["w3"], x, policy, join_path(path, "w3"))
     h = shard(h, "batch", "seq", "ffn")
-    return linear(p["w2"], h, policy)
+    return linear(p["w2"], h, policy, join_path(path, "w2"))

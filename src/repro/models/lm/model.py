@@ -26,16 +26,15 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import engine as EG
 from repro.configs.base import LMConfig
-from repro.core.bfp_dot import bfp_dot
-from repro.core.policy import BFPPolicy
 from repro.dist.sharding import shard
 from repro.models.lm import common as C
 from repro.models.lm import griffin as G
 from repro.models.lm import moe as M
 from repro.models.lm import rwkv6 as R
 
-Policy = Optional[BFPPolicy]
+Policy = EG.PolicyLike
 
 
 # ---------------------------------------------------------------------------
@@ -55,14 +54,18 @@ def _attn_block_init(key, cfg: LMConfig, cross: bool = False):
 
 
 def _attn_block(p, cfg, x, positions, policy, enc=None):
+    # Layers run under lax.scan (one trace for the whole stack), so paths
+    # name COMPONENTS ("attn/wq", "ffn/w1"), not layer indices — PolicyMap
+    # rules act per component class across all layers.
     h = C.attention(p["attn"], cfg, C.rmsnorm(p["ln1"], x, cfg.norm_eps),
-                    positions, policy)
+                    positions, policy, path="attn")
     x = x + h
     if enc is not None:
         h = C.attention(p["xattn"], cfg, C.rmsnorm(p["lnx"], x, cfg.norm_eps),
-                        positions, policy, xkv=enc)
+                        positions, policy, xkv=enc, path="xattn")
         x = x + h
-    x = x + C.swiglu(p["ffn"], C.rmsnorm(p["ln2"], x, cfg.norm_eps), policy)
+    x = x + C.swiglu(p["ffn"], C.rmsnorm(p["ln2"], x, cfg.norm_eps), policy,
+                     path="ffn")
     return shard(x, "batch", "seq_res", "embed")
 
 
@@ -76,7 +79,7 @@ def _moe_block_init(key, cfg: LMConfig):
 
 def _moe_block(p, cfg, x, positions, policy):
     x = x + C.attention(p["attn"], cfg, C.rmsnorm(p["ln1"], x, cfg.norm_eps),
-                        positions, policy)
+                        positions, policy, path="attn")
     y, aux = M.moe_apply(p["moe"], cfg, C.rmsnorm(p["ln2"], x, cfg.norm_eps),
                          policy)
     return shard(x + y, "batch", "seq_res", "embed"), aux
@@ -113,7 +116,8 @@ def _rec_block(p, cfg, x, policy, state=None):
                                  C.rmsnorm(p["ln1"], x, cfg.norm_eps),
                                  state, policy)
     x = x + y
-    x = x + C.swiglu(p["ffn"], C.rmsnorm(p["ln2"], x, cfg.norm_eps), policy)
+    x = x + C.swiglu(p["ffn"], C.rmsnorm(p["ln2"], x, cfg.norm_eps), policy,
+                     path="ffn")
     return shard(x, "batch", "seq_res", "embed"), new_state
 
 
@@ -220,9 +224,10 @@ def _embed(params, cfg: LMConfig, tokens: jax.Array) -> jax.Array:
 def _unembed(params, cfg: LMConfig, x: jax.Array, policy: Policy):
     x = C.rmsnorm(params["ln_f"], x, cfg.norm_eps)
     if cfg.tie_embeddings:
-        logits = bfp_dot(x, params["embed"]["e"].T.astype(x.dtype), policy)
+        logits = EG.gemm(x, params["embed"]["e"].T.astype(x.dtype), policy,
+                         path="lm_head")
     else:
-        logits = C.linear(params["lm_head"], x, policy)
+        logits = C.linear(params["lm_head"], x, policy, path="lm_head")
     return shard(logits, "batch", "seq", "vocab")
 
 
@@ -252,9 +257,10 @@ def forward(params, cfg: LMConfig, tokens: jax.Array,
         def enc_layer(h, lp):
             h = C.attention(lp["attn"], cfg,
                             C.rmsnorm(lp["ln1"], h, cfg.norm_eps),
-                            enc_pos, policy, causal=False) + h
+                            enc_pos, policy, causal=False,
+                            path="enc/attn") + h
             h = h + C.swiglu(lp["ffn"], C.rmsnorm(lp["ln2"], h, cfg.norm_eps),
-                             policy)
+                             policy, path="enc/ffn")
             return shard(h, "batch", "seq_res", "embed"), None
 
         enc = _loop(enc_layer, enc, params["enc"], cfg.analysis_unroll)
@@ -348,14 +354,14 @@ def decode_step(params, cfg: LMConfig, cache, tokens: jax.Array,
             lp, kc, vc = xs
             y, k2, v2 = C.attention_decode(
                 lp["attn"], cfg, C.rmsnorm(lp["ln1"], h, cfg.norm_eps), pos,
-                kc, vc, policy)
+                kc, vc, policy, path="attn")
             h = h + y
             h = h + C.attention(lp["xattn"], cfg,
                                 C.rmsnorm(lp["lnx"], h, cfg.norm_eps),
                                 jnp.full((b, 1), pos, jnp.int32), policy,
-                                xkv=enc)
+                                xkv=enc, path="xattn")
             h = h + C.swiglu(lp["ffn"], C.rmsnorm(lp["ln2"], h, cfg.norm_eps),
-                             policy)
+                             policy, path="ffn")
             return h, (k2, v2)
 
         x, (ks, vs) = _loop_ys(
@@ -387,7 +393,7 @@ def decode_step(params, cfg: LMConfig, cache, tokens: jax.Array,
                 st, policy)
             h = h + y
             h = h + C.swiglu(lp["ffn"], C.rmsnorm(lp["ln2"], h, cfg.norm_eps),
-                             policy)
+                             policy, path="ffn")
             return h, st2
 
         def period(h, xs):
@@ -397,11 +403,11 @@ def decode_step(params, cfg: LMConfig, cache, tokens: jax.Array,
             y, k2, v2 = C.attention_decode(
                 lp["attn"]["attn"], cfg,
                 C.rmsnorm(lp["attn"]["ln1"], h, cfg.norm_eps), pos, kc, vc,
-                policy)
+                policy, path="attn")
             h = h + y
             h = h + C.swiglu(lp["attn"]["ffn"],
                              C.rmsnorm(lp["attn"]["ln2"], h, cfg.norm_eps),
-                             policy)
+                             policy, path="ffn")
             return h, (r1h2, r1x2, r2h2, r2x2, k2, v2)
 
         x, (r1h, r1x, r2h, r2x, ks, vs) = _loop_ys(
@@ -427,14 +433,14 @@ def decode_step(params, cfg: LMConfig, cache, tokens: jax.Array,
         lp, kc, vc = xs
         y, k2, v2 = C.attention_decode(
             lp["attn"], cfg, C.rmsnorm(lp["ln1"], h, cfg.norm_eps), pos,
-            kc, vc, policy)
+            kc, vc, policy, path="attn")
         h = h + y
         if cfg.is_moe:
             y, _ = M.moe_apply(lp["moe"], cfg,
                                C.rmsnorm(lp["ln2"], h, cfg.norm_eps), policy)
         else:
             y = C.swiglu(lp["ffn"], C.rmsnorm(lp["ln2"], h, cfg.norm_eps),
-                         policy)
+                         policy, path="ffn")
         return h + y, (k2, v2)
 
     x, (ks, vs) = _loop_ys(layer, x,
@@ -452,9 +458,9 @@ def prefill_encoder(params, cfg: LMConfig, enc_feats: jax.Array,
 
     def enc_layer(h, lp):
         h = C.attention(lp["attn"], cfg, C.rmsnorm(lp["ln1"], h, cfg.norm_eps),
-                        enc_pos, policy, causal=False) + h
+                        enc_pos, policy, causal=False, path="enc/attn") + h
         h = h + C.swiglu(lp["ffn"], C.rmsnorm(lp["ln2"], h, cfg.norm_eps),
-                         policy)
+                         policy, path="enc/ffn")
         return h, None
 
     enc, _ = jax.lax.scan(enc_layer, enc_feats, params["enc"])

@@ -21,13 +21,13 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import engine as EG
 from repro.configs.base import LMConfig
-from repro.core.bfp_dot import bfp_dot
-from repro.core.policy import BFPPolicy
+from repro.core.prequant import dequantize_prequant, is_prequant
 from repro.dist.sharding import shard
 from repro.models.lm.common import linear_init
 
-Policy = Optional[BFPPolicy]
+Policy = EG.PolicyLike
 
 
 def moe_init(key, cfg: LMConfig):
@@ -42,25 +42,41 @@ def moe_init(key, cfg: LMConfig):
     }
 
 
-def _expert_gemm(xe: jax.Array, we: jax.Array, policy: Policy) -> jax.Array:
-    """[E, C, d_in] x [E, d_in, d_out] -> [E, C, d_out], BFP per expert."""
+def _expert_gemm(xe: jax.Array, we, policy) -> jax.Array:
+    """[E, C, d_in] x [E, d_in, d_out] -> [E, C, d_out], BFP per expert.
+
+    ``policy`` is a concrete BFPPolicy or None here (moe_apply resolves
+    PolicyMaps first).  ``we`` may be the prequant wire format with a
+    leading expert dim ({"m": [E, d_in, d_out], "s": [E, d_in/bk,
+    d_out]}); the vmapped emulated datapath consumes the sidecar directly.
+    """
     if policy is None:
+        if is_prequant(we):
+            return jnp.einsum("ecd,edf->ecf", xe,
+                              dequantize_prequant(we, xe.dtype))
         return jnp.einsum("ecd,edf->ecf", xe, we.astype(xe.dtype))
     # vmap the BFP GEMM over experts: each expert's matrix gets its own
     # block exponents (same contract as a dense layer).
-    from repro.core.bfp_dot import bfp_matmul_2d
+    from repro.core.bfp_dot import bfp_matmul_2d, bfp_matmul_2d_prequant
+    if is_prequant(we):
+        return jax.vmap(
+            lambda a, m, s: bfp_matmul_2d_prequant(a, m, s, policy)
+        )(xe, we["m"], we["s"])
     return jax.vmap(lambda a, w: bfp_matmul_2d(a, w, policy))(xe, we)
 
 
 def moe_apply(p, cfg: LMConfig, x: jax.Array, policy: Policy = None
               ) -> Tuple[jax.Array, jax.Array]:
     """x: [B, S, D] -> (out [B, S, D], aux_loss scalar)."""
+    # Resolve per-layer maps once for the expert GEMMs (path "moe"); the
+    # router always runs in float regardless of policy.
+    policy = EG.resolve_policy(policy, "moe")
     b, s, d = x.shape
     e, k = cfg.n_experts, cfg.top_k
     t = b * s
     xt = x.reshape(t, d)
 
-    logits = bfp_dot(xt, p["router"]["w"], None)        # router in float
+    logits = EG.gemm(xt, p["router"]["w"], None)        # router in float
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)   # [T, E]
     gate_vals, expert_ids = jax.lax.top_k(probs, k)               # [T, K]
     gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)

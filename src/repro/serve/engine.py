@@ -4,9 +4,12 @@
 temperature sampling.  ``ServeEngine`` adds continuous-batching-lite: a
 slot table where finished sequences are replaced by queued requests
 between decode steps (the Python driver swaps rows; the jitted step is
-shape-stable), plus optional BFP weight pre-quantization — the paper's
-deployment mode, where weights live in HBM as int8 mantissas + exponent
-sidecars and every GEMM runs the fixed-point datapath.
+shape-stable), plus BFP weight pre-quantization (``prequant=`` or an
+already-converted param tree) — the paper's deployment mode, where
+weights live in HBM as int8 mantissas + exponent sidecars, every GEMM
+runs the fixed-point datapath, and quantization happens ONCE at engine
+construction, not per decode step (benchmarks/engine_bench.py measures
+the difference).  ``policy`` may be a per-layer ``repro.engine.PolicyMap``.
 """
 from __future__ import annotations
 
@@ -16,15 +19,16 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import engine as EG
 from repro.configs.base import LMConfig
-from repro.core.policy import BFPPolicy
+from repro.engine import PolicyLike
 from repro.models.lm import model as Mdl
 
 __all__ = ["prefill", "generate", "ServeEngine", "Request"]
 
 
 def prefill(params, cfg: LMConfig, tokens: jax.Array, cache,
-            policy: Optional[BFPPolicy] = None,
+            policy: PolicyLike = None,
             enc_feats: Optional[jax.Array] = None):
     """Sequential prefill through decode_step (state-correct for every
     family).  tokens: [B, S_prompt].  Returns (cache, last_logits)."""
@@ -48,7 +52,7 @@ def prefill(params, cfg: LMConfig, tokens: jax.Array, cache,
 
 
 def generate(params, cfg: LMConfig, prompt: jax.Array, max_new: int,
-             policy: Optional[BFPPolicy] = None, temperature: float = 0.0,
+             policy: PolicyLike = None, temperature: float = 0.0,
              key: Optional[jax.Array] = None,
              enc_feats: Optional[jax.Array] = None,
              max_len: Optional[int] = None) -> jax.Array:
@@ -102,7 +106,12 @@ class ServeEngine:
 
     def __init__(self, params, cfg: LMConfig, slots: int = 4,
                  max_len: int = 512,
-                 policy: Optional[BFPPolicy] = None):
+                 policy: PolicyLike = None,
+                 prequant: PolicyLike = None):
+        if prequant is not None:
+            # cached pre-quantized weights: block-format once here, serve
+            # the int8+scale wire format on every subsequent GEMM
+            params = EG.prequantize(params, prequant)
         self.params, self.cfg, self.policy = params, cfg, policy
         self.slots = slots
         self.max_len = max_len

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import LMConfig
-from repro.core.policy import BFPPolicy
+from repro.engine import PolicyLike
 from repro.models.lm import model as Mdl
 from repro.optim import optimizers as opt
 
@@ -56,13 +56,15 @@ def make_train_step(
     lr_schedule: Callable = None,
     grad_accum: int = 1,
     max_grad_norm: float = 1.0,
-    policy: Optional[BFPPolicy] = None,
+    policy: PolicyLike = None,
     weight_decay: float = 0.1,
     grad_transform: Optional[Callable[[Any], Any]] = None,
 ) -> Callable[[TrainState, Tuple[jax.Array, jax.Array]],
               Tuple[TrainState, Dict[str, jax.Array]]]:
     """Build the train step.
 
+    policy: None / BFPPolicy / repro.engine.PolicyMap — BFP-QAT with a
+    uniform or per-layer datapath assignment.
     grad_transform: optional hook applied to the accumulated grads BEFORE
     the optimizer — used for BFP gradient compression (dist.compress).
     """

@@ -1,0 +1,64 @@
+"""Deterministic fallback for the optional ``hypothesis`` dependency.
+
+The property tests prefer real hypothesis (``pip install -e .[test]``).
+In minimal containers without it, this stub runs each property over a
+fixed pseudo-random sample set (seeded, reproducible) so the properties
+still execute instead of the whole module failing collection.  It covers
+only the tiny strategy surface the suite uses: ``integers`` and
+``sampled_from``.
+"""
+from __future__ import annotations
+
+import functools
+import random
+
+_DEFAULT_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def sample(self, rng: random.Random):
+        return self._sample(rng)
+
+
+class strategies:  # noqa: N801 - mirrors the hypothesis module name
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 1 << 30) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        items = list(seq)
+        return _Strategy(lambda rng: rng.choice(items))
+
+
+def settings(**kwargs):
+    max_examples = kwargs.get("max_examples", _DEFAULT_EXAMPLES)
+
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        # NOT functools.wraps: pytest must see a zero-arg signature, not
+        # the wrapped one (drawn arguments are not fixtures).
+        def wrapper():
+            n = min(getattr(wrapper, "_stub_max_examples",
+                            _DEFAULT_EXAMPLES), _DEFAULT_EXAMPLES)
+            rng = random.Random(0)
+            for _ in range(n):
+                drawn = {k: s.sample(rng) for k, s in strats.items()}
+                fn(**drawn)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco

@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal container: deterministic fallback sampler
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core import bfp
 from repro.core.bfp import Rounding, Scheme

@@ -1,0 +1,365 @@
+"""The unified BFP GEMM engine: backend agreement, per-layer PolicyMap
+resolution end-to-end, and first-class pre-quantized weights.
+
+Key contracts (ISSUE 1 acceptance):
+  * emulated and pallas backends agree (bit-level) for Scheme.TILED;
+  * prequant weights through the engine are BIT-EXACT vs quantize_weights
+    + the emulated path, and vs the fused Pallas kernel;
+  * a PolicyMap reproduces a mixed per-layer assignment (first conv in
+    float, rest at L=8) through a ResNet-18 forward pass.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine as EG
+from repro.core import BFPPolicy, Scheme
+from repro.core.bfp_dot import bfp_matmul_2d
+from repro.core.prequant import dequantize_prequant, prequant_leaf
+from repro.engine import PolicyMap
+from repro.models.cnn import layers as L, resnet, small
+
+KEY = jax.random.PRNGKey(0)
+TILED = BFPPolicy(scheme=Scheme.TILED, block_k=128, straight_through=False)
+EQ4 = BFPPolicy(straight_through=False)
+
+
+def _xw(b=64, k=384, n=48, xs=2.0, wscale=0.1):
+    x = jax.random.normal(KEY, (b, k)) * xs
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * wscale
+    return x, w
+
+
+# ---------------------------------------------------------------------------
+# backend registry
+# ---------------------------------------------------------------------------
+
+def test_backends_registered():
+    assert {"float", "emulated", "pallas"} <= set(EG.available_backends())
+
+
+def test_unknown_backend_rejected():
+    x, w = _xw()
+    with pytest.raises(KeyError, match="unknown BFP backend"):
+        EG.gemm(x, w, TILED.with_(backend="cuda"))
+
+
+def test_float_backend_is_plain_dot():
+    x, w = _xw()
+    np.testing.assert_array_equal(np.asarray(EG.gemm(x, w, None)),
+                                  np.asarray(x @ w))
+    # backend="float" ignores quantization entirely (disabled-quant base)
+    np.testing.assert_array_equal(
+        np.asarray(EG.gemm(x, w, TILED.with_(backend="float"))),
+        np.asarray(x @ w))
+
+
+def test_emulated_matches_legacy_core():
+    x, w = _xw()
+    for pol in (EQ4, TILED):
+        np.testing.assert_array_equal(
+            np.asarray(EG.gemm(x, w, pol)),
+            np.asarray(bfp_matmul_2d(x, w, pol)))
+
+
+def test_pallas_fallback_on_unsupported_scheme():
+    """Requesting pallas with a paper scheme must NOT silently run TILED
+    math (the old use_kernel behaviour); it falls back to emulated EQ4."""
+    x, w = _xw()
+    out = EG.gemm(x, w, EQ4.with_(backend="pallas"))
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(EG.gemm(x, w, EQ4)))
+
+
+def test_use_kernel_compat_flag():
+    x, w = _xw(128, 256, 128)
+    pol = TILED.with_(use_kernel=True)
+    np.testing.assert_array_equal(
+        np.asarray(EG.gemm(x, w, pol)),
+        np.asarray(EG.gemm(x, w, TILED.with_(backend="pallas"))))
+
+
+# ---------------------------------------------------------------------------
+# cross-backend agreement (acceptance: identical outputs for Scheme.TILED)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,k,n", [(64, 256, 32), (100, 384, 70),
+                                   (8, 128, 8)])
+def test_emulated_pallas_agree_tiled(b, k, n):
+    x, w = _xw(b, k, n)
+    out_em = EG.gemm(x, w, TILED)
+    out_pl = EG.gemm(x, w, TILED.with_(backend="pallas"))
+    np.testing.assert_array_equal(np.asarray(out_em), np.asarray(out_pl))
+
+
+# ---------------------------------------------------------------------------
+# pre-quantized weights: bit-exact on every path
+# ---------------------------------------------------------------------------
+
+def test_prequant_emulated_bitexact_tiled():
+    x, w = _xw()
+    pq = prequant_leaf(w, TILED)
+    assert EG.is_prequant(pq) and pq["m"].dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(EG.gemm(x, pq, TILED)),
+                                  np.asarray(EG.gemm(x, w, TILED)))
+
+
+def test_prequant_pallas_bitexact_tiled():
+    x, w = _xw(100, 384, 70)
+    pq = prequant_leaf(w, TILED)
+    np.testing.assert_array_equal(
+        np.asarray(EG.gemm(x, pq, TILED.with_(backend="pallas"))),
+        np.asarray(EG.gemm(x, w, TILED.with_(backend="pallas"))))
+
+
+def test_prequant_emulated_bitexact_eq4():
+    """block_k=None sidecar == per-column blocks == eq. (4) weights."""
+    x, w = _xw()
+    pq = prequant_leaf(w, EQ4)
+    assert pq["s"].shape == (1, w.shape[1])
+    np.testing.assert_array_equal(np.asarray(EG.gemm(x, pq, EQ4)),
+                                  np.asarray(EG.gemm(x, w, EQ4)))
+
+
+def test_prequant_float_path_dequantizes():
+    x, w = _xw()
+    pq = prequant_leaf(w, TILED)
+    np.testing.assert_allclose(
+        np.asarray(EG.gemm(x, pq, None)),
+        np.asarray(x @ dequantize_prequant(pq)), rtol=1e-6, atol=1e-6)
+
+
+def test_prequant_block_mismatch_rejected():
+    x, w = _xw()
+    pq = prequant_leaf(w, TILED)  # bk=128 sidecar
+    with pytest.raises(ValueError, match="block"):
+        EG.gemm(x, pq, TILED.with_(block_k=64))
+
+
+def test_prequant_int16_falls_back_to_emulated():
+    """L_W > 8 mantissas cannot stream through the int8 kernel; the
+    engine must fall back to the (still bit-exact) emulated path."""
+    x, w = _xw()
+    pol = TILED.with_(l_w=12, l_i=8)
+    pq = prequant_leaf(w, pol)
+    assert pq["m"].dtype == jnp.int16
+    np.testing.assert_array_equal(
+        np.asarray(EG.gemm(x, pq, pol.with_(backend="pallas"))),
+        np.asarray(EG.gemm(x, w, pol)))
+
+
+# ---------------------------------------------------------------------------
+# PolicyMap: per-layer policies (paper Table 3 as config)
+# ---------------------------------------------------------------------------
+
+def test_policy_map_resolution_order():
+    p8, p6 = BFPPolicy(l_w=8, l_i=8), BFPPolicy(l_w=6, l_i=6)
+    pm = PolicyMap.of(("^stem", None), (r"blocks/\d+/c1", p6), default=p8)
+    assert pm.resolve("stem") is None
+    assert pm.resolve("stem/conv") is None
+    assert pm.resolve("blocks/3/c1") == p6
+    assert pm.resolve("blocks/3/c2") == p8
+    assert pm.resolve("fc") == p8
+    assert pm.resolve(None) == p8          # no path -> default
+    assert EG.resolve_policy(pm, "stem") is None
+    assert EG.resolve_policy(p6, "anything") == p6
+    assert EG.resolve_policy(None, "anything") is None
+
+
+def test_policy_map_from_dict_roundtrip():
+    pm = PolicyMap.from_dict({
+        "rules": [{"pattern": "^stem", "policy": None},
+                  {"pattern": "fc", "policy": {"l_w": 6, "l_i": 6}}],
+        "default": {"l_w": 8, "l_i": 8, "scheme": "tiled", "block_k": 128},
+    })
+    assert pm.resolve("stem") is None
+    assert pm.resolve("fc").l_w == 6
+    assert pm.resolve("blocks/0/c1").scheme is Scheme.TILED
+
+
+def test_policy_map_is_hashable_and_jit_safe():
+    pm = PolicyMap.of(("c1", None), default=EQ4)
+    hash(pm)
+    x = jax.random.normal(KEY, (2, 28, 28, 1))
+    params = small.lenet_init(KEY)
+    jitted = jax.jit(lambda p, x: small.lenet_apply(p, x, pm))
+    out = jitted(params, x)
+    assert out.shape == (2, 10)
+
+
+def test_policy_map_all_float_equals_none():
+    params = resnet.init(KEY, 18, 10, width_mult=0.25)
+    x = jax.random.normal(KEY, (2, 32, 32, 3))
+    pm = PolicyMap(default=None)
+    np.testing.assert_array_equal(np.asarray(resnet.apply(params, x, pm)),
+                                  np.asarray(resnet.apply(params, x, None)))
+
+
+def test_policy_map_uniform_equals_plain_policy():
+    params = small.lenet_init(KEY)
+    x = jax.random.normal(KEY, (2, 28, 28, 1))
+    pm = PolicyMap(default=EQ4)
+    np.testing.assert_array_equal(
+        np.asarray(small.lenet_apply(params, x, pm)),
+        np.asarray(small.lenet_apply(params, x, EQ4)))
+
+
+def test_policy_map_mixed_lenet_matches_manual_composition():
+    """first-conv-float map == manually running c1 float, rest BFP."""
+    params = small.lenet_init(KEY)
+    x = jax.random.normal(KEY, (2, 28, 28, 1))
+    pm = PolicyMap.of(("^c1$", None), default=EQ4)
+    mixed = small.lenet_apply(params, x, pm)
+
+    h = L.relu(L.conv2d(params["c1"], x, 1, "SAME", None))
+    h = L.max_pool(h)
+    h = L.relu(L.conv2d(params["c2"], h, 1, "SAME", EQ4))
+    h = L.max_pool(h)
+    h = h.reshape(h.shape[0], -1)
+    h = L.relu(L.dense(params["fc1"], h, EQ4))
+    manual = L.dense(params["fc2"], h, EQ4)
+    np.testing.assert_array_equal(np.asarray(mixed), np.asarray(manual))
+
+
+def test_resnet18_mixed_policy_end_to_end():
+    """Acceptance: first conv float, rest L=8, through ResNet-18."""
+    params = resnet.init(KEY, 18, 10, width_mult=0.25)
+    x = jax.random.normal(KEY, (2, 32, 32, 3))
+    p8 = BFPPolicy(l_w=8, l_i=8, straight_through=False)
+    pm = PolicyMap.of(("^stem", None), default=p8)
+    out_mixed = resnet.apply(params, x, pm)
+    out_float = resnet.apply(params, x, None)
+    out_bfp = resnet.apply(params, x, p8)
+    assert out_mixed.shape == (2, 10)
+    assert bool(jnp.all(jnp.isfinite(out_mixed)))
+    # the map actually took effect: differs from BOTH uniform extremes
+    assert float(jnp.max(jnp.abs(out_mixed - out_float))) > 0
+    assert float(jnp.max(jnp.abs(out_mixed - out_bfp))) > 0
+    # and stays closer to float than the all-BFP forward (stem protected)
+    err_mixed = float(jnp.linalg.norm(out_mixed - out_float))
+    err_bfp = float(jnp.linalg.norm(out_bfp - out_float))
+    assert err_mixed < err_bfp * 1.5
+
+
+# ---------------------------------------------------------------------------
+# pre-quantized param trees through real models
+# ---------------------------------------------------------------------------
+
+def test_prequant_cnn_forward_bitexact():
+    """prequantize_cnn(EQ4) + float-policy-EQ4 forward == in-line
+    quantization forward, bit for bit (conv + dense, HWIO round trip)."""
+    params = small.lenet_init(KEY)
+    x = jax.random.normal(KEY, (2, 28, 28, 1))
+    pq = EG.prequantize_cnn(params, EQ4)
+    assert EG.is_prequant(pq["c1"]["w"]) and EG.is_prequant(pq["fc1"]["w"])
+    out_pq = small.lenet_apply(pq, x, EQ4)
+    out_inline = small.lenet_apply(params, x, EQ4)
+    np.testing.assert_array_equal(np.asarray(out_pq), np.asarray(out_inline))
+
+
+def test_prequant_cnn_respects_policy_map():
+    params = small.lenet_init(KEY)
+    pm = PolicyMap.of(("^c1$", None), default=EQ4)
+    pq = EG.prequantize_cnn(params, pm)
+    assert not EG.is_prequant(pq["c1"]["w"])   # rule kept it float
+    assert EG.is_prequant(pq["c2"]["w"])
+
+
+def test_prequant_resolves_same_paths_as_runtime():
+    """A PolicyMap rule must pin the SAME layers at prequant time as at
+    GEMM time — resnet conv+bn nesting and LM stack containers are
+    stripped from the rule path."""
+    rparams = resnet.init(KEY, 18, 10, width_mult=0.25)
+    pm = PolicyMap.of(("^stem", None), default=EQ4)
+    pq = EG.prequantize_cnn(rparams, pm)
+    assert not EG.is_prequant(pq["stem"]["conv"]["w"])    # pinned float
+    assert EG.is_prequant(pq["blocks"][0]["c1"]["conv"]["w"])
+
+    from repro.configs.base import reduced
+    from repro.configs.registry import ARCHS
+    from repro.models.lm import model as Mdl
+    cfg = reduced(ARCHS["tinyllama-1.1b"])
+    params = Mdl.init_params(cfg, KEY)
+    pm_lm = PolicyMap.of(("^attn/", None), default=EQ4)   # runtime path form
+    pq_lm = EG.prequantize(params, pm_lm)
+    assert not EG.is_prequant(pq_lm["layers"]["attn"]["wq"]["w"])
+    assert EG.is_prequant(pq_lm["layers"]["ffn"]["w1"]["w"])
+
+
+def test_prequant_never_touches_moe_router():
+    """moe_apply always runs the router in float; prequant must not
+    quantize it even under a uniform policy."""
+    from repro.configs.base import reduced
+    from repro.configs.registry import ARCHS
+    from repro.models.lm import model as Mdl
+    cfg = reduced(ARCHS["olmoe-1b-7b"])
+    params = Mdl.init_params(cfg, KEY)
+    pq = EG.prequantize(params, EQ4)
+    assert not EG.is_prequant(pq["layers"]["moe"]["router"]["w"])
+    assert EG.is_prequant(pq["layers"]["moe"]["w1"])
+
+
+def test_prequant_block_mismatch_rejected_on_pallas_too():
+    """Emulated and pallas must agree on rejecting a sidecar/policy
+    block mismatch (no silent numeric drift between backends)."""
+    x, w = _xw(8, 256, 16)
+    pq = prequant_leaf(w, TILED.with_(block_k=64))
+    with pytest.raises(ValueError, match="block"):
+        EG.gemm(x, pq, TILED.with_(backend="pallas"))  # policy bk=128
+
+
+def test_default_tiles_safe_for_wide_mantissas():
+    from repro.kernels import ops
+    _, _, bk = ops.default_tiles(8, 256, 16, None, l_sum=30)
+    assert bk <= 4      # 2**(32-30); no min-8 floor defeating the cap
+    out = ops.bfp_matmul(jax.random.normal(KEY, (8, 64)),
+                         jax.random.normal(jax.random.PRNGKey(1), (64, 16)),
+                         BFPPolicy(l_w=15, l_i=15, scheme=Scheme.TILED,
+                                   straight_through=False),
+                         interpret=True)
+    assert out.shape == (8, 16)
+
+
+def test_policy_none_goes_through_registered_float_backend():
+    x, w = _xw(8, 32, 8)
+    calls = []
+    orig = EG.get_backend("float")
+    EG.register_backend("float",
+                        lambda x2d, w, pol, key: calls.append(1) or
+                        orig.matmul(x2d, w, pol, key))
+    try:
+        EG.gemm(x, w, None)
+        assert calls, "policy=None must dispatch via the registry"
+    finally:
+        EG.register_backend("float", orig.matmul, orig.supports)
+
+
+def test_prequant_lm_forward_close():
+    """LM tree prequant (incl. stacked layers + MoE experts) serves
+    through the engine; outputs match the inline-BFP forward closely."""
+    from repro.configs.base import reduced
+    from repro.configs.registry import ARCHS
+    from repro.models.lm import model as Mdl
+    cfg = reduced(ARCHS["olmoe-1b-7b"])
+    params = Mdl.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (1, 16), 0, cfg.vocab_size)
+    pol = EQ4
+    pq = EG.prequantize(params, pol)
+    assert EG.is_prequant(pq["layers"]["moe"]["w1"])
+    lf, _ = Mdl.forward(params, cfg, toks, policy=pol)
+    lq, _ = Mdl.forward(pq, cfg, toks, policy=pol)
+    assert bool(jnp.all(jnp.isfinite(lq)))
+    rel = float(jnp.linalg.norm(lq - lf) / (jnp.linalg.norm(lf) + 1e-9))
+    assert rel < 0.05, rel
+
+
+def test_bfp_dot_shim_is_engine():
+    from repro.core.bfp_dot import bfp_dot
+    x, w = _xw()
+    np.testing.assert_array_equal(np.asarray(bfp_dot(x, w, TILED)),
+                                  np.asarray(EG.gemm(x, w, TILED)))
+    pm = PolicyMap.of(("^x$", None), default=TILED)
+    np.testing.assert_array_equal(
+        np.asarray(bfp_dot(x, w, pm, path="dense1")),
+        np.asarray(EG.gemm(x, w, TILED)))

@@ -7,7 +7,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal container: deterministic fallback sampler
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core import BFPPolicy, Scheme
 from repro.core.bfp_dot import bfp_matmul_2d
@@ -104,6 +108,61 @@ def test_quantize_kernel_zero_block():
     x = jnp.zeros((8, 128), jnp.float32)
     mq, eq = bfp_quantize_pallas(x, bits=8, bm=8, bk=128, interpret=True)
     assert int(jnp.max(jnp.abs(mq))) == 0
+
+
+@pytest.mark.parametrize("b,k,n", [(1, 32, 1), (100, 300, 70), (7, 129, 9),
+                                   (130, 512, 200)])
+def test_default_tiles_align_odd_shapes(b, k, n):
+    """Tiles are power-of-two, capped at the MXU dim, and divide the
+    padded problem; auto-bk respects the int32 overflow bound."""
+    bm, bn, bk = ops.default_tiles(b, k, n, None)
+    for tile in (bm, bn, bk):
+        assert tile & (tile - 1) == 0 and tile >= 8
+    assert bm <= 128 and bn <= 128
+    assert (-b % bm) < bm and (-n % bn) < bn     # padding < one tile
+    # overflow cap: auto bk must be accumulation-safe for wide mantissas
+    _, _, bk24 = ops.default_tiles(b, k, n, None, l_sum=24)
+    assert bk24 <= 2 ** (32 - 24)
+
+
+@pytest.mark.parametrize("b,k,n", [(1, 32, 1), (100, 300, 70), (7, 129, 9)])
+def test_matmul_kernel_odd_shapes_match_ref(b, k, n):
+    """Odd/padded shapes through ops.bfp_matmul stay exact vs the oracle
+    run on the identically padded problem."""
+    x = _rand(jax.random.PRNGKey(20), (b, k), jnp.float32, 2.0)
+    w = _rand(jax.random.PRNGKey(21), (k, n), jnp.float32, 0.1)
+    pol = BFPPolicy(scheme=Scheme.TILED, block_k=None,
+                    straight_through=False)
+    out = ops.bfp_matmul(x, w, pol, interpret=True)
+    assert out.shape == (b, n)
+    bm, bn, bk = ops.default_tiles(b, k, n, None)
+    xp = jnp.pad(x, ((0, -b % bm), (0, -k % bk)))
+    wp = jnp.pad(w, ((0, -k % bk), (0, -n % bn)))
+    out_r = ref.bfp_matmul_ref(xp, wp, 8, 8, bk)[:b, :n]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_r),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("b,n", [(100, 70), (8, 8), (1, 200)])
+def test_prequant_kernel_matches_fused(b, n):
+    """The sidecar-consuming kernel == the fused kernel, bit for bit,
+    including B/N padding paths."""
+    from repro.core.bfp_dot import bfp_matmul_2d
+    from repro.core.prequant import prequant_leaf
+    k = 256
+    x = _rand(jax.random.PRNGKey(22), (b, k), jnp.float32, 2.0)
+    w = _rand(jax.random.PRNGKey(23), (k, n), jnp.float32, 0.1)
+    pol = BFPPolicy(scheme=Scheme.TILED, block_k=128,
+                    straight_through=False)
+    pq = prequant_leaf(w, pol)
+    out_pq = ops.bfp_matmul_prequant(x, pq["m"], pq["s"], pol,
+                                     interpret=True)
+    out_fused = ops.bfp_matmul(x, w, pol, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_pq), np.asarray(out_fused))
+    # and both equal the emulated core datapath
+    np.testing.assert_allclose(np.asarray(out_pq),
+                               np.asarray(bfp_matmul_2d(x, w, pol)),
+                               rtol=1e-6, atol=1e-6)
 
 
 @settings(max_examples=25, deadline=None)
