@@ -9,19 +9,21 @@ from repro.core.bfp import Scheme
 from repro.core.nsr import snr_db
 from repro.core.bfp_dot import bfp_matmul_2d
 from repro.core.policy import BFPPolicy
+from benchmarks import common
 from benchmarks.common import emit
 
 
 def run():
     key = jax.random.PRNGKey(0)
-    x = jax.random.normal(key, (256, 2048)) * \
-        jnp.exp(jax.random.normal(jax.random.PRNGKey(1), (256, 2048)))
-    w = jax.random.normal(jax.random.PRNGKey(2), (2048, 256)) * 0.05
+    b, k, n = (32, 512, 32) if common.SMOKE else (256, 2048, 256)
+    x = jax.random.normal(key, (b, k)) * \
+        jnp.exp(jax.random.normal(jax.random.PRNGKey(1), (b, k)))
+    w = jax.random.normal(jax.random.PRNGKey(2), (k, n)) * 0.05
     ref = x @ w
     p0 = BFPPolicy(scheme=Scheme.EQ4, straight_through=False)
     emit("blocksize/eq4_paper", 0.0,
          f"snr_db={float(snr_db(ref, bfp_matmul_2d(x, w, p0))):.2f}")
-    for bk in (2048, 512, 256, 128, 32):
+    for bk in ((512, 128) if common.SMOKE else (2048, 512, 256, 128, 32)):
         p = BFPPolicy(scheme=Scheme.TILED, block_k=bk,
                       straight_through=False)
         s = float(snr_db(ref, bfp_matmul_2d(x, w, p)))

@@ -1,10 +1,38 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing, CSV emission, smoke mode.
+
+``benchmarks.run --smoke`` flips :data:`SMOKE` before any suite runs;
+each suite consults it to shrink shapes/grids/reps so the whole harness
+finishes in CI seconds — the point is that benchmark SCRIPTS cannot rot,
+not that smoke numbers mean anything.  ``--csv PATH`` tees every
+``emit`` row to a file (uploaded as a CI artifact).
+"""
 from __future__ import annotations
 
 import time
-from typing import Callable
+from typing import Callable, Optional, TextIO
 
 import jax
+
+#: True under ``benchmarks.run --smoke``: tiny shapes, 1 warmup / 1 rep.
+SMOKE = False
+
+_CSV: Optional[TextIO] = None
+
+
+def set_smoke(on: bool) -> None:
+    global SMOKE
+    SMOKE = on
+
+
+def set_csv(fh: Optional[TextIO]) -> None:
+    global _CSV
+    _CSV = fh
+
+
+def bench_reps(warmup: int = 2, iters: int = 5) -> dict:
+    """Requested reps, collapsed to (1, 1) in smoke mode."""
+    return ({"warmup": 1, "iters": 1} if SMOKE
+            else {"warmup": warmup, "iters": iters})
 
 
 def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -21,4 +49,8 @@ def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
-    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+    row = f"{name},{us_per_call:.1f},{derived}"
+    print(row, flush=True)
+    if _CSV is not None:
+        _CSV.write(row + "\n")
+        _CSV.flush()

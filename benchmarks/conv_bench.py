@@ -1,0 +1,86 @@
+"""E12 — fused implicit-im2col conv vs materialized im2col + GEMM.
+
+The ISSUE-2 acceptance artifact: per layer shape of the paper's models
+(VGG-16 / ResNet-18 conv layers), report
+
+  * us/call of the fused conv kernel vs the im2col+GEMM route (both on
+    the Pallas backend; interpret mode on CPU, so the RATIO is the
+    meaningful number, not the absolute us),
+  * MODELED activation HBM bytes both ways.  im2col materializes the
+    patch matrix in HBM (one write + one read of B*OH*OW*kh*kw*C floats
+    on top of reading x); the fused kernel reads only the padded input.
+    The kh*kw-fold patch inflation is exactly the off-chip traffic the
+    paper's §3.1 argument says BFP should be cutting.
+
+Spatial dims are scaled down (interpret mode runs the kernel body in
+Python); channel counts and kernel/stride geometry are the real layer
+shapes, and the bytes model uses the benchmarked shapes consistently.
+
+Run:  PYTHONPATH=src python -m benchmarks.run conv
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from benchmarks.common import bench_reps, emit, time_call
+from repro import engine as EG
+from repro.core.bfp import Scheme
+from repro.core.conv_utils import conv_geometry
+from repro.core.policy import BFPPolicy
+from repro.kernels import ops
+
+# (name, in_ch, out_ch, k, stride) — VGG-16 and ResNet-18 conv geometry
+_LAYERS = [
+    ("vgg16/conv1_1", 3, 64, 3, 1),
+    ("vgg16/conv2_1", 64, 128, 3, 1),
+    ("vgg16/conv3_1", 128, 256, 3, 1),
+    ("vgg16/conv5_3", 512, 512, 3, 1),
+    ("resnet18/stem7x7", 3, 64, 7, 2),
+    ("resnet18/block_3x3", 64, 64, 3, 1),
+    ("resnet18/down_3x3_s2", 128, 256, 3, 2),
+]
+
+
+def _bytes_model(b, h, w, c, kh, kw, stride, padding):
+    """Modeled activation HBM bytes (fp32): fused reads the padded input
+    once; im2col additionally writes + reads the patch matrix."""
+    oh, ow, (pt, pb), (pl, pr) = conv_geometry(h, w, kh, kw, stride,
+                                               padding)
+    x_bytes = b * (h + pt + pb) * (w + pl + pr) * c * 4
+    patch_bytes = b * oh * ow * kh * kw * c * 4
+    return x_bytes, x_bytes + 2 * patch_bytes
+
+
+def run():
+    hw = 8 if common.SMOKE else 32
+    batch = 1
+    reps = bench_reps(warmup=1, iters=3)
+    pol = BFPPolicy(scheme=Scheme.TILED, block_k=128,
+                    straight_through=False, backend="pallas")
+    layers = _LAYERS[:3] if common.SMOKE else _LAYERS
+    for i, (name, c, oc, k, stride) in enumerate(layers):
+        if common.SMOKE:
+            c, oc = min(c, 16), min(oc, 16)
+        key = jax.random.PRNGKey(i)
+        x = jax.random.normal(key, (batch, hw, hw, c))
+        w = jax.random.normal(jax.random.fold_in(key, 1),
+                              (k, k, c, oc)) * 0.1
+
+        fused = lambda x, w: ops.bfp_conv2d(x, w, pol, stride, "SAME",
+                                            interpret=True)
+        im2col = lambda x, w: EG.conv2d_im2col(x, w, pol, stride, "SAME")
+        us_fused = time_call(fused, x, w, **reps)
+        us_im2col = time_call(im2col, x, w, **reps)
+        fused_b, im2col_b = _bytes_model(batch, hw, hw, c, k, k, stride,
+                                         "SAME")
+        emit(f"conv/{name}/fused", us_fused,
+             f"act_bytes={fused_b}")
+        emit(f"conv/{name}/im2col_gemm", us_im2col,
+             f"act_bytes={im2col_b};bytes_cut={im2col_b / fused_b:.2f}x;"
+             f"speedup={us_im2col / us_fused:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

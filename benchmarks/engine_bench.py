@@ -19,7 +19,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_call
+from benchmarks import common
+from benchmarks.common import bench_reps, emit, time_call
 from repro import engine as EG
 from repro.core.bfp import Scheme
 from repro.core.policy import BFPPolicy
@@ -28,7 +29,8 @@ from repro.core.prequant import prequant_leaf
 
 def run():
     key = jax.random.PRNGKey(0)
-    b, k, n = 8, 2048, 2048           # decode-like: weight >> activations
+    # decode-like: weight >> activations
+    b, k, n = (8, 512, 512) if common.SMOKE else (8, 2048, 2048)
     x = jax.random.normal(key, (b, k))
     w = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.05
     pol = BFPPolicy(scheme=Scheme.TILED, block_k=128,
@@ -40,7 +42,7 @@ def run():
     f_req = jax.jit(lambda x, w: EG.gemm(x, w, pol))
     f_pre = jax.jit(lambda x, m, s: EG.gemm(x, {"m": m, "s": s}, pol))
 
-    iters = dict(warmup=3, iters=15)  # medians over enough reps to hold
+    iters = bench_reps(warmup=3, iters=15)  # medians over enough reps
     us_float = time_call(f_float, x, w, **iters)
     us_req = time_call(f_req, x, w, **iters)
     us_pre = time_call(f_pre, x, pq["m"], pq["s"], **iters)

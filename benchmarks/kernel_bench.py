@@ -12,30 +12,32 @@ import jax.numpy as jnp
 from repro.core import bfp
 from repro.core.bfp_dot import bfp_matmul_2d
 from repro.core.policy import BFPPolicy, PAPER_DEFAULT, TPU_TILED
-from benchmarks.common import emit, time_call
+from benchmarks import common
+from benchmarks.common import bench_reps, emit, time_call
 
 
 def run():
     key = jax.random.PRNGKey(0)
-    b, k, n = 256, 1024, 256
+    b, k, n = (64, 256, 64) if common.SMOKE else (256, 1024, 256)
     x = jax.random.normal(key, (b, k))
     w = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.1
     flops = 2 * b * k * n
+    reps = bench_reps()
 
     f_float = jax.jit(lambda x, w: x @ w)
-    us = time_call(f_float, x, w)
+    us = time_call(f_float, x, w, **reps)
     emit("kernel/float_matmul", us, f"GFLOPs={flops / us / 1e3:.1f}")
 
     for name, pol in (("eq4", PAPER_DEFAULT), ("tiled128", TPU_TILED)):
         pol = pol.with_(straight_through=False)
         f = jax.jit(lambda x, w, pol=pol: bfp_matmul_2d(x, w, pol))
-        us = time_call(f, x, w)
+        us = time_call(f, x, w, **reps)
         emit(f"kernel/bfp_emulated_{name}", us,
              f"GFLOPs={flops / us / 1e3:.1f}")
 
     from repro.kernels import ops
     f = lambda x, w: ops.bfp_matmul(x, w, TPU_TILED, interpret=True)
-    us = time_call(f, x, w, warmup=1, iters=2)
+    us = time_call(f, x, w, **bench_reps(warmup=1, iters=2))
     emit("kernel/bfp_pallas_interpret", us, "CPU-interpret (TPU target)")
 
     # datapath sizing table (paper Fig. 2)

@@ -10,19 +10,27 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
   blocksize_ablation   E10 TPU K-tile block-size ablation (beyond paper)
   engine_bench         E11 engine: cached prequant weights vs per-step
                        re-quantization (ISSUE 1 acceptance)
+  conv_bench           E12 fused implicit-im2col conv vs im2col+GEMM
+                       (ISSUE 2 acceptance)
+
+Flags:
+  --smoke       tiny shapes, 1 rep — CI rot-check mode (the numbers are
+                meaningless; the scripts running end-to-end is the point)
+  --csv PATH    tee every emitted row to PATH (CI uploads it)
 
 Roofline/dry-run numbers are produced by ``repro.launch.dryrun`` (they
 need the 512-device env) and summarized in EXPERIMENTS.md.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 import traceback
 
-from benchmarks import (blocksize_ablation, engine_bench, kernel_bench,
-                        table1_storage, table2_scheme, table3_sweep,
-                        table4_nsr)
+from benchmarks import (blocksize_ablation, common, conv_bench,
+                        engine_bench, kernel_bench, table1_storage,
+                        table2_scheme, table3_sweep, table4_nsr)
 
 _ALL = {
     "table1": table1_storage.run,
@@ -32,12 +40,30 @@ _ALL = {
     "kernel": kernel_bench.run,
     "blocksize": blocksize_ablation.run,
     "engine": engine_bench.run,
+    "conv": conv_bench.run,
 }
 
 
 def main() -> None:
-    names = sys.argv[1:] or list(_ALL)
+    ap = argparse.ArgumentParser(prog="benchmarks.run")
+    ap.add_argument("names", nargs="*", metavar="suite",
+                    help=f"suites to run (default: all of {list(_ALL)})")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes / 1 rep (CI rot check)")
+    ap.add_argument("--csv", metavar="PATH",
+                    help="also write CSV rows to PATH")
+    args = ap.parse_args()
+    names = args.names or list(_ALL)
+    unknown = [n for n in names if n not in _ALL]
+    if unknown:
+        ap.error(f"unknown suite(s) {unknown}; available: {list(_ALL)}")
+    common.set_smoke(args.smoke)
+    fh = open(args.csv, "w") if args.csv else None
+    common.set_csv(fh)
+
     print("name,us_per_call,derived")
+    if fh:
+        fh.write("name,us_per_call,derived\n")
     failures = 0
     for n in names:
         t0 = time.time()
@@ -47,6 +73,8 @@ def main() -> None:
             failures += 1
             traceback.print_exc()
         print(f"# {n} done in {time.time() - t0:.1f}s", flush=True)
+    if fh:
+        fh.close()
     if failures:
         sys.exit(1)
 

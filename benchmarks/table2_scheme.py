@@ -8,18 +8,23 @@ from __future__ import annotations
 
 from repro.core.bfp import Scheme
 from repro.core.policy import BFPPolicy
+from benchmarks import common
 from benchmarks.common import emit
 from benchmarks.cnn_train import accuracy, train_model
 
 
 def run():
-    for kind in ("mnist", "cifar"):
-        params, apply_fn, ev = train_model(kind)
+    kinds = ("mnist",) if common.SMOKE else ("mnist", "cifar")
+    steps = 20 if common.SMOKE else 250
+    for kind in kinds:
+        params, apply_fn, ev = train_model(kind, steps=steps)
         acc_f = accuracy(params, apply_fn, ev, None)
         emit(f"table2/{kind}/float", 0.0, f"top1={acc_f:.4f}")
         # TILED needs block_k | K; conv K=25 here — covered by the
         # blocksize ablation (E10) on clean dims instead.
-        for scheme in (Scheme.EQ2, Scheme.EQ4, Scheme.EQ3, Scheme.EQ5):
+        schemes = ((Scheme.EQ2, Scheme.EQ4) if common.SMOKE else
+                   (Scheme.EQ2, Scheme.EQ4, Scheme.EQ3, Scheme.EQ5))
+        for scheme in schemes:
             pol = BFPPolicy(scheme=scheme, straight_through=False)
             acc = accuracy(params, apply_fn, ev, pol)
             emit(f"table2/{kind}/{scheme.value}", 0.0,

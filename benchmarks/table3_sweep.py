@@ -5,14 +5,18 @@ from __future__ import annotations
 
 from repro.core.bfp import Rounding
 from repro.core.policy import BFPPolicy
+from benchmarks import common
 from benchmarks.common import emit
 from benchmarks.cnn_train import accuracy, train_model
 
 
 def run():
     grids = {"mnist": (3, 4, 5, 6), "cifar": (5, 6, 7, 8)}
+    if common.SMOKE:
+        grids = {"mnist": (4, 6)}
+    steps = 20 if common.SMOKE else 250
     for kind, bits in grids.items():
-        params, apply_fn, ev = train_model(kind)
+        params, apply_fn, ev = train_model(kind, steps=steps)
         acc_f = accuracy(params, apply_fn, ev, None)
         emit(f"table3/{kind}/float", 0.0, f"top1={acc_f:.4f}")
         for lw in bits:

@@ -13,10 +13,13 @@ import jax
 
 from repro.core.policy import BFPPolicy
 from repro.models.cnn import analysis, vgg
+from benchmarks import common
 from benchmarks.common import emit
 
 
 def run(width: float = 0.25, hw: int = 64, layers: int = 10):
+    if common.SMOKE:
+        width, hw, layers = 0.125, 32, 3
     key = jax.random.PRNGKey(0)
     params = vgg.init(key, 1000, width_mult=width, input_hw=hw, fc_dim=256)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, hw, hw, 3))

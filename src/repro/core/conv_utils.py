@@ -1,0 +1,68 @@
+"""Convolution-as-GEMM geometry and layout, shared repo-wide.
+
+One K-order for the conv GEMM view, everywhere: **HWIO-major** — the
+patch-matrix column index is ``k = (di*kw + dj)*C + c`` (spatial offsets
+outer, channel innermost), so the weight view is literally
+``w_hwio.reshape(kh*kw*C, out_ch)`` with no transpose.  This order is
+what makes the implicit-im2col Pallas kernel cheap: a contiguous K range
+of the patch row is a contiguous channel slab of the NHWC input, so the
+kernel forms BFP blocks from static slices instead of gathers.  The
+materialized :func:`im2col` route, ``prequant_conv_leaf`` sidecars, and
+the fused kernel all share this order, which is what lets them agree
+bit-exactly for Scheme.TILED with a common ``block_k``.
+
+(The pre-engine code used the channel-major order that
+``conv_general_dilated_patches`` emits natively; per-column and
+whole-matrix schemes are permutation-invariant, so only TILED numerics
+shifted — by design, to the kernel-friendly partition.)
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["conv_geometry", "im2col", "conv_weight_matrix"]
+
+
+def conv_geometry(h: int, w: int, kh: int, kw: int, stride: int,
+                  padding: str) -> Tuple[int, int, Tuple[int, int],
+                                         Tuple[int, int]]:
+    """XLA's SAME/VALID geometry: (oh, ow, (pad_top, pad_bot),
+    (pad_left, pad_right))."""
+    if padding == "SAME":
+        oh, ow = -(-h // stride), -(-w // stride)
+        ph = max((oh - 1) * stride + kh - h, 0)
+        pw = max((ow - 1) * stride + kw - w, 0)
+        return oh, ow, (ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2)
+    if padding == "VALID":
+        if h < kh or w < kw:
+            raise ValueError(f"VALID conv: input {h}x{w} smaller than "
+                             f"kernel {kh}x{kw}")
+        return (h - kh) // stride + 1, (w - kw) // stride + 1, (0, 0), (0, 0)
+    raise ValueError(f"padding must be 'SAME' or 'VALID', got {padding!r}")
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int,
+           padding: str) -> Tuple[jax.Array, Tuple[int, int, int]]:
+    """NHWC -> patch matrix [B*OH*OW, kh*kw*C] (receptive fields as rows).
+
+    The paper's I matrix in NN orientation, in the repo's HWIO-major
+    K-order.  ``conv_general_dilated_patches`` emits channel-major
+    features, so the feature axis is reordered here.
+    """
+    b, _, _, c = x.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    oh, ow = patches.shape[1], patches.shape[2]
+    p = patches.reshape(b, oh, ow, c, kh, kw)
+    p = jnp.transpose(p, (0, 1, 2, 4, 5, 3))       # -> (kh, kw, C) order
+    return p.reshape(b * oh * ow, kh * kw * c), (b, oh, ow)
+
+
+def conv_weight_matrix(w_hwio: jax.Array) -> jax.Array:
+    """HWIO kernel -> its GEMM view [kh*kw*C, out_ch] (HWIO-major K)."""
+    kh, kw, c, n = w_hwio.shape
+    return w_hwio.reshape(kh * kw * c, n)

@@ -18,7 +18,8 @@ Scheme.TILED with the same ``block_k`` (or per-column / eq. 4 blocks when
 
 ``quantize_param_tree`` converts LM-style trees (>=2-D GEMM leaves,
 possibly stacked [L, K, N]); ``quantize_cnn_param_tree`` walks CNN trees,
-transposing HWIO conv kernels through their im2col GEMM view.  Both accept
+lowering HWIO conv kernels to their GEMM view (``core.conv_utils``
+HWIO-major K-order, the fused conv kernel's K-tiling).  Both accept
 a single :class:`BFPPolicy` or a per-layer ``repro.engine.PolicyMap``.
 """
 from __future__ import annotations
@@ -71,21 +72,22 @@ def prequant_leaf(w: jax.Array, policy: BFPPolicy) -> Any:
 def prequant_conv_leaf(w_hwio: jax.Array, policy: BFPPolicy) -> Any:
     """HWIO conv kernel -> prequant dict with the mantissa kept in HWIO.
 
-    Quantization happens in the im2col GEMM view ([C*kh*kw, out]; the
-    layout ``models.cnn.layers.conv2d`` contracts over), then the mantissa
-    is inverse-transposed back to HWIO so the layer can still read
-    (kh, kw, in_ch, out_ch) off the array shape.  ``s`` stays in the GEMM
+    Quantization happens in the conv GEMM view ``[kh*kw*C, out]`` — the
+    repo-wide HWIO-major K-order (core.conv_utils), which is also exactly
+    the K-tiling the fused implicit-im2col Pallas kernel streams — so the
+    sidecar blocks ARE the conv kernel's K-tiles and prequant execution is
+    bit-exact vs inline quantization on both the fused and im2col routes.
+    The mantissa is reshaped back to HWIO so the layer can still read
+    (kh, kw, in_ch, out_ch) off the array shape; ``s`` stays in the GEMM
     view [K//bk, N].
     """
     if w_hwio.ndim != 4:
         return w_hwio
     kh, kw, c, n = w_hwio.shape
-    w2d = jnp.transpose(w_hwio, (2, 0, 1, 3)).reshape(c * kh * kw, n)
-    d = prequant_leaf(w2d, policy)
+    d = prequant_leaf(w_hwio.reshape(kh * kw * c, n), policy)
     if not is_prequant(d):
-        return w_hwio  # block_k does not divide C*kh*kw
-    m_hwio = jnp.transpose(d["m"].reshape(c, kh, kw, n), (1, 2, 0, 3))
-    return {"m": m_hwio, "s": d["s"]}
+        return w_hwio  # block_k does not divide kh*kw*C
+    return {"m": d["m"].reshape(kh, kw, c, n), "s": d["s"]}
 
 
 def dequantize_prequant(w: Any, dtype=jnp.float32) -> jax.Array:
@@ -185,6 +187,18 @@ def quantize_cnn_param_tree(params: Any, policy: Any) -> Any:
     if policy is None:
         return params
 
+    def _conv_bn_nested(rule_keys) -> bool:
+        # The trailing "conv" segment is stripped ONLY for conv+bn blocks
+        # (resnet's {"conv", "bn"} dicts), where the runtime layer path
+        # omits it.  A plain conv layer that happens to be KEYED "conv"
+        # (googlenet's aux heads: runtime path "loss1/conv") keeps it —
+        # checked structurally via the sibling "bn" entry.
+        node = params
+        for kk in rule_keys[:-1]:
+            node = node[int(kk)] if isinstance(node, (list, tuple)) \
+                else node[kk]
+        return isinstance(node.get(rule_keys[-1]), dict) and "bn" in node
+
     def one(path, leaf):
         keys = _path_keys(path)
         if not keys or keys[-1] != "w" or not hasattr(leaf, "ndim"):
@@ -192,8 +206,9 @@ def quantize_cnn_param_tree(params: Any, policy: Any) -> Any:
         if not jnp.issubdtype(leaf.dtype, jnp.floating):
             return leaf
         rule_keys = keys[:-1]
-        if rule_keys and rule_keys[-1] == "conv":
-            rule_keys = rule_keys[:-1]      # resnet {"conv", "bn"} nesting
+        if rule_keys and rule_keys[-1] == "conv" and \
+                _conv_bn_nested(rule_keys):
+            rule_keys = rule_keys[:-1]
         pol = _resolve(policy, "/".join(rule_keys))
         if pol is None:
             return leaf

@@ -15,12 +15,14 @@ MAC -> power-of-two rescale, Fig. 2) behind every model GEMM:
 from repro.core.prequant import is_prequant
 from repro.engine.backends import (available_backends, get_backend,
                                    register_backend, select_backend)
-from repro.engine.core import gemm, prequantize, prequantize_cnn
+from repro.engine.core import (conv2d, conv2d_im2col, gemm, prequantize,
+                               prequantize_cnn)
 from repro.engine.policy_map import (PolicyLike, PolicyMap, join_path,
                                      resolve_policy)
 
 __all__ = [
-    "gemm", "prequantize", "prequantize_cnn", "is_prequant",
+    "gemm", "conv2d", "conv2d_im2col", "prequantize", "prequantize_cnn",
+    "is_prequant",
     "PolicyMap", "PolicyLike", "resolve_policy", "join_path",
     "register_backend", "get_backend", "available_backends",
     "select_backend",

@@ -42,20 +42,32 @@ __all__ = ["Backend", "register_backend", "get_backend",
 MatmulFn = Callable[[jax.Array, object, Optional[BFPPolicy],
                      Optional[jax.Array]], jax.Array]
 
+#: (x_nhwc, w_hwio_or_prequant, policy, stride, padding, key) -> out NHWC
+ConvFn = Callable[..., jax.Array]
+
 
 @dataclasses.dataclass(frozen=True)
 class Backend:
     name: str
     matmul: MatmulFn
     supports: Callable[[BFPPolicy, object], bool]
+    #: optional fused convolution; ``None`` means engine.conv2d routes
+    #: this backend through the materialized-im2col + matmul fallback
+    conv: Optional[ConvFn] = None
+    #: (policy, w, stride, padding) -> can ``conv`` honour this faithfully?
+    conv_supports: Callable[..., bool] = lambda pol, w, stride, pad: False
 
 
 _REGISTRY: Dict[str, Backend] = {}
 
 
 def register_backend(name: str, matmul: MatmulFn,
-                     supports: Optional[Callable] = None) -> None:
-    _REGISTRY[name] = Backend(name, matmul, supports or (lambda pol, w: True))
+                     supports: Optional[Callable] = None,
+                     conv: Optional[ConvFn] = None,
+                     conv_supports: Optional[Callable] = None) -> None:
+    _REGISTRY[name] = Backend(
+        name, matmul, supports or (lambda pol, w: True), conv,
+        conv_supports or (lambda pol, w, stride, pad: conv is not None))
 
 
 def get_backend(name: str) -> Backend:
@@ -119,6 +131,26 @@ def _pallas_supports(policy: BFPPolicy, w) -> bool:
     return True
 
 
+def _pallas_conv(x, w, policy, stride, padding, key=None):
+    from repro.kernels import ops  # local import: kernels are optional
+    if is_prequant(w):
+        return ops.bfp_conv2d_prequant(x, w["m"], w["s"], policy, stride,
+                                       padding)
+    return ops.bfp_conv2d(x, w, policy, stride, padding)
+
+
+def _pallas_conv_supports(policy: BFPPolicy, w, stride, padding) -> bool:
+    # Same faithfulness contract as the GEMM kernel, plus the implicit
+    # kernel's geometry: string SAME/VALID padding and a positive int
+    # stride.  Everything else takes the honest im2col fallback.
+    if padding not in ("SAME", "VALID"):
+        return False
+    if not isinstance(stride, int) or stride < 1:
+        return False
+    return _pallas_supports(policy, w)
+
+
 register_backend("float", _float_matmul)
 register_backend("emulated", _emulated_matmul)
-register_backend("pallas", _pallas_matmul, _pallas_supports)
+register_backend("pallas", _pallas_matmul, _pallas_supports,
+                 conv=_pallas_conv, conv_supports=_pallas_conv_supports)

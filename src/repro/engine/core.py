@@ -1,9 +1,13 @@
 """The unified BFP GEMM execution layer (DESIGN.md §7).
 
-Every model GEMM in the repo — CNN convs via im2col, LM linears, MoE
-expert GEMMs, the tied lm_head — lands on :func:`gemm`:
+Every model GEMM in the repo — LM linears, MoE expert GEMMs, the tied
+lm_head, dense layers — lands on :func:`gemm`; CNN convolutions land on
+the conv-aware :func:`conv2d`, which dispatches to a backend's fused
+conv (pallas: implicit im2col, no patch matrix in HBM) or falls back to
+materialized im2col + :func:`gemm`:
 
-    gemm(x, w, policy, path="blocks/3/c1")
+    gemm(x, w, policy, path="fc6")
+    conv2d(x, w_hwio, policy, stride=2, padding="SAME", path="stem")
 
 * ``w`` is a float matrix OR the prequant ``{"m", "s"}`` wire format
   (int8 mantissas + power-of-two scale sidecar); pre-quantized weights
@@ -22,12 +26,14 @@ from typing import Any, Optional
 
 import jax
 
+from repro.core.conv_utils import conv_weight_matrix, im2col
 from repro.core.prequant import (is_prequant, quantize_cnn_param_tree,
                                  quantize_param_tree)
 from repro.engine import backends as BK
 from repro.engine.policy_map import PolicyLike, resolve_policy
 
-__all__ = ["gemm", "prequantize", "prequantize_cnn"]
+__all__ = ["gemm", "conv2d", "conv2d_im2col", "prequantize",
+           "prequantize_cnn"]
 
 
 def gemm(x: jax.Array, w: Any, policy: PolicyLike = None, *,
@@ -49,6 +55,46 @@ def gemm(x: jax.Array, w: Any, policy: PolicyLike = None, *,
     else:
         out = BK.select_backend(pol, w).matmul(x2d, w, pol, key)
     return out.reshape(*lead, n)
+
+
+def conv2d(x: jax.Array, w: Any, policy: PolicyLike = None, *,
+           stride: int = 1, padding: str = "SAME",
+           path: Optional[str] = None,
+           key: Optional[jax.Array] = None) -> jax.Array:
+    """NHWC convolution through the policy-selected BFP backend.
+
+    ``x``: [B, H, W, C] float; ``w``: HWIO [kh, kw, C, OC] float or the
+    prequant ``{"m": int8 HWIO, "s": [K//bk, OC]}`` wire format.  A
+    backend with a faithful fused conv (pallas: the implicit-im2col
+    kernel, no materialized patch matrix in HBM) takes it; everything
+    else — float, emulated, pallas with a scheme the kernel can't honour
+    — falls back honestly to the materialized im2col + :func:`gemm`
+    route, which preserves exact GEMM-engine semantics per backend.
+    """
+    pol = resolve_policy(policy, path)
+    if pol is not None:
+        be = BK.get_backend(pol.backend_name)
+        if be.conv is not None and be.conv_supports(pol, w, stride,
+                                                    padding):
+            return be.conv(x, w, pol, stride, padding, key)
+    return conv2d_im2col(x, w, pol, stride, padding, key)
+
+
+def conv2d_im2col(x: jax.Array, w: Any, pol, stride: int = 1,
+                  padding: str = "SAME", key=None) -> jax.Array:
+    """The materialized-im2col route: paper Fig. 1's matrix form, lowered
+    through the GEMM engine (so backend selection, prequant handling, and
+    fallbacks behave exactly as for any other GEMM).  :func:`conv2d`'s
+    fallback; public so A/B comparisons (benchmarks/conv_bench.py) can
+    force this route against the fused kernel.  ``pol`` is an
+    already-resolved BFPPolicy or None, not a PolicyMap."""
+    prequant = is_prequant(w)
+    kh, kw, c, oc = (w["m"] if prequant else w).shape
+    cols, (b, oh, ow) = im2col(x, kh, kw, stride, padding)
+    wmat = ({"m": conv_weight_matrix(w["m"]), "s": w["s"]} if prequant
+            else conv_weight_matrix(w))
+    out = gemm(cols, wmat, pol, key=key)
+    return out.reshape(b, oh, ow, oc)
 
 
 def prequantize(params: Any, policy: PolicyLike) -> Any:

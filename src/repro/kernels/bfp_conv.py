@@ -1,0 +1,204 @@
+"""Implicit-im2col fused BFP convolution Pallas kernels.
+
+The paper's traffic argument (§3.1, Table 1) is that BFP cuts off-chip
+bytes — yet a materialized im2col inflates activation HBM traffic
+kh*kw-fold (9x for 3x3) before the datapath even starts.  These kernels
+read the padded NHWC input straight from HBM and form the receptive-field
+rows **in VMEM**:
+
+    HBM: x [1, Hp, Wp, C] tile, w GEMM-view [K, bn] stripe --> VMEM
+      gather kh*kw strided slabs  -> patch rows [t_oh*OW, K]   (VMEM only)
+      per K-tile of size bk:
+        block-format patch rows  (per-row exponent over the K-tile)
+        block-format w columns   (per-column exponent; or prequant sidecar)
+        int8 x int8 -> int32 MXU dot, rescale 2^(e_x-(L_I-2))*2^(e_w-(L_W-2))
+        fp32 accumulate (sequential over K-tiles, same order as the GEMM
+        kernel -> bit-identical to im2col + bfp_matmul_pallas)
+    fp32 out [1, t_oh, OW, bn] tile --> HBM
+
+The K-order is the repo-wide HWIO-major conv GEMM view
+(core.conv_utils): k = (di*kw + dj)*C + c.  Because C is innermost and
+NHWC keeps channels contiguous, every (di, dj) offset contributes one
+contiguous channel slab, extractable with *static* slices — the whole
+kernel body is static Python over (kh, kw) offsets; only the output-row
+program id enters a dynamic slice start.
+
+Strided columns use the reshape trick: slice [dj : dj + stride*OW] then
+reshape [OW, stride, C] and keep phase 0 — exact for any static stride.
+
+Grid: (B, OHp/t_oh, OCp/bn).  The K reduction is an in-kernel static
+loop (n_k tiles), so no cross-step accumulator scratch is needed.  VMEM
+sizing note: each program holds the full [Hp, Wp, C] input plane plus
+[t_oh*OW, Kp] patch rows — fine for the interpret-mode CI and for
+real CNN tails; very large early layers would want a row-windowed DMA
+variant (future work, see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.bfp_matmul import _block_format
+
+
+def _patch_rows(x_ref, *, kh: int, kw: int, stride: int, t_oh: int,
+                ow: int, kp: int) -> jax.Array:
+    """Form [t_oh*OW, Kp] receptive-field rows in VMEM for this program's
+    output-row tile (program id 1), zero-padding K up to ``kp``."""
+    c = x_ref.shape[3]
+    oh0 = pl.program_id(1) * t_oh
+    pieces = []
+    for di in range(kh):
+        # output rows oh0..oh0+t_oh-1 need input rows oh0*s+di + s*r:
+        # one dynamic-start slice of s*t_oh rows, then keep phase 0.
+        rows = pl.load(x_ref, (pl.ds(0, 1), pl.ds(oh0 * stride + di,
+                                                  stride * t_oh),
+                               slice(None), slice(None)))
+        rows = rows.reshape(t_oh, stride, rows.shape[2], c)[:, 0]
+        for dj in range(kw):
+            # columns dj + s*i, i < OW: static slice + phase-0 reshape
+            slab = rows[:, dj:dj + stride * ow, :]
+            pieces.append(slab.reshape(t_oh, ow, stride, c)[:, :, 0, :])
+    patches = jnp.concatenate(pieces, axis=-1)     # (di, dj, c) = HWIO-major
+    patches = patches.reshape(t_oh * ow, kh * kw * c)
+    if kp > kh * kw * c:
+        patches = jnp.pad(patches, ((0, 0), (0, kp - kh * kw * c)))
+    return patches
+
+
+def _bfp_conv_kernel(x_ref, w_ref, o_ref, *, kh, kw, stride, t_oh, ow,
+                     bk, n_k, l_i, l_w):
+    """x_ref [1,Hp,Wp,C], w_ref [Kp,bn] float GEMM view -> o_ref
+    [1,t_oh,OW,bn].  Both operands quantized in-kernel per K-tile."""
+    patches = _patch_rows(x_ref, kh=kh, kw=kw, stride=stride, t_oh=t_oh,
+                          ow=ow, kp=n_k * bk)
+    acc = jnp.zeros((t_oh * ow, w_ref.shape[1]), jnp.float32)
+    for t in range(n_k):
+        mx, sx = _block_format(patches[:, t * bk:(t + 1) * bk], l_i, axis=1)
+        mw, sw = _block_format(w_ref[t * bk:(t + 1) * bk, :], l_w, axis=0)
+        part = jax.lax.dot(mx.astype(jnp.int32), mw.astype(jnp.int32),
+                           preferred_element_type=jnp.int32)
+        acc = acc + part.astype(jnp.float32) * (sx * sw)
+    o_ref[...] = acc.reshape(1, t_oh, ow, -1)
+
+
+def _bfp_conv_prequant_kernel(x_ref, wm_ref, ws_ref, o_ref, *, kh, kw,
+                              stride, t_oh, ow, bk, n_k, l_i):
+    """Prequant variant: wm_ref [K,bn] int8 mantissas + ws_ref [n_k,bn]
+    power-of-two step rows (the {"m","s"} wire format lowered to the conv
+    GEMM view).  Only the activation side quantizes in-kernel; ws IS the
+    step the inline quantizer would compute, so this path is bit-exact vs
+    the inline kernel."""
+    patches = _patch_rows(x_ref, kh=kh, kw=kw, stride=stride, t_oh=t_oh,
+                          ow=ow, kp=n_k * bk)
+    acc = jnp.zeros((t_oh * ow, wm_ref.shape[1]), jnp.float32)
+    for t in range(n_k):
+        mx, sx = _block_format(patches[:, t * bk:(t + 1) * bk], l_i, axis=1)
+        mw = wm_ref[t * bk:(t + 1) * bk, :].astype(jnp.int32)
+        part = jax.lax.dot(mx.astype(jnp.int32), mw,
+                           preferred_element_type=jnp.int32)
+        acc = acc + part.astype(jnp.float32) * (sx * ws_ref[t:t + 1, :])
+    o_ref[...] = acc.reshape(1, t_oh, ow, -1)
+
+
+def _check_conv(x_shape, kp, ocp, *, kh, kw, stride, t_oh, ohp, ow, bk,
+                bn, l_sum):
+    b, hp, wp, c = x_shape
+    if ohp % t_oh or ocp % bn or kp % bk:
+        raise ValueError(f"tiles (t_oh={t_oh}, bn={bn}, bk={bk}) must "
+                         f"divide (OHp={ohp}, OCp={ocp}, Kp={kp})")
+    if kp < kh * kw * c:
+        raise ValueError(f"Kp={kp} smaller than kh*kw*C={kh * kw * c}")
+    if hp < stride * ohp + kh - 1 or wp < stride * ow + kw - 1:
+        raise ValueError(
+            f"padded input {hp}x{wp} too small for OHp={ohp}, OW={ow}, "
+            f"k={kh}x{kw}, stride={stride} (need "
+            f">= {stride * ohp + kh - 1}x{stride * ow + kw - 1})")
+    # Paper Fig. 2 accumulator sizing: int32 must hold bk products.
+    if l_sum + math.ceil(math.log2(bk)) > 32:
+        raise ValueError(f"bk={bk} overflows int32 for L_I+L_W={l_sum}")
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kh", "kw", "stride", "t_oh", "ohp", "ow", "bn", "bk", "l_i", "l_w",
+    "interpret"))
+def bfp_conv2d_pallas(x: jax.Array, w2d: jax.Array, *, kh: int, kw: int,
+                      stride: int, t_oh: int, ohp: int, ow: int, bn: int,
+                      bk: int, l_i: int = 8, l_w: int = 8,
+                      interpret: bool = False) -> jax.Array:
+    """Fused implicit-im2col BFP conv.
+
+    x: pre-padded NHWC [B, Hp, Wp, C] (conv padding + alignment, ops.py
+    does this); w2d: conv GEMM view [Kp, OCp], K zero-padded to a ``bk``
+    multiple and OC to a ``bn`` multiple.  Returns [B, OHp, OW, OCp]
+    fp32 (callers slice OH/OC).  ``bk`` IS the BFP block — Scheme.TILED
+    with block_k = bk, bit-identical to im2col + bfp_matmul_pallas
+    (zero K-padding is inert: it changes no block amax and adds zero
+    products, exactly as in ops.bfp_matmul's padding).
+    """
+    b, hp, wp, c = x.shape
+    kp, ocp = w2d.shape
+    n_k = kp // bk
+    _check_conv(x.shape, kp, ocp, kh=kh, kw=kw, stride=stride, t_oh=t_oh,
+                ohp=ohp, ow=ow, bk=bk, bn=bn, l_sum=l_i + l_w)
+    kernel = functools.partial(_bfp_conv_kernel, kh=kh, kw=kw,
+                               stride=stride, t_oh=t_oh, ow=ow, bk=bk,
+                               n_k=n_k, l_i=l_i, l_w=l_w)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, ohp // t_oh, ocp // bn),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, c), lambda bb, i, j: (bb, 0, 0, 0)),
+            pl.BlockSpec((kp, bn), lambda bb, i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, t_oh, ow, bn),
+                               lambda bb, i, j: (bb, i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, ohp, ow, ocp), jnp.float32),
+        interpret=interpret,
+    )(x, w2d)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kh", "kw", "stride", "t_oh", "ohp", "ow", "bn", "bk", "l_i", "l_w",
+    "interpret"))
+def bfp_conv2d_prequant_pallas(x: jax.Array, wm2d: jax.Array,
+                               ws: jax.Array, *, kh: int, kw: int,
+                               stride: int, t_oh: int, ohp: int, ow: int,
+                               bn: int, bk: int, l_i: int = 8,
+                               l_w: int = 8,
+                               interpret: bool = False) -> jax.Array:
+    """Prequant fused conv: weights arrive as int8 GEMM-view mantissas
+    [K, OCp] + power-of-two step sidecar [K//bk, OCp] (K a ``bk``
+    multiple by the wire-format contract).  ``l_w`` only sizes the
+    overflow check — weight quantization already happened offline."""
+    b, hp, wp, c = x.shape
+    kp, ocp = wm2d.shape
+    if wm2d.dtype != jnp.int8:
+        raise ValueError(f"prequant conv kernel streams int8 mantissas, "
+                         f"got {wm2d.dtype}")
+    n_k = kp // bk
+    if ws.shape != (n_k, ocp):
+        raise ValueError(f"scale sidecar {ws.shape} != {(n_k, ocp)} "
+                         f"for bk={bk}")
+    _check_conv(x.shape, kp, ocp, kh=kh, kw=kw, stride=stride, t_oh=t_oh,
+                ohp=ohp, ow=ow, bk=bk, bn=bn, l_sum=l_i + l_w)
+    kernel = functools.partial(_bfp_conv_prequant_kernel, kh=kh, kw=kw,
+                               stride=stride, t_oh=t_oh, ow=ow, bk=bk,
+                               n_k=n_k, l_i=l_i)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, ohp // t_oh, ocp // bn),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, c), lambda bb, i, j: (bb, 0, 0, 0)),
+            pl.BlockSpec((kp, bn), lambda bb, i, j: (0, j)),
+            pl.BlockSpec((n_k, bn), lambda bb, i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, t_oh, ow, bn),
+                               lambda bb, i, j: (bb, i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, ohp, ow, ocp), jnp.float32),
+        interpret=interpret,
+    )(x, wm2d, ws)

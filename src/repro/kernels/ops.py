@@ -15,13 +15,17 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.conv_utils import conv_geometry, conv_weight_matrix
 from repro.core.policy import BFPPolicy
+from repro.kernels.bfp_conv import (bfp_conv2d_pallas,
+                                    bfp_conv2d_prequant_pallas)
 from repro.kernels.bfp_matmul import (bfp_matmul_pallas,
                                       bfp_matmul_prequant_pallas)
 from repro.kernels.bfp_quantize import bfp_quantize_pallas
 
-__all__ = ["bfp_matmul", "bfp_matmul_prequant", "bfp_quantize",
-           "default_tiles"]
+__all__ = ["bfp_matmul", "bfp_matmul_prequant", "bfp_conv2d",
+           "bfp_conv2d_prequant", "bfp_quantize", "default_tiles",
+           "aligned_tile"]
 
 
 def _on_tpu() -> bool:
@@ -41,6 +45,15 @@ def _pow2_ge(d: int) -> int:
     return 1 << max(0, d - 1).bit_length()
 
 
+def aligned_tile(d: int, cap: int = 128) -> int:
+    """THE power-of-two-aligned tile floor, shared by every wrapper:
+    next power of two >= d, floored at 8 (sublane minimum) and capped at
+    ``cap`` (the MXU dimension, or a bandwidth-friendly multiple of it).
+    Small/odd problem dims pad to the NEAREST aligned tile, not a full
+    cap."""
+    return min(cap, max(8, _pow2_ge(d)))
+
+
 def default_tiles(b: int, k: int, n: int, block_k: Optional[int],
                   l_sum: int = 16) -> Tuple[int, int, int]:
     """Pick MXU-aligned tile sizes for a (b, k) x (k, n) problem.
@@ -54,12 +67,12 @@ def default_tiles(b: int, k: int, n: int, block_k: Optional[int],
     auto-picked tiles are always accumulation-safe for the policy's
     mantissa widths.
     """
-    bm = min(128, max(8, _pow2_ge(b)))
-    bn = min(128, max(8, _pow2_ge(n)))
+    bm = aligned_tile(b)
+    bn = aligned_tile(n)
     if block_k:
         bk = block_k
     else:
-        bk = 512 if k >= 512 else min(128, max(8, _pow2_ge(k)))
+        bk = 512 if k >= 512 else aligned_tile(k)
         bk = min(bk, 1 << max(0, 32 - l_sum))   # always accumulation-safe
     return bm, bn, bk
 
@@ -118,13 +131,108 @@ def bfp_matmul_prequant(x2d: jax.Array, wm: jax.Array, ws: jax.Array,
     return out[:b, :n]
 
 
+def _conv_plan(b: int, h: int, w_in: int, c: int, kh: int, kw: int,
+               oc: int, stride: int, padding: str, bk: int):
+    """Static geometry + tiling for the fused conv kernels.
+
+    Returns (pads for x, (oh, ow, ohp, t_oh, bn, kp)).  The padded input
+    covers conv padding PLUS the kernel's alignment contract
+    (Hp >= s*OHp + kh - 1, Wp >= s*OW + kw - 1); extra zero rows/cols are
+    only read by padded output rows, which callers slice off.
+    """
+    oh, ow, (pt, pb), (plf, pr) = conv_geometry(h, w_in, kh, kw, stride,
+                                                padding)
+    # enough output rows per program to feed the MXU a >=128-row M tile
+    # when OW is small; one row when OW alone is wide enough
+    t_oh = max(1, min(oh, 128 // max(1, ow)))
+    ohp = -(-oh // t_oh) * t_oh
+    hp = max(stride * ohp + kh - 1, pt + h + pb)
+    wp = max(stride * ow + kw - 1, plf + w_in + pr)
+    bn = aligned_tile(oc)
+    kp = -(-(kh * kw * c) // bk) * bk
+    pads = ((0, 0), (pt, hp - h - pt), (plf, wp - w_in - plf), (0, 0))
+    return pads, (oh, ow, ohp, t_oh, bn, kp)
+
+
+def bfp_conv2d(x: jax.Array, w_hwio: jax.Array, policy: BFPPolicy,
+               stride: int = 1, padding: str = "SAME",
+               interpret: Optional[bool] = None) -> jax.Array:
+    """NHWC conv through the fused implicit-im2col kernel (Scheme.TILED).
+
+    x: [B, H, W, C] float; w_hwio: [kh, kw, C, OC] float.  The K tile
+    ``policy.block_k`` IS the BFP block (whole-K when None); K zero-pads
+    to a tile multiple exactly like ops.bfp_matmul, so the result is
+    bit-identical to im2col + the fused GEMM kernel.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, h, w_in, c = x.shape
+    kh, kw, c2, oc = w_hwio.shape
+    if c != c2:
+        raise ValueError(f"channel mismatch: x {x.shape} vs w "
+                         f"{w_hwio.shape}")
+    bk = policy.block_k or kh * kw * c
+    pads, (oh, ow, ohp, t_oh, bn, kp) = _conv_plan(
+        b, h, w_in, c, kh, kw, oc, stride, padding, bk)
+    xp = jnp.pad(x.astype(jnp.float32), pads)
+    w2d = conv_weight_matrix(w_hwio.astype(jnp.float32))
+    w2d = _pad_to(w2d, (kp, bn))
+    out = bfp_conv2d_pallas(xp, w2d, kh=kh, kw=kw, stride=stride,
+                            t_oh=t_oh, ohp=ohp, ow=ow, bn=bn, bk=bk,
+                            l_i=policy.l_i, l_w=policy.l_w,
+                            interpret=interpret)
+    return out[:, :oh, :, :oc]
+
+
+def bfp_conv2d_prequant(x: jax.Array, wm_hwio: jax.Array, ws: jax.Array,
+                        policy: BFPPolicy, stride: int = 1,
+                        padding: str = "SAME",
+                        interpret: Optional[bool] = None) -> jax.Array:
+    """NHWC conv with pre-quantized weights (int8 HWIO mantissa + GEMM-view
+    step sidecar [K//bk, OC], core.prequant wire format).
+
+    The sidecar block IS the kernel K tile (K is a ``bk`` multiple by the
+    wire-format contract), so prequant execution is bit-exact vs
+    :func:`bfp_conv2d` with the same policy.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, h, w_in, c = x.shape
+    kh, kw, c2, oc = wm_hwio.shape
+    if c != c2:
+        raise ValueError(f"channel mismatch: x {x.shape} vs w "
+                         f"{wm_hwio.shape}")
+    k = kh * kw * c
+    t = ws.shape[0]
+    if t == 0 or k % t:
+        raise ValueError(f"sidecar {ws.shape} incompatible with K={k}")
+    bk = k // t
+    if policy.block_k not in (None, bk):
+        raise ValueError(f"policy.block_k={policy.block_k} != prequant "
+                         f"block {bk}")
+    pads, (oh, ow, ohp, t_oh, bn, kp) = _conv_plan(
+        b, h, w_in, c, kh, kw, oc, stride, padding, bk)
+    assert kp == k, "wire-format K is a bk multiple by construction"
+    xp = jnp.pad(x.astype(jnp.float32), pads)
+    wm2d = _pad_to(conv_weight_matrix(wm_hwio), (bk, bn))
+    wsp = _pad_to(ws.astype(jnp.float32), (1, bn), values=1.0)
+    out = bfp_conv2d_prequant_pallas(xp, wm2d, wsp, kh=kh, kw=kw,
+                                     stride=stride, t_oh=t_oh, ohp=ohp,
+                                     ow=ow, bn=bn, bk=bk, l_i=policy.l_i,
+                                     l_w=policy.l_w, interpret=interpret)
+    return out[:, :oh, :, :oc]
+
+
 def bfp_quantize(x: jax.Array, bits: int, block_k: int,
                  interpret: Optional[bool] = None):
     """[M,K] -> (mantissa int8 [M,K], exps int32 [M,ceil(K/bk)]) padded-safe."""
     if interpret is None:
         interpret = not _on_tpu()
     m_rows, k = x.shape
-    bm = 256 if m_rows >= 256 else max(8, _pow2_ge(m_rows))
+    # same aligned floor as default_tiles (one helper, one rationale);
+    # the streaming quantizer has no MXU operand so it rides a taller
+    # 256-row tile for bandwidth.
+    bm = aligned_tile(m_rows, 256)
     xp = _pad_to(x.astype(jnp.float32), (bm, block_k))
     m, e = bfp_quantize_pallas(xp, bits=bits, bm=bm, bk=block_k,
                                interpret=interpret)

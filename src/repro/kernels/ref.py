@@ -53,6 +53,47 @@ def bfp_quantize_ref(x: jax.Array, bits: int, block_k: int
     return m.reshape(m_rows, k), e.reshape(m_rows, k // block_k)
 
 
+def bfp_conv2d_ref(x: jax.Array, w_hwio: jax.Array, l_i: int, l_w: int,
+                   block_k: int, stride: int = 1,
+                   padding: str = "SAME") -> jax.Array:
+    """Oracle for the fused implicit-im2col conv kernels.
+
+    Materializes the patch matrix the slow, obvious way — explicit
+    Python loops over (di, dj) offsets in HWIO-major K-order
+    (k = (di*kw + dj)*C + c), zero K-padding to a ``block_k`` multiple —
+    then reuses :func:`bfp_matmul_ref`.  Deliberately independent of
+    ``core.conv_utils`` / ``lax.conv_general_dilated_patches`` so kernel,
+    oracle, and core library triangulate.
+    """
+    b, h, w_in, c = x.shape
+    kh, kw, _, oc = w_hwio.shape
+    if padding == "SAME":
+        oh, ow = -(-h // stride), -(-w_in // stride)
+        ph = max((oh - 1) * stride + kh - h, 0)
+        pw = max((ow - 1) * stride + kw - w_in, 0)
+        pt, plf = ph // 2, pw // 2
+        xp = jnp.pad(x, ((0, 0), (pt, ph - pt), (plf, pw - plf), (0, 0)))
+    else:
+        assert padding == "VALID"
+        oh, ow = (h - kh) // stride + 1, (w_in - kw) // stride + 1
+        xp = x
+    slabs = []
+    for di in range(kh):
+        for dj in range(kw):
+            slabs.append(jax.lax.slice(
+                xp, (0, di, dj, 0),
+                (b, di + (oh - 1) * stride + 1, dj + (ow - 1) * stride + 1,
+                 c), (1, stride, stride, 1)))          # [B, OH, OW, C]
+    patches = jnp.stack(slabs, axis=3)                 # [B,OH,OW,kh*kw,C]
+    cols = patches.reshape(b * oh * ow, kh * kw * c)
+    k = kh * kw * c
+    kp = -(-k // block_k) * block_k
+    cols = jnp.pad(cols, ((0, 0), (0, kp - k)))
+    wmat = jnp.pad(w_hwio.reshape(k, oc), ((0, kp - k), (0, 0)))
+    out = bfp_matmul_ref(cols, wmat, l_i, l_w, block_k)
+    return out.reshape(b, oh, ow, oc)
+
+
 def bfp_matmul_ref(x: jax.Array, w: jax.Array, l_i: int, l_w: int,
                    block_k: int) -> jax.Array:
     """Oracle for the fused BFP matmul kernel.

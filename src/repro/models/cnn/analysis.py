@@ -39,10 +39,10 @@ class LayerRow:
 
 
 def _conv_as_matrices(params, x, name):
-    kh, kw, in_ch, out_ch = params[name]["w"].shape
+    from repro.core.conv_utils import conv_weight_matrix
+    kh, kw, _, out_ch = params[name]["w"].shape
     cols, (b, oh, ow) = L.im2col(x, kh, kw, 1, "SAME")
-    w = jnp.transpose(params[name]["w"], (2, 0, 1, 3)).reshape(
-        in_ch * kh * kw, out_ch)
+    w = conv_weight_matrix(params[name]["w"])
     return cols, w, params[name]["b"], (b, oh, ow, out_ch)
 
 

@@ -1,5 +1,7 @@
 """GoogLeNet (Szegedy et al. 2015) with the three classifier heads the
-paper reports (loss1/loss2/loss3 columns of Table 3)."""
+paper reports (loss1/loss2/loss3 columns of Table 3).  Inception branch
+convs (1x1 / 3x3 / 5x5, mixed per-branch shapes) all route through
+``engine.conv2d`` — fused implicit-im2col on the pallas backend."""
 from __future__ import annotations
 
 from typing import Optional

@@ -1,25 +1,30 @@
 """CNN layers with the BFP datapath (paper §3.2-3.4).
 
-Convolution is expressed as the paper's matrix form: im2col expands
-receptive fields into rows of an input matrix I, the kernels form W, and
-``O = I @ W`` runs through :func:`repro.engine.gemm` — block formatting +
-fixed-point MAC, exactly the paper's Fig. 2 pipeline.  ``policy=None``
-gives the float reference path; a ``repro.engine.PolicyMap`` resolves a
-per-layer policy against the layer's ``path`` (paper Table-3 layer-wise
-assignments).  Weights may be pre-quantized to the ``{"m", "s"}`` wire
-format (``repro.engine.prequantize_cnn``): the engine consumes it on
-every backend, so inference skips per-forward weight re-quantization.
+Convolution is the paper's matrix form ``O = I @ W`` (Fig. 1), executed
+by :func:`repro.engine.conv2d`: on the pallas backend that is the fused
+implicit-im2col kernel — receptive-field rows are formed in VMEM, the
+patch matrix never hits HBM — and on every other backend/scheme the
+engine falls back to materialized :func:`im2col` + ``engine.gemm``
+(identical numerics; tests assert the two routes agree bit-exactly for
+Scheme.TILED).  ``policy=None`` gives the float reference path; a
+``repro.engine.PolicyMap`` resolves a per-layer policy against the
+layer's ``path`` (paper Table-3 layer-wise assignments).  Weights may be
+pre-quantized to the ``{"m", "s"}`` wire format
+(``repro.engine.prequantize_cnn``): every backend — including the
+sidecar-consuming fused conv kernel — consumes it directly, so inference
+skips per-forward weight re-quantization.
 
 Parameters are plain pytrees (dicts); every layer is a pure function.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro import engine as EG
+from repro.core.conv_utils import im2col  # re-export: the shared helper
 from repro.engine import PolicyLike
 
 __all__ = ["conv2d_init", "conv2d", "im2col", "dense_init", "dense",
@@ -47,46 +52,18 @@ def conv2d_init(key, in_ch: int, out_ch: int, kh: int, kw: int):
     }
 
 
-def im2col(x: jax.Array, kh: int, kw: int, stride: int,
-           padding: str) -> Tuple[jax.Array, Tuple[int, int, int]]:
-    """NHWC -> patch matrix [B*OH*OW, kh*kw*C] (receptive fields as rows).
-
-    This is the paper's I matrix (transposed to NN orientation): row n is
-    the n-th receptive field, matching bfp_dot's per-row activation blocks.
-    """
-    b = x.shape[0]
-    patches = jax.lax.conv_general_dilated_patches(
-        x, (kh, kw), (stride, stride), padding,
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    oh, ow = patches.shape[1], patches.shape[2]
-    # conv_general_dilated_patches yields features ordered as C*kh*kw
-    # (channel-major); weight layout below matches it.
-    return patches.reshape(b * oh * ow, -1), (b, oh, ow)
-
-
 def conv2d(params, x: jax.Array, stride: int = 1, padding: str = "SAME",
            policy: PolicyLike = None,
            path: Optional[str] = None) -> jax.Array:
-    """BFP convolution via im2col GEMM.  x: NHWC float.
+    """BFP convolution through :func:`repro.engine.conv2d`.  x: NHWC.
 
     ``params["w"]`` is an HWIO float kernel or its prequant form (int8
-    HWIO mantissa + GEMM-view scale sidecar); for prequant only the cheap
-    int8 transpose into the GEMM view runs per forward — the float
-    quantization happened once, offline.
+    HWIO mantissa + GEMM-view scale sidecar); the engine picks the fused
+    implicit-im2col kernel or the materialized-im2col GEMM route per
+    backend/policy.
     """
-    w = params["w"]
-    prequant = EG.is_prequant(w)
-    kh, kw, in_ch, out_ch = (w["m"] if prequant else w).shape
-    cols, (b, oh, ow) = im2col(x, kh, kw, stride, padding)
-    # patches come out channel-major (C, kh, kw) -> match weight row order
-    if prequant:
-        wmat = {"m": jnp.transpose(w["m"], (2, 0, 1, 3)).reshape(
-            in_ch * kh * kw, out_ch), "s": w["s"]}
-    else:
-        wmat = jnp.transpose(w, (2, 0, 1, 3)).reshape(
-            in_ch * kh * kw, out_ch)
-    out = EG.gemm(cols, wmat, policy, path=path) + params["b"]
-    return out.reshape(b, oh, ow, out_ch)
+    return EG.conv2d(x, params["w"], policy, stride=stride,
+                     padding=padding, path=path) + params["b"]
 
 
 # ---------------------------------------------------------------------------

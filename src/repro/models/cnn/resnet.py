@@ -2,6 +2,8 @@
 
 Inference-mode batch norm (the paper deploys trained models without
 retraining); ``width_mult``/``stage_depths`` allow reduced smoke configs.
+Convs (incl. the strided stem and projection shortcuts) run through
+``engine.conv2d`` — fused implicit-im2col on the pallas backend.
 """
 from __future__ import annotations
 

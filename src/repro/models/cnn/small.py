@@ -4,7 +4,8 @@ LeNet-5-style for 28x28x1 and CIFAR-quick for 32x32x3; both train to high
 accuracy on the in-repo synthetic datasets in seconds on CPU, which is how
 the Table-3-style accuracy-drop sweeps are produced without ILSVRC12
 (DESIGN.md §8.1).  Layer paths ("c1", "c2", ..., "fc1", "fc2") feed
-PolicyMap per-layer rules."""
+PolicyMap per-layer rules.  Convs run through ``engine.conv2d`` (fused
+implicit-im2col on the pallas backend, im2col+GEMM otherwise)."""
 from __future__ import annotations
 
 import jax

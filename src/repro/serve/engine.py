@@ -108,6 +108,12 @@ class ServeEngine:
                  max_len: int = 512,
                  policy: PolicyLike = None,
                  prequant: PolicyLike = None):
+        if cfg.is_encdec:
+            # decode-only slot engine: no encoder prefill path, and the
+            # enc_out cache leaf ([B, S, D]) breaks the slot-axis-at-dim-1
+            # contract _merge_rows relies on
+            raise ValueError("ServeEngine does not serve encoder-decoder "
+                             "configs; use serve.generate with enc_feats")
         if prequant is not None:
             # cached pre-quantized weights: block-format once here, serve
             # the int8+scale wire format on every subsequent GEMM
@@ -116,6 +122,8 @@ class ServeEngine:
         self.slots = slots
         self.max_len = max_len
         self.cache = Mdl.init_cache(cfg, slots, max_len)
+        #: pristine per-slot state for admission-time row resets
+        self._cache0 = self.cache
         self.slot_req: List[Optional[Request]] = [None] * slots
         self.slot_pos = [0] * slots
         self.queue: List[Request] = []
@@ -127,21 +135,64 @@ class ServeEngine:
         self._step = jax.jit(_step)
 
     def submit(self, req: Request):
+        if not req.prompt:
+            # an empty prompt would leave _admit's prefill loop with no
+            # logits to seed the first decode from, wedging the slot
+            raise ValueError("request prompt must be non-empty")
         self.queue.append(req)
+
+    def _merge_rows(self, old, new, rows):
+        """Keep only slot ``rows`` of the stepped cache; every other
+        slot's rows are restored from ``old``.
+
+        The jitted step is whole-batch and decode_step takes ONE scalar
+        position, so any call writes every slot's cache row at that
+        position — garbage for slots that are at a different position.
+        ``init_cache`` puts the slot axis at dim 1 on every leaf
+        ([n_layers, B, ...]) for the families this engine serves
+        (encoder-decoder configs are rejected at construction), so the
+        mask is structural, not guessed.
+        """
+        sel = jnp.zeros((self.slots,), bool)
+        sel = sel.at[jnp.asarray(rows)].set(True)
+
+        def one(o, n):
+            shape = [1] * o.ndim
+            shape[1] = self.slots
+            return jnp.where(sel.reshape(shape), n, o)
+
+        return jax.tree_util.tree_map(one, old, new)
 
     def _admit(self):
         for s in range(self.slots):
             if self.slot_req[s] is None and self.queue:
                 req = self.queue.pop(0)
                 self.slot_req[s] = req
-                # per-slot prefill: step the shared cache on this row only
-                # (shape-stable: we step the whole batch but other rows'
-                # caches are overwritten with their own values -> mask via
-                # re-prefill; simple and correct for the lite engine)
+                # reset slot s to pristine state: recurrent families
+                # (ssm/hybrid) READ-modify-write their states h' = f(h, x),
+                # so a reused slot must not prefill from the previous
+                # occupant's (or a wholesale-stepped garbage) state.  KV
+                # rows are position-overwritten anyway, so this costs one
+                # merge and buys correctness for every cache family.
+                self.cache = self._merge_rows(self.cache, self._cache0,
+                                              [s])
+                others = [r for i, r in enumerate(self.slot_req)
+                          if r is not None and i != s]
+                # per-slot prefill: the shape-stable step runs the whole
+                # batch, but ONLY row s's cache writes are kept — already
+                # active slots would otherwise have their rows clobbered
+                # at the new request's (wrong) positions.  Batch rows are
+                # independent in decode_step, so garbage other rows pick
+                # up MID-loop is never read by row s: one merge after the
+                # loop is bit-identical and len(prompt)x cheaper; with no
+                # other slot active the merge is skipped entirely.
+                cache = self.cache
                 for t, tok in enumerate(req.prompt):
                     toks = self._tok.at[s, 0].set(tok)
-                    logits, self.cache = self._step(
-                        self.cache, toks, jnp.asarray(t, jnp.int32))
+                    logits, cache = self._step(
+                        cache, toks, jnp.asarray(t, jnp.int32))
+                self.cache = (self._merge_rows(self.cache, cache, [s])
+                              if others else cache)
                 self.slot_pos[s] = len(req.prompt)
                 req._next = int(jnp.argmax(logits[s, -1]))
 
@@ -156,11 +207,29 @@ class ServeEngine:
             req = self.slot_req[s]
             toks = toks.at[s, 0].set(req._next if not req.out
                                      else req.out[-1])
-        pos = jnp.asarray(max(self.slot_pos[s] for s in active), jnp.int32)
-        logits, self.cache = self._step(self.cache, toks, pos)
+        # decode_step takes a scalar position, but staggered admissions
+        # leave slots at DIFFERENT positions.  Step each position group
+        # separately, keeping only that group's rows — one jitted call
+        # per distinct position (usually 1; bounded by #slots).  The old
+        # max(slot_pos) stepping wrote every slot's KV at the most
+        # advanced slot's position.
+        by_pos: Dict[int, List[int]] = {}
+        for s in active:
+            by_pos.setdefault(self.slot_pos[s], []).append(s)
+        next_tok: Dict[int, int] = {}
+        for pos, group in sorted(by_pos.items()):
+            logits, stepped = self._step(self.cache, toks,
+                                         jnp.asarray(pos, jnp.int32))
+            # single group (steady state): every active slot is at this
+            # position and inactive rows are rewritten before any read,
+            # so the masked merge copy would protect nothing — skip it.
+            self.cache = (stepped if len(by_pos) == 1 else
+                          self._merge_rows(self.cache, stepped, group))
+            for s in group:
+                next_tok[s] = int(jnp.argmax(logits[s, -1]))
         for s in active:
             req = self.slot_req[s]
-            req.out.append(int(jnp.argmax(logits[s, -1])))
+            req.out.append(next_tok[s])
             self.slot_pos[s] += 1
             if len(req.out) >= req.max_new:
                 req.done = True

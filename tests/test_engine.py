@@ -276,6 +276,16 @@ def test_prequant_resolves_same_paths_as_runtime():
     assert not EG.is_prequant(pq["stem"]["conv"]["w"])    # pinned float
     assert EG.is_prequant(pq["blocks"][0]["c1"]["conv"]["w"])
 
+    # googlenet aux heads: the runtime path KEEPS the "conv" segment
+    # ("loss1/conv" — plain conv layer keyed "conv", no bn sibling), so a
+    # rule anchored on it must pin the same layer at prequant time.
+    from repro.models.cnn import googlenet
+    gparams = googlenet.init(KEY, 10, width_mult=0.125)
+    pm_g = PolicyMap.of(("^loss1/conv$", None), default=EQ4)
+    pq_g = EG.prequantize_cnn(gparams, pm_g)
+    assert not EG.is_prequant(pq_g["loss1"]["conv"]["w"])  # pinned float
+    assert EG.is_prequant(pq_g["loss2"]["conv"]["w"])
+
     from repro.configs.base import reduced
     from repro.configs.registry import ARCHS
     from repro.models.lm import model as Mdl

@@ -132,6 +132,64 @@ def test_serve_engine_continuous_batching():
     assert all(len(r.out) == 4 for r in done)
 
 
+def test_serve_engine_staggered_requests_match_isolated():
+    """Regression: a request admitted mid-flight must not clobber the
+    cache rows of already-active slots (per-row-masked prefill), and
+    slots at different positions must each decode at their OWN position
+    (the old code used max(slot_pos) for everyone).  Greedy decoding, so
+    each request's tokens must exactly match the same request served
+    alone."""
+    state = init_state(CFG, KEY)
+    p1, p2 = [1, 2, 3], [7, 8]
+
+    def solo(prompt, max_new):
+        eng = ServeEngine(state.params, CFG, slots=1, max_len=64)
+        r = Request(rid=0, prompt=prompt, max_new=max_new)
+        eng.submit(r)
+        eng.run()
+        return list(r.out)
+
+    ref1, ref2 = solo(p1, 6), solo(p2, 6)
+
+    eng = ServeEngine(state.params, CFG, slots=2, max_len=64)
+    r1 = Request(rid=1, prompt=p1, max_new=6)
+    eng.submit(r1)
+    eng.step()
+    eng.step()                       # r1 is now 2 tokens ahead
+    r2 = Request(rid=2, prompt=p2, max_new=6)
+    eng.submit(r2)                   # staggered admission
+    while eng.step():
+        pass
+    assert r1.done and r2.done
+    assert r1.out == ref1, (r1.out, ref1)
+    assert r2.out == ref2, (r2.out, ref2)
+
+
+def test_serve_engine_slot_reuse_resets_recurrent_state():
+    """Regression: recurrent families (ssm) read-modify-write their
+    states, so a reused slot must be reset to pristine state at
+    admission — otherwise the second request prefils from the first
+    request's leftover state and its greedy tokens diverge."""
+    cfg = reduced(ARCHS["rwkv6-3b"], n_layers=2, d_model=64, vocab=256)
+    state = init_state(cfg, KEY)
+
+    def solo(prompt):
+        eng = ServeEngine(state.params, cfg, slots=1, max_len=64)
+        r = Request(rid=0, prompt=prompt, max_new=4)
+        eng.submit(r)
+        eng.run()
+        return list(r.out)
+
+    ref2 = solo([5, 6])
+    eng = ServeEngine(state.params, cfg, slots=1, max_len=64)
+    r1 = Request(rid=1, prompt=[1, 2, 3], max_new=4)
+    r2 = Request(rid=2, prompt=[5, 6], max_new=4)
+    eng.submit(r1)
+    eng.submit(r2)          # runs in the slot r1 vacates
+    eng.run()
+    assert r2.out == ref2, (r2.out, ref2)
+
+
 def test_grad_compression_error_feedback():
     """BFP-compressed grads + error feedback: compressed-sum converges to
     the true sum over steps (unbiasedness, beyond-paper E9)."""
