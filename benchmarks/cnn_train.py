@@ -6,8 +6,6 @@ at various mantissa widths — no retraining, exactly the paper's protocol.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp

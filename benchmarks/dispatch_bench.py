@@ -1,0 +1,121 @@
+"""Dispatch cost: bound-plan vs per-call policy resolution (E13).
+
+``engine.bind`` moves PolicyMap regex resolution, registry lookup, and
+backend support checks from every ``engine.gemm``/``conv2d`` call to a
+single admission-time walk.  Inside ``jax.jit`` the two compile to the
+same HLO, so the win shows up in (a) TRACE time — every Python-level
+engine call runs during tracing, for every new shape bucket — and
+(b) steady-state EAGER dispatch, the mode the tap-based Table-4
+analysis and small-batch experimentation run in.
+
+Rows:
+  dispatch/bind              one-time plan construction (includes the
+                             prequant jax work — the cost you pay once
+                             to stop paying the others)
+  dispatch/trace_percall     jit-trace a CNN forward, PolicyMap policy
+  dispatch/trace_plan        same trace through a bound Plan
+  dispatch/resolve_percall   isolated per-call dispatch work: PolicyMap
+                             regex resolution + backend support checks
+  dispatch/resolve_plan      the bound equivalent: one dict hit
+  dispatch/eager_e2e_*       end-to-end eager GEMM for context (the jnp
+                             compute dominates; dispatch deltas are in
+                             the noise here, which is the point — the
+                             steady-state win is trace/resolve time)
+
+Run:  PYTHONPATH=src python -m benchmarks.run dispatch
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks import common
+from benchmarks.common import bench_reps, emit, time_call
+from repro import engine as EG
+from repro.core.policy import BFPPolicy
+from repro.engine import PolicyMap
+from repro.models.cnn import small
+
+
+def _trace_us(policy, params, x):
+    """Trace (lower) a fresh jit of the cifarnet forward; fresh closure
+    each call so jax's jit cache cannot short-circuit the measurement."""
+    def f(p, xx):
+        return small.cifarnet_apply(p, xx, policy)
+    t0 = time.perf_counter()
+    jax.jit(f).lower(params, x)
+    return (time.perf_counter() - t0) * 1e6
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    params = small.cifarnet_init(key)
+    b = 2 if common.SMOKE else 8
+    x = jax.random.normal(key, (b, 32, 32, 3))
+    pol = BFPPolicy(straight_through=False)
+    # a realistic mixed assignment: enough rules that per-call regex
+    # resolution does real work at every site
+    pm = PolicyMap.of(("^c1$", None),
+                      ("^c2$", pol),
+                      ("^c3$", pol.with_(l_w=6, l_i=6)),
+                      ("^fc1$", pol.with_(l_w=6, l_i=6)),
+                      default=pol)
+
+    t0 = time.perf_counter()
+    plan = EG.bind(params, pm)
+    bind_us = (time.perf_counter() - t0) * 1e6
+    emit("dispatch/bind", bind_us, f"sites={len(plan.sites)}")
+
+    reps = 1 if common.SMOKE else 5
+    tr_pm = sorted(_trace_us(pm, params, x) for _ in range(reps))[reps // 2]
+    tr_plan = sorted(_trace_us(plan, plan.params, x)
+                     for _ in range(reps))[reps // 2]
+    emit("dispatch/trace_percall", tr_pm, "")
+    emit("dispatch/trace_plan", tr_plan,
+         f"speedup_vs_percall={tr_pm / tr_plan:.2f}x")
+
+    # isolated per-call dispatch work: exactly what bind hoists out of
+    # the hot path (regex rule resolution + registry/support checks vs
+    # one dict hit)
+    xs = jax.random.normal(key, (4, 32))
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 16)) * 0.1
+    n = 50 if common.SMOKE else 5000
+
+    def resolve_percall():
+        for _ in range(n):
+            p = EG.resolve_policy(pm, "fc1")
+            EG.select_backend(p, w)
+
+    def resolve_plan():
+        for _ in range(n):
+            plan.site("fc1")
+
+    iters = bench_reps(warmup=2, iters=9)
+    us_pm = time_call(resolve_percall, **iters) / n
+    us_plan = time_call(resolve_plan, **iters) / n
+    emit("dispatch/resolve_percall", us_pm, f"calls={n}")
+    emit("dispatch/resolve_plan", us_plan,
+         f"speedup_vs_percall={us_pm / us_plan:.1f}x")
+
+    # end-to-end eager context: same jnp compute either way, so the
+    # dispatch delta disappears into execution time (expected ~1.0x)
+    m = 5 if common.SMOKE else 50
+
+    # return the outputs so time_call's block_until_ready actually waits
+    # on the async-dispatched GEMMs instead of just their enqueue
+    def eager_pm():
+        return [EG.gemm(xs, w, pm, path="fc1") for _ in range(m)]
+
+    def eager_plan():
+        return [plan.gemm(xs, w, path="fc1") for _ in range(m)]
+
+    us_pm = time_call(eager_pm, **iters) / m
+    us_plan = time_call(eager_plan, **iters) / m
+    emit("dispatch/eager_e2e_percall", us_pm, f"calls={m}")
+    emit("dispatch/eager_e2e_plan", us_plan,
+         f"ratio_vs_percall={us_pm / us_plan:.2f}x (compute-dominated)")
+
+
+if __name__ == "__main__":
+    run()

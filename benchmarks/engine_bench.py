@@ -17,7 +17,6 @@ Run:  PYTHONPATH=src python -m benchmarks.run engine
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks import common
 from benchmarks.common import bench_reps, emit, time_call

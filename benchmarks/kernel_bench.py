@@ -7,11 +7,10 @@ number.  Reports us/call and the effective GEMM rate.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import bfp
 from repro.core.bfp_dot import bfp_matmul_2d
-from repro.core.policy import BFPPolicy, PAPER_DEFAULT, TPU_TILED
+from repro.core.policy import PAPER_DEFAULT, TPU_TILED
 from benchmarks import common
 from benchmarks.common import bench_reps, emit, time_call
 

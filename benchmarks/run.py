@@ -12,6 +12,8 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
                        re-quantization (ISSUE 1 acceptance)
   conv_bench           E12 fused implicit-im2col conv vs im2col+GEMM
                        (ISSUE 2 acceptance)
+  dispatch_bench       E13 bound-plan vs per-call dispatch (trace time +
+                       eager steady state; ISSUE 3 acceptance)
 
 Flags:
   --smoke       tiny shapes, 1 rep — CI rot-check mode (the numbers are
@@ -29,8 +31,9 @@ import time
 import traceback
 
 from benchmarks import (blocksize_ablation, common, conv_bench,
-                        engine_bench, kernel_bench, table1_storage,
-                        table2_scheme, table3_sweep, table4_nsr)
+                        dispatch_bench, engine_bench, kernel_bench,
+                        table1_storage, table2_scheme, table3_sweep,
+                        table4_nsr)
 
 _ALL = {
     "table1": table1_storage.run,
@@ -41,6 +44,7 @@ _ALL = {
     "blocksize": blocksize_ablation.run,
     "engine": engine_bench.run,
     "conv": conv_bench.run,
+    "dispatch": dispatch_bench.run,
 }
 
 

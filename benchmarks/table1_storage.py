@@ -8,7 +8,6 @@ sizes from the actual BFPBlock tensors.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import bfp
 from repro.core.bfp import Scheme

@@ -1,9 +1,14 @@
-"""Paper Table 4 — per-layer experimental vs model SNR on VGG-16.
+"""Paper Table 4 — per-layer experimental vs model SNR, all four nets.
 
 Full-architecture VGG-16 (ImageNet-shaped synthetic inputs, He-init
 weights): the NSR theory is data-parametric, so this validates the
 paper's analytical contribution without ILSVRC12 (DESIGN.md §8.1).
 Reduced width keeps CPU runtime sane; --full uses width 1.0.
+
+ResNet-18 and GoogLeNet (the paper's other Table-3/4 networks) run
+through the tap-based ``analyze_model`` with measured-inheritance
+eq. 19-20 — branch/concat topologies the sequential walker could not
+traverse; only the per-model worst deviation is emitted.
 """
 from __future__ import annotations
 
@@ -12,7 +17,7 @@ import sys
 import jax
 
 from repro.core.policy import BFPPolicy
-from repro.models.cnn import analysis, vgg
+from repro.models.cnn import analysis, googlenet, resnet, vgg
 from benchmarks import common
 from benchmarks.common import emit
 
@@ -34,6 +39,32 @@ def run(width: float = 0.25, hw: int = 64, layers: int = 10):
              f"dev={dev:.2f}")
     emit("table4/worst_deviation_db", 0.0,
          f"{worst:.2f} (paper reports <= 8.9 dB)")
+
+    # beyond the sequential walker: branch topologies via engine taps
+    rw = 0.125 if common.SMOKE else 0.25
+    rhw = 24 if common.SMOKE else 32
+    rparams = resnet.init(key, 18, 1000, width_mult=rw,
+                          stage_depths=(1, 1, 1, 1) if common.SMOKE
+                          else None)
+    rx = jax.random.normal(jax.random.PRNGKey(2), (2, rhw, rhw, 3))
+    cap = 6 if common.SMOKE else None
+    rows = analysis.analyze_model(resnet.apply, rparams, rx, BFPPolicy(),
+                                  max_sites=cap)
+    dev = max(abs(r.output_ex - r.output_multi) for r in rows)
+    emit("table4/resnet18_worst_deviation_db", 0.0,
+         f"{dev:.2f} over {len(rows)} sites (measured inheritance)")
+
+    # aux heads need >= 64x64 inputs (4x4 pooled maps); smoke drops them
+    ghw = 32 if common.SMOKE else 64
+    g_apply = googlenet.apply if not common.SMOKE else \
+        (lambda p, xx, pol: googlenet.apply(p, xx, pol, with_aux=False))
+    gparams = googlenet.init(key, 1000, width_mult=0.125)
+    gx = jax.random.normal(jax.random.PRNGKey(3), (2, ghw, ghw, 3))
+    rows = analysis.analyze_model(g_apply, gparams, gx, BFPPolicy(),
+                                  max_sites=cap)
+    dev = max(abs(r.output_ex - r.output_multi) for r in rows)
+    emit("table4/googlenet_worst_deviation_db", 0.0,
+         f"{dev:.2f} over {len(rows)} sites (measured inheritance)")
 
 
 if __name__ == "__main__":

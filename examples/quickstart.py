@@ -6,15 +6,17 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 2. run a BFP GEMM on the integer datapath (paper Fig. 2),
 3. predict its output SNR with the paper's analytical model (eq. 18)
    and compare with measurement,
-4. do the same through a conv layer (paper §3.2 matrix form).
+4. deploy a CNN with engine.bind: policies resolved, backends selected,
+   weights pre-quantized ONCE — then just run (DESIGN.md §7.1),
+5. watch the real datapath with engine taps (DESIGN.md §7.2).
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import (BFPPolicy, PAPER_DEFAULT, TPU_TILED, Scheme,
-                        bfp_dot, quantize)
-from repro.core.nsr import (analyze_gemm_chain, predict_matrix_snr, snr_db)
-from repro.models.cnn import layers as L
+from repro import engine
+from repro.core import PAPER_DEFAULT, TPU_TILED, bfp_dot, quantize
+from repro.core.nsr import analyze_gemm_chain, snr_db
+from repro.models.cnn import small
 
 key = jax.random.PRNGKey(0)
 
@@ -38,11 +40,33 @@ rep = analyze_gemm_chain(x, [w], PAPER_DEFAULT.with_(straight_through=False))[0]
 print("\npredicted output SNR (eq. 18):", rep.snr_output_single, "dB")
 print("measured  output SNR          :", rep.snr_output_measured, "dB")
 
-# --- 4. a BFP convolution (paper's matrix form) -----------------------------
-img = jax.random.normal(jax.random.PRNGKey(2), (1, 16, 16, 3))
-conv = L.conv2d_init(jax.random.PRNGKey(3), 3, 8, 3, 3)
-out_f = L.conv2d(conv, img, policy=None)
-out_q = L.conv2d(conv, img, policy=PAPER_DEFAULT.with_(straight_through=False))
-print("\nconv output SNR:", float(snr_db(out_f, out_q)), "dB")
+# --- 4. bind once, then run (the deployment mode) ---------------------------
+# engine.bind walks the params ONCE: per-layer policy rules resolved,
+# backends validated + selected (strict=True would refuse fallbacks),
+# weights pre-quantized to the int8+scale wire format.
+pol = PAPER_DEFAULT.with_(straight_through=False)
+params = small.lenet_init(jax.random.PRNGKey(4))
+imgs = jax.random.normal(jax.random.PRNGKey(5), (2, 28, 28, 1))
+plan = engine.bind(params, engine.PolicyMap.of(("^c1$", None),  # stem float
+                                               default=pol))
+print("\nbound plan:\n" + plan.describe())
+out_bound = small.lenet_apply(plan.params, imgs, plan)   # plan rides `policy`
+print("bound forward:", out_bound.shape)
+
+# legacy shim: the per-call path still works — same engine, same bits,
+# policies re-resolved and weights re-quantized every forward.
+out_legacy = small.lenet_apply(params, imgs,
+                               engine.PolicyMap.of(("^c1$", None),
+                                                   default=pol))
+print("legacy per-call matches bound plan:",
+      bool(jnp.all(out_bound == out_legacy)))
+
+# --- 5. engine taps: observe the real datapath ------------------------------
+with engine.taps(lambda ev: print(f"  tap {ev.path:<4} {ev.kind:<4} "
+                                  f"-> {ev.backend}, SNR "
+                                  f"{float(snr_db(ev.y_float, ev.y)):.1f} dB"),
+                 want_float=True):
+    small.lenet_apply(params, imgs, pol)
 print("\nDone — see examples/cnn_bfp_sweep.py for the paper's Table-3 "
-      "experiment and examples/train_lm.py for the training stack.")
+      "experiment, benchmarks/table4_nsr.py for the tap-based SNR "
+      "analysis, and examples/train_lm.py for the training stack.")

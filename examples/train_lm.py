@@ -12,7 +12,6 @@ straggler watchdog).  ``--bfp`` trains with the BFP forward datapath
 enables the BFP gradient-compression hook (DESIGN.md §5).
 """
 import argparse
-import dataclasses
 
 import jax
 

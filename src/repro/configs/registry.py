@@ -3,7 +3,7 @@ from __future__ import annotations
 
 from typing import Dict
 
-from repro.configs.base import LMConfig, SHAPES, ShapeConfig, reduced
+from repro.configs.base import LMConfig, SHAPES
 from repro.configs.recurrentgemma_9b import CONFIG as _recurrentgemma_9b
 from repro.configs.mistral_nemo_12b import CONFIG as _mistral_nemo_12b
 from repro.configs.minicpm_2b import CONFIG as _minicpm_2b

@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from functools import partial
 from typing import Optional, Tuple
 
 import jax

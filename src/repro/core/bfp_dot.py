@@ -35,7 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bfp
-from repro.core.bfp import BFPBlock, Rounding, Scheme
+from repro.core.bfp import BFPBlock, Scheme
 from repro.core.policy import BFPPolicy
 
 __all__ = ["bfp_dot", "bfp_matmul_2d", "bfp_matmul_2d_prequant",

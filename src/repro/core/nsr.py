@@ -29,8 +29,6 @@ from typing import List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import bfp
-from repro.core.bfp import Rounding, Scheme
 from repro.core.bfp_dot import quantize_activations, quantize_weights
 from repro.core.policy import BFPPolicy
 

@@ -33,7 +33,8 @@ from repro.core import bfp
 from repro.core.policy import BFPPolicy
 
 __all__ = ["quantize_param_tree", "quantize_cnn_param_tree", "prequant_leaf",
-           "prequant_conv_leaf", "dequantize_prequant", "is_prequant"]
+           "prequant_conv_leaf", "dequantize_prequant", "is_prequant",
+           "lm_rule_path", "lm_eligible", "cnn_rule_path"]
 
 
 def is_prequant(w: Any) -> bool:
@@ -118,7 +119,7 @@ _GEMM_LEAF_NAMES = ("w", "w1", "w2", "w3")
 _LM_STACK_PREFIXES = ("layers", "dec", "periods", "rem")
 
 
-def _lm_rule_path(keys) -> str:
+def lm_rule_path(keys) -> str:
     """Pytree path -> the runtime layer path PolicyMap rules see.
 
     Strips the trailing "/w" leaf name and leading stack-container/index
@@ -135,12 +136,44 @@ def _lm_rule_path(keys) -> str:
     return "/".join(ks)
 
 
-def _lm_eligible(keys) -> bool:
+def lm_eligible(keys) -> bool:
     if not keys or keys[-1] not in _GEMM_LEAF_NAMES:
         return False
     if len(keys) >= 2 and keys[-2] == "router":
         return False  # MoE router always runs in float (moe_apply contract)
     return "/".join(keys) != "embed/e"
+
+
+def _conv_bn_nested(params, rule_keys) -> bool:
+    # The trailing "conv" segment is stripped ONLY for conv+bn blocks
+    # (resnet's {"conv", "bn"} dicts), where the runtime layer path
+    # omits it.  A plain conv layer that happens to be KEYED "conv"
+    # (googlenet's aux heads: runtime path "loss1/conv") keeps it —
+    # checked structurally via the sibling "bn" entry.
+    node = params
+    for kk in rule_keys[:-1]:
+        node = node[int(kk)] if isinstance(node, (list, tuple)) \
+            else node[kk]
+    return isinstance(node.get(rule_keys[-1]), dict) and "bn" in node
+
+
+def cnn_rule_path(params, keys) -> Optional[str]:
+    """Runtime layer path for the CNN weight leaf at tree path ``keys``.
+
+    Returns None when the leaf is not a GEMM/conv weight (only leaves
+    literally named ``w`` count).  This is the single source of truth
+    shared by :func:`quantize_cnn_param_tree` and ``engine.bind``'s site
+    discovery, so a PolicyMap pins — and a Plan binds — exactly the
+    layers the model apply functions execute ("stem", "blocks/3/c1",
+    "conv1_1", "loss1/conv", "fc").
+    """
+    if not keys or keys[-1] != "w":
+        return None
+    rule_keys = keys[:-1]
+    if rule_keys and rule_keys[-1] == "conv" and \
+            _conv_bn_nested(params, rule_keys):
+        rule_keys = rule_keys[:-1]
+    return "/".join(rule_keys)
 
 
 def quantize_param_tree(params: Any, policy: Any) -> Any:
@@ -159,9 +192,9 @@ def quantize_param_tree(params: Any, policy: Any) -> Any:
 
     def one(path, leaf):
         keys = _path_keys(path)
-        if not _lm_eligible(keys):
+        if not lm_eligible(keys):
             return leaf
-        pol = _resolve(policy, _lm_rule_path(keys))
+        pol = _resolve(policy, lm_rule_path(keys))
         if pol is None:
             return leaf
         if hasattr(leaf, "ndim") and leaf.ndim >= 2 and \
@@ -187,29 +220,13 @@ def quantize_cnn_param_tree(params: Any, policy: Any) -> Any:
     if policy is None:
         return params
 
-    def _conv_bn_nested(rule_keys) -> bool:
-        # The trailing "conv" segment is stripped ONLY for conv+bn blocks
-        # (resnet's {"conv", "bn"} dicts), where the runtime layer path
-        # omits it.  A plain conv layer that happens to be KEYED "conv"
-        # (googlenet's aux heads: runtime path "loss1/conv") keeps it —
-        # checked structurally via the sibling "bn" entry.
-        node = params
-        for kk in rule_keys[:-1]:
-            node = node[int(kk)] if isinstance(node, (list, tuple)) \
-                else node[kk]
-        return isinstance(node.get(rule_keys[-1]), dict) and "bn" in node
-
     def one(path, leaf):
         keys = _path_keys(path)
         if not keys or keys[-1] != "w" or not hasattr(leaf, "ndim"):
             return leaf
         if not jnp.issubdtype(leaf.dtype, jnp.floating):
             return leaf
-        rule_keys = keys[:-1]
-        if rule_keys and rule_keys[-1] == "conv" and \
-                _conv_bn_nested(rule_keys):
-            rule_keys = rule_keys[:-1]
-        pol = _resolve(policy, "/".join(rule_keys))
+        pol = _resolve(policy, cnn_rule_path(params, keys))
         if pol is None:
             return leaf
         if leaf.ndim == 4:

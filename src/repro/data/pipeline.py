@@ -11,11 +11,10 @@ loss visibly drops within a few hundred steps (examples/train_lm.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 __all__ = ["LMBatchSpec", "lm_batch", "image_batch", "host_shard"]
 

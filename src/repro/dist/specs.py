@@ -17,7 +17,7 @@ replicates instead of failing, so reduced configs lower on any mesh.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 from jax.sharding import Mesh, PartitionSpec as P

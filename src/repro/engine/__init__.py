@@ -6,6 +6,13 @@ MAC -> power-of-two rescale, Fig. 2) behind every model GEMM:
   * backend registry: float / emulated / pallas (``backends``),
   * per-layer policies: :class:`PolicyMap` resolved on layer paths
     (``policy_map``) — the paper's Table-3 layer-wise sweeps as config,
+  * bound execution plans: :func:`bind` resolves policies, selects
+    backends, and pre-quantizes weights ONCE; the returned :class:`Plan`
+    rides the ``policy`` argument of every model (``plan``),
+  * taps: ``with engine.taps(capture):`` observers on the real datapath
+    — every GEMM/conv site reports (site, x, w, y[, y_float]), which is
+    how the paper's Table-4 analysis generalizes to any topology
+    (``taps``),
   * first-class pre-quantized weights on all paths (``prequantize`` /
     ``prequantize_cnn`` + the ``{"m", "s"}`` wire format).
 
@@ -13,17 +20,23 @@ MAC -> power-of-two rescale, Fig. 2) behind every model GEMM:
 :func:`gemm`.
 """
 from repro.core.prequant import is_prequant
-from repro.engine.backends import (available_backends, get_backend,
+from repro.engine.backends import (BackendFallbackWarning,
+                                   BackendUnsupportedError,
+                                   available_backends, get_backend,
                                    register_backend, select_backend)
 from repro.engine.core import (conv2d, conv2d_im2col, gemm, prequantize,
                                prequantize_cnn)
+from repro.engine.plan import Plan, Site, bind
 from repro.engine.policy_map import (PolicyLike, PolicyMap, join_path,
                                      resolve_policy)
+from repro.engine.taps import TapEvent, taps
 
 __all__ = [
     "gemm", "conv2d", "conv2d_im2col", "prequantize", "prequantize_cnn",
     "is_prequant",
+    "bind", "Plan", "Site",
+    "taps", "TapEvent",
     "PolicyMap", "PolicyLike", "resolve_policy", "join_path",
     "register_backend", "get_backend", "available_backends",
-    "select_backend",
+    "select_backend", "BackendFallbackWarning", "BackendUnsupportedError",
 ]

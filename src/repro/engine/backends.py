@@ -25,7 +25,8 @@ External backends (future: GPU Triton, int8 XLA dot) register with
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+import warnings
+from typing import Callable, Dict, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +37,8 @@ from repro.core.policy import BFPPolicy
 from repro.core.prequant import dequantize_prequant, is_prequant
 
 __all__ = ["Backend", "register_backend", "get_backend",
-           "available_backends", "select_backend"]
+           "available_backends", "select_backend",
+           "BackendFallbackWarning", "BackendUnsupportedError"]
 
 #: (x2d, w_or_prequant, policy, key) -> out [B, N]
 MatmulFn = Callable[[jax.Array, object, Optional[BFPPolicy],
@@ -82,10 +84,50 @@ def available_backends():
     return sorted(_REGISTRY)
 
 
-def select_backend(policy: BFPPolicy, w) -> Backend:
-    """Requested backend if it supports (policy, w); else emulated."""
+class BackendFallbackWarning(UserWarning):
+    """A requested backend could not honour a policy and was downgraded."""
+
+
+class BackendUnsupportedError(ValueError):
+    """strict mode: the requested backend cannot honour the policy."""
+
+
+#: (backend, path) pairs already warned about on the bare per-call path —
+#: the downgrade is warned ONCE per site, not per forward (eager loops
+#: would otherwise spam).  ``engine.bind`` passes its own fresh registry
+#: per bind, so every independently-constructed Plan/ServeEngine surfaces
+#: its own downgrades instead of being muted by an earlier one's.
+_WARNED: Set[Tuple[str, Optional[str]]] = set()
+
+
+def select_backend(policy: BFPPolicy, w, *, strict: bool = False,
+                   path: Optional[str] = None,
+                   warned: Optional[Set] = None) -> Backend:
+    """Requested backend if it supports (policy, w); else emulated.
+
+    The downgrade is never silent: by default it emits a
+    :class:`BackendFallbackWarning`, deduplicated per (backend, site)
+    against ``warned`` (callers like ``engine.bind`` pass a fresh set
+    per bind; bare per-call dispatch shares a process-wide one); with
+    ``strict=True`` (surfaced through ``engine.bind(strict=...)`` for
+    serving configs) it raises :class:`BackendUnsupportedError` instead,
+    so a deployment that asked for the fused kernel fails loudly rather
+    than drifting onto the emulated path.
+    """
     be = get_backend(policy.backend_name)
     if not be.supports(policy, w):
+        msg = (f"backend {be.name!r} cannot honour policy "
+               f"(scheme={policy.scheme}, rounding={policy.rounding}, "
+               f"l_w={policy.l_w})"
+               + (f" at site {path!r}" if path else ""))
+        if strict:
+            raise BackendUnsupportedError(
+                msg + "; refusing the emulated fallback (strict mode)")
+        reg = _WARNED if warned is None else warned
+        if (be.name, path) not in reg:
+            reg.add((be.name, path))
+            warnings.warn(msg + "; falling back to 'emulated'",
+                          BackendFallbackWarning, stacklevel=2)
         be = _REGISTRY["emulated"]
     return be
 

@@ -13,16 +13,23 @@ materialized im2col + :func:`gemm`:
   (int8 mantissas + power-of-two scale sidecar); pre-quantized weights
   are first-class on every backend, so inference quantizes weights ONCE
   (see ``prequantize`` / ``prequantize_cnn`` and benchmarks/engine_bench).
-* ``policy`` is None (float), a BFPPolicy (uniform), or a PolicyMap
+* ``policy`` is None (float), a BFPPolicy (uniform), a PolicyMap
   (per-layer rules resolved against ``path`` — the paper's Table-3
-  layer-wise assignments as config).
+  layer-wise assignments as config), or a bound ``Plan``
+  (``engine.bind``): per-site policy resolution AND backend selection
+  done once up front, per-call dispatch is a dict hit.
 * the backend registry (float / emulated / pallas) picks the execution,
   folding in the legacy ``use_kernel`` flag and the CPU-interpret
   dispatch that used to be scattered across call sites.
+
+:func:`gemm` / :func:`conv2d` are thin shims: with a Plan they delegate
+to the bound site entry; otherwise they resolve per call (an implicit
+one-site plan), so every existing call site keeps working.  Both emit
+``engine.taps`` events from the real datapath (repro.engine.taps).
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any, Optional, Tuple
 
 import jax
 
@@ -30,10 +37,117 @@ from repro.core.conv_utils import conv_weight_matrix, im2col
 from repro.core.prequant import (is_prequant, quantize_cnn_param_tree,
                                  quantize_param_tree)
 from repro.engine import backends as BK
+from repro.engine import taps as TAPS
 from repro.engine.policy_map import PolicyLike, resolve_policy
 
 __all__ = ["gemm", "conv2d", "conv2d_im2col", "prequantize",
            "prequantize_cnn"]
+
+
+# ---------------------------------------------------------------------------
+# Execution primitives (shared by the per-call shims and bound Plans).
+# PolicyMap resolution and tap emission never happen here; backend
+# selection (registry + support checks, the per-call path) runs only
+# when no pre-selected ``backend`` is passed — bound Plans pass theirs.
+# ---------------------------------------------------------------------------
+
+def _gemm_exec(x: jax.Array, w: Any, pol, key=None,
+               backend: Optional[BK.Backend] = None,
+               strict: bool = False, path: Optional[str] = None,
+               warned=None) -> Tuple[jax.Array, BK.Backend]:
+    """Flatten leading dims, run the (given or selected) backend matmul."""
+    n = (w["m"] if is_prequant(w) else w).shape[-1]
+    lead = x.shape[:-1]
+    x2d = x.reshape(-1, x.shape[-1])
+    be = backend
+    if be is None:
+        be = (BK.get_backend("float") if pol is None
+              else BK.select_backend(pol, w, strict=strict, path=path,
+                                     warned=warned))
+    out = be.matmul(x2d, w, pol, key)
+    return out.reshape(*lead, n), be
+
+
+def _conv_exec(x: jax.Array, w: Any, pol, stride: int, padding: str,
+               key=None, backend: Optional[BK.Backend] = None,
+               strict: bool = False, path: Optional[str] = None,
+               warned=None) -> Tuple[jax.Array, BK.Backend]:
+    """Fused conv when the backend has one and can honour (policy,
+    geometry); honest materialized-im2col + matmul fallback otherwise.
+
+    With ``backend=None`` the conv slot of the REQUESTED backend is
+    consulted (policy None consults the registered "float" backend — the
+    same extension point :func:`gemm` documents), and the im2col GEMM
+    re-selects with support checks, exactly the legacy per-call
+    semantics.  A bound Plan passes its pre-selected ``backend``.
+    """
+    be = backend
+    if be is None:
+        be = BK.get_backend("float" if pol is None else pol.backend_name)
+    if be.conv is not None and be.conv_supports(pol, w, stride, padding):
+        return be.conv(x, w, pol, stride, padding, key), be
+    # backend given (Plan): reuse its matmul for the im2col GEMM;
+    # otherwise select per call (pallas-with-paper-scheme lands emulated).
+    return _conv_im2col_exec(x, w, pol, stride, padding, key,
+                             backend=backend, strict=strict, path=path,
+                             warned=warned)
+
+
+def _conv_im2col_exec(x, w, pol, stride, padding, key=None, backend=None,
+                      strict=False, path=None,
+                      warned=None) -> Tuple[jax.Array, BK.Backend]:
+    prequant = is_prequant(w)
+    kh, kw, c, oc = (w["m"] if prequant else w).shape
+    cols, (b, oh, ow) = im2col(x, kh, kw, stride, padding)
+    wmat = ({"m": conv_weight_matrix(w["m"]), "s": w["s"]} if prequant
+            else conv_weight_matrix(w))
+    out, be = _gemm_exec(cols, wmat, pol, key, backend=backend,
+                         strict=strict, path=path, warned=warned)
+    return out.reshape(b, oh, ow, oc), be
+
+
+# ---------------------------------------------------------------------------
+# Execute-then-tap (one implementation shared by the per-call shims and
+# the bound Plan entries, so tap events cannot diverge between the two)
+# ---------------------------------------------------------------------------
+
+def gemm_and_tap(x, w, pol, key=None, backend=None, strict=False,
+                 path=None, warned=None) -> jax.Array:
+    out, be = _gemm_exec(x, w, pol, key, backend=backend, strict=strict,
+                         path=path, warned=warned)
+    if TAPS.active():
+        TAPS.emit("gemm", path, pol, be.name, x, w, out,
+                  float_fn=lambda: _gemm_exec(x, w, None, None)[0])
+    return out
+
+
+def conv_and_tap(x, w, pol, stride, padding, key=None, backend=None,
+                 strict=False, path=None, warned=None) -> jax.Array:
+    out, be = _conv_exec(x, w, pol, stride, padding, key, backend=backend,
+                         strict=strict, path=path, warned=warned)
+    if TAPS.active():
+        TAPS.emit("conv", path, pol, be.name, x, w, out,
+                  float_fn=lambda: _conv_im2col_exec(
+                      x, w, None, stride, padding)[0],
+                  stride=stride, padding=padding)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Public shims
+# ---------------------------------------------------------------------------
+
+#: lazily-cached Plan class — resolves the core<->plan import cycle once
+#: instead of paying a sys.modules lookup on every per-call dispatch
+_PLAN_CLS = None
+
+
+def _plan_cls():
+    global _PLAN_CLS
+    if _PLAN_CLS is None:
+        from repro.engine.plan import Plan
+        _PLAN_CLS = Plan
+    return _PLAN_CLS
 
 
 def gemm(x: jax.Array, w: Any, policy: PolicyLike = None, *,
@@ -43,18 +157,16 @@ def gemm(x: jax.Array, w: Any, policy: PolicyLike = None, *,
 
     ``w``: float [K, N] or prequant ``{"m": [K, N], "s": [K//bk, N]}``.
     Leading dims of ``x`` are flattened for the 2-D backends and restored.
+    ``policy`` may be a bound ``engine.Plan`` — the site entry for
+    ``path`` then supplies the resolved policy AND backend with no
+    per-call registry/regex work.
     """
-    pol = resolve_policy(policy, path)
-    n = (w["m"] if is_prequant(w) else w).shape[-1]
-    lead = x.shape[:-1]
-    x2d = x.reshape(-1, x.shape[-1])
-    if pol is None:
-        # registered "float" backend, so re-registering it (instrumented
-        # or accelerated variants) also covers policy-None GEMMs
-        out = BK.get_backend("float").matmul(x2d, w, None, key)
-    else:
-        out = BK.select_backend(pol, w).matmul(x2d, w, pol, key)
-    return out.reshape(*lead, n)
+    if isinstance(policy, _plan_cls()):
+        return policy.gemm(x, w, path=path, key=key)
+    # policy None goes through the registered "float" backend, so
+    # re-registering it (instrumented or accelerated variants) also
+    # covers policy-None GEMMs
+    return gemm_and_tap(x, w, resolve_policy(policy, path), key, path=path)
 
 
 def conv2d(x: jax.Array, w: Any, policy: PolicyLike = None, *,
@@ -70,14 +182,14 @@ def conv2d(x: jax.Array, w: Any, policy: PolicyLike = None, *,
     else — float, emulated, pallas with a scheme the kernel can't honour
     — falls back honestly to the materialized im2col + :func:`gemm`
     route, which preserves exact GEMM-engine semantics per backend.
+    ``policy=None`` consults the registered "float" backend's conv slot
+    (same extension point as GEMMs) before taking the im2col route.
     """
-    pol = resolve_policy(policy, path)
-    if pol is not None:
-        be = BK.get_backend(pol.backend_name)
-        if be.conv is not None and be.conv_supports(pol, w, stride,
-                                                    padding):
-            return be.conv(x, w, pol, stride, padding, key)
-    return conv2d_im2col(x, w, pol, stride, padding, key)
+    if isinstance(policy, _plan_cls()):
+        return policy.conv2d(x, w, path=path, stride=stride,
+                             padding=padding, key=key)
+    return conv_and_tap(x, w, resolve_policy(policy, path), stride,
+                        padding, key, path=path)
 
 
 def conv2d_im2col(x: jax.Array, w: Any, pol, stride: int = 1,
@@ -87,14 +199,9 @@ def conv2d_im2col(x: jax.Array, w: Any, pol, stride: int = 1,
     fallbacks behave exactly as for any other GEMM).  :func:`conv2d`'s
     fallback; public so A/B comparisons (benchmarks/conv_bench.py) can
     force this route against the fused kernel.  ``pol`` is an
-    already-resolved BFPPolicy or None, not a PolicyMap."""
-    prequant = is_prequant(w)
-    kh, kw, c, oc = (w["m"] if prequant else w).shape
-    cols, (b, oh, ow) = im2col(x, kh, kw, stride, padding)
-    wmat = ({"m": conv_weight_matrix(w["m"]), "s": w["s"]} if prequant
-            else conv_weight_matrix(w))
-    out = gemm(cols, wmat, pol, key=key)
-    return out.reshape(b, oh, ow, oc)
+    already-resolved BFPPolicy or None, not a PolicyMap.  Does not emit
+    tap events (the :func:`conv2d` entry does, once per conv site)."""
+    return _conv_im2col_exec(x, w, pol, stride, padding, key)[0]
 
 
 def prequantize(params: Any, policy: PolicyLike) -> Any:

@@ -1,0 +1,288 @@
+"""Bound execution plans — resolve/select/quantize ONCE, then just run.
+
+``engine.bind(params, policy)`` is the deployment-mode entry point the
+paper's accelerator design (and Ristretto / Fixflow-style fixed-point
+serving) organizes around: walk the param tree once, resolve each
+GEMM/conv site's PolicyMap rule against its layer path, select the
+concrete backend execution (or honest emulated fallback) up front,
+pre-quantize every eligible weight leaf into the ``{"m", "s"}`` wire
+format, and return an immutable :class:`Plan`:
+
+    plan = engine.bind(params, policy)
+    logits = vgg.apply(plan.params, x, plan)     # plan rides the policy arg
+
+A :class:`Plan` is a ``PolicyLike``: model code passes it exactly where
+it passed a ``BFPPolicy``/``PolicyMap``, and ``engine.gemm`` /
+``engine.conv2d`` delegate to the bound per-site entries — per-call
+dispatch drops from regex resolution + registry lookup + support checks
+to one dict hit.  Results are bit-identical to the per-call path (the
+same backend executions run, selected earlier).
+
+What is resolved when:
+  * bind time: policy-rule backends exist (unknown names raise the
+    ``available_backends`` KeyError HERE, not mid-forward), per-site
+    policy resolution, backend support checks against the actual weight
+    (downgrades warn once, or raise with ``strict=True``), weight
+    pre-quantization;
+  * call time: only geometry-dependent conv fusion (stride/padding) and
+    the backend execution itself.
+
+Paths the walk cannot see (e.g. the MoE expert runtime path "moe" vs
+its per-matrix tree leaves "moe/w1...") fall back to legacy per-call
+resolution against the original policy — correct, just not pre-bound;
+``strict`` still applies to their backend selection.
+"""
+from __future__ import annotations
+
+import dataclasses
+import types
+from typing import Any, Dict, Iterable, Optional, Tuple, Union
+
+import jax
+
+from repro.core.policy import BFPPolicy
+from repro.core.prequant import (_path_keys, cnn_rule_path, is_prequant,
+                                 lm_eligible, lm_rule_path,
+                                 quantize_cnn_param_tree,
+                                 quantize_param_tree)
+from repro.engine import backends as BK
+from repro.engine.core import conv_and_tap, gemm_and_tap
+from repro.engine.policy_map import PolicyLike, PolicyMap, resolve_policy
+
+__all__ = ["Site", "Plan", "bind"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Site:
+    """One bound GEMM/conv execution site."""
+
+    path: str
+    kind: str                       #: "gemm" | "conv"
+    policy: Optional[BFPPolicy]     #: resolved concrete policy (None=float)
+    backend: BK.Backend             #: concrete execution, selected at bind
+    fallback: bool = False          #: requested backend was downgraded
+    prequantized: bool = False      #: weight leaf holds the wire format
+
+
+class Plan:
+    """Immutable per-site execution table returned by :func:`bind`.
+
+    ``plan.params`` is the (pre-quantized) tree the model should be
+    applied with; the plan itself rides the ``policy`` argument.  Site
+    entries are fixed at bind time — re-registering a backend afterwards
+    does not change a bound plan (that is the point: serving runs the
+    datapath that was admitted).
+    """
+
+    def __init__(self, sites: Dict[str, Site], params: Any,
+                 policy: PolicyLike, strict: bool = False):
+        self._sites = dict(sites)
+        self.sites = types.MappingProxyType(self._sites)
+        self.params = params
+        self.policy = policy
+        self.strict = strict
+        #: per-plan fallback-warning dedup for unbound-path dispatch, so
+        #: one plan's downgrades never mute another's
+        self._warned: set = set()
+
+    def __repr__(self) -> str:
+        n_bfp = sum(1 for s in self._sites.values() if s.policy is not None)
+        return (f"Plan({len(self._sites)} sites, {n_bfp} BFP, "
+                f"strict={self.strict})")
+
+    def site(self, path: str) -> Site:
+        return self._sites[path]
+
+    def resolve(self, path: Optional[str]) -> Optional[BFPPolicy]:
+        """Concrete policy for ``path`` (the ``resolve_policy`` protocol,
+        so code like the MoE layer that resolves before vmapping works on
+        plans too)."""
+        s = self._sites.get(path)
+        if s is not None:
+            return s.policy
+        return resolve_policy(self.policy, path)
+
+    # -- bound executions (execute + tap shared with the per-call shims) ----
+
+    def gemm(self, x: jax.Array, w: Any, *, path: Optional[str] = None,
+             key: Optional[jax.Array] = None) -> jax.Array:
+        site = self._sites.get(path)
+        if site is not None and site.kind == "gemm":
+            return gemm_and_tap(x, w, site.policy, key,
+                                backend=site.backend, path=path)
+        # unbound path: legacy per-call resolution (strict kept)
+        return gemm_and_tap(x, w, resolve_policy(self.policy, path), key,
+                            strict=self.strict, path=path,
+                            warned=self._warned)
+
+    def conv2d(self, x: jax.Array, w: Any, *, path: Optional[str] = None,
+               stride: int = 1, padding: str = "SAME",
+               key: Optional[jax.Array] = None) -> jax.Array:
+        site = self._sites.get(path)
+        if site is not None and site.kind == "conv":
+            return conv_and_tap(x, w, site.policy, stride, padding, key,
+                                backend=site.backend, path=path)
+        return conv_and_tap(x, w, resolve_policy(self.policy, path),
+                            stride, padding, key, strict=self.strict,
+                            path=path, warned=self._warned)
+
+    def describe(self) -> str:
+        """Human-readable site table (examples / serving admission logs)."""
+        lines = []
+        for path in sorted(self._sites):
+            s = self._sites[path]
+            pol = ("float" if s.policy is None else
+                   f"L_W={s.policy.l_w},L_I={s.policy.l_i},"
+                   f"{s.policy.scheme.value}")
+            extra = (" (fallback)" if s.fallback else "") + \
+                    (" [prequant]" if s.prequantized else "")
+            lines.append(f"{path:<24} {s.kind:<5} {pol:<24} "
+                         f"-> {s.backend.name}{extra}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# bind
+# ---------------------------------------------------------------------------
+
+def _validate_policy_backends(policy: PolicyLike) -> None:
+    """Every backend a policy (or any PolicyMap rule) names must exist —
+    raise the available_backends KeyError at BIND time, not mid-forward."""
+    pols = []
+    if isinstance(policy, PolicyMap):
+        pols = [p for _, p in policy.rules] + [policy.default]
+    elif isinstance(policy, BFPPolicy):
+        pols = [policy]
+    for p in pols:
+        if p is not None:
+            BK.get_backend(p.backend_name)
+
+
+class _ScopedPolicy:
+    """``resolve_policy`` adapter limiting a policy to an explicit site
+    set — leaves outside ``wanted`` resolve to None (stay float)."""
+
+    def __init__(self, policy: PolicyLike, wanted):
+        self._policy, self._wanted = policy, wanted
+
+    def resolve(self, path):
+        if path not in self._wanted:
+            return None
+        return resolve_policy(self._policy, path)
+
+
+def _detect_tree(params: Any) -> str:
+    if isinstance(params, dict) and (
+            {"embed", "layers", "dec", "periods"} & set(params)):
+        return "lm"
+    return "cnn"
+
+
+def _discover_sites(params: Any, tree: str):
+    """Yield (runtime_path, kind, weight_leaf) for every GEMM/conv site
+    the param walk can see — the same path derivation the prequant
+    walkers use, so rules pin and plans bind exactly the layers the
+    model apply functions execute."""
+    leaves, _ = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=is_prequant)
+    for path, leaf in leaves:
+        keys = _path_keys(path)
+        arr = leaf["m"] if is_prequant(leaf) else leaf
+        if not hasattr(arr, "ndim"):
+            continue
+        if tree == "lm":
+            if not lm_eligible(keys) or arr.ndim < 2:
+                continue
+            yield lm_rule_path(keys), "gemm", leaf
+        else:
+            rpath = cnn_rule_path(params, keys)
+            if rpath is None:
+                continue
+            if arr.ndim == 4:
+                yield rpath, "conv", leaf
+            elif arr.ndim == 2:
+                yield rpath, "gemm", leaf
+
+
+def bind(params: Any, policy: PolicyLike,
+         model_paths: Optional[Iterable[Union[str, Tuple[str, str]]]] = None,
+         *, tree: str = "auto", strict: bool = False,
+         prequantize: bool = True) -> Plan:
+    """Bind ``policy`` to a model's parameters: one walk, one Plan.
+
+    Args:
+      params: model param tree (models.cnn or models.lm conventions; an
+        already pre-quantized tree is fine — quantization is idempotent).
+      policy: None / BFPPolicy / PolicyMap — resolved per site, once.
+      model_paths: optional explicit site list — strings or (path, kind)
+        pairs.  Restricts the discovered sites to these paths and binds
+        policy-only entries (no weight checks, no prequant) for paths
+        the tree walk cannot see.  Default: every site the walk finds.
+      tree: "cnn" | "lm" | "auto" — which path convention the tree uses.
+      strict: refuse (raise) backend downgrades instead of the once-per-
+        site warning; also applied to unbound-path fallbacks at call time.
+      prequantize: convert eligible weight leaves to the ``{"m", "s"}``
+        wire format (set False to bind dispatch only, e.g. when the
+        caller already pre-quantized under a different policy).
+
+    Raises KeyError for policies naming unknown backends, and
+    :class:`repro.engine.backends.BackendUnsupportedError` under
+    ``strict`` when a requested backend cannot honour its policy.
+    """
+    _validate_policy_backends(policy)
+    kind = _detect_tree(params) if tree == "auto" else tree
+    if kind not in ("cnn", "lm"):
+        raise ValueError(f"tree must be 'cnn', 'lm', or 'auto'; got {kind!r}")
+
+    wanted: Optional[Dict[str, Optional[str]]] = None
+    if model_paths is not None:
+        wanted = {}
+        for mp in model_paths:
+            if isinstance(mp, str):
+                wanted[mp] = None
+            else:
+                p, k = mp
+                wanted[p] = k
+
+    qparams = params
+    if prequantize:
+        quantizer = quantize_param_tree if kind == "lm" \
+            else quantize_cnn_param_tree
+        # a model_paths restriction also scopes prequantization: sites
+        # outside it keep their float leaves (they are not bound, so
+        # they must not be converted either)
+        qpolicy = policy if wanted is None else _ScopedPolicy(policy,
+                                                              wanted)
+        qparams = quantizer(params, qpolicy)
+
+    warned: set = set()   # fresh per bind: each plan reports its own
+    sites: Dict[str, Site] = {}
+    for path, skind, leaf in _discover_sites(qparams, kind):
+        if wanted is not None and path not in wanted:
+            continue
+        if path in sites:
+            continue  # stacked trees can alias a runtime path; first wins
+        pol = resolve_policy(policy, path)
+        if pol is None:
+            be, fb = BK.get_backend("float"), False
+        else:
+            be = BK.select_backend(pol, leaf, strict=strict, path=path,
+                                   warned=warned)
+            fb = be.name != pol.backend_name
+        sites[path] = Site(path, skind, pol, be, fb,
+                           prequantized=is_prequant(leaf))
+
+    if wanted is not None:  # policy-only entries for undiscovered paths
+        for path, k in wanted.items():
+            if path in sites:
+                continue
+            pol = resolve_policy(policy, path)
+            if pol is None:
+                be, fb = BK.get_backend("float"), False
+            else:
+                be = BK.select_backend(pol, None, strict=strict, path=path,
+                                       warned=warned)
+                fb = be.name != pol.backend_name
+            sites[path] = Site(path, k or "gemm", pol, be, fb)
+
+    return Plan(sites, qparams, policy, strict)

@@ -92,15 +92,23 @@ class PolicyMap:
         return cls(rules=rules, default=mk(cfg.get("default")))
 
 
-PolicyLike = Union[None, BFPPolicy, PolicyMap]
+#: What every GEMM-bearing layer accepts as ``policy``: None (float), a
+#: BFPPolicy (uniform), a PolicyMap (per-layer rules), or a bound
+#: ``repro.engine.Plan`` (resolution + backend selection done once at
+#: ``engine.bind`` time; forward-referenced to avoid an import cycle).
+PolicyLike = Union[None, BFPPolicy, PolicyMap, "repro.engine.plan.Plan"]
 
 
 def resolve_policy(policy: PolicyLike,
                    path: Optional[str] = None) -> Optional[BFPPolicy]:
-    """Collapse a PolicyLike to a concrete per-GEMM policy (or None)."""
-    if isinstance(policy, PolicyMap):
-        return policy.resolve(path)
-    return policy
+    """Collapse a PolicyLike to a concrete per-GEMM policy (or None).
+
+    PolicyMap and Plan both implement the ``.resolve(path)`` protocol —
+    a Plan answers from its bound site table (falling back to its
+    original policy for unseen paths)."""
+    if policy is None or isinstance(policy, BFPPolicy):
+        return policy
+    return policy.resolve(path)
 
 
 def join_path(*parts: Optional[str]) -> Optional[str]:

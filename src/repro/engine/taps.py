@@ -1,0 +1,119 @@
+"""Engine tap API — observers on the real BFP datapath (DESIGN.md §7.2).
+
+A *tap* sees every GEMM / conv the engine executes, with the site
+identity the plan/policy machinery already carries:
+
+    def capture(ev):                      # ev: TapEvent
+        print(ev.path, ev.kind, ev.backend)
+
+    with engine.taps(capture):
+        logits = vgg.apply(params, x, policy)
+
+Events fire from the public entry points — ``engine.gemm``,
+``engine.conv2d``, and the bound ``Plan`` equivalents — AFTER the
+backend has produced the datapath output, so ``ev.y`` is exactly what
+the model sees (pre-bias; biases/norms live in the layers, not the
+engine).  ``conv2d_im2col``'s internal GEMM does not double-fire: a conv
+site emits ONE conv event regardless of the fused-vs-im2col route.
+
+Overhead contract:
+  * no taps registered: one truthiness check per engine call — nothing
+    else is built or captured;
+  * taps registered: events carry references to the live arrays (no
+    copies); ``want_float=True`` additionally runs the float reference
+    execution of the same site (one extra matmul/conv per event);
+  * under ``jax.jit`` tracing the operands are tracers, not values, so
+    events are suppressed — taps observe concrete eager execution only
+    (the Table-4 analysis mode).  Run the model un-jitted to measure.
+
+This is what rebuilt the paper's Table-4 analysis as a generic
+``models.cnn.analysis.analyze_model`` that works on any topology the
+engine executes (VGG, ResNet, GoogLeNet, ...), instead of a hand-rolled
+sequential walker.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Callable, List, Optional
+
+import jax
+
+__all__ = ["TapEvent", "taps", "active"]
+
+
+@dataclasses.dataclass
+class TapEvent:
+    """One engine execution, as observed by a tap.
+
+    ``x``/``w``/``y`` are the live operands/output (GEMM: ``x`` with
+    leading dims, ``w`` float [K, N] or prequant dict; conv: NHWC input,
+    HWIO kernel, NHWC output).  ``y_float`` is the float-reference
+    output of the same site, computed only when a registered tap asked
+    for it (``want_float=True``); otherwise None.
+    """
+
+    path: Optional[str]     #: layer path ("conv1_1", "blocks/3/c1", ...)
+    kind: str               #: "gemm" | "conv"
+    policy: Any             #: resolved BFPPolicy (None = float site)
+    backend: str            #: name of the backend that executed
+    x: jax.Array
+    w: Any
+    y: jax.Array
+    y_float: Optional[jax.Array] = None
+    stride: Optional[int] = None     #: conv only
+    padding: Optional[str] = None    #: conv only
+
+
+@dataclasses.dataclass
+class _Tap:
+    fn: Callable[[TapEvent], None]
+    want_float: bool
+
+
+_ACTIVE: List[_Tap] = []
+
+
+def active() -> bool:
+    """True when at least one tap is registered (cheap per-call guard)."""
+    return bool(_ACTIVE)
+
+
+@contextlib.contextmanager
+def taps(fn: Callable[[TapEvent], None], *, want_float: bool = False):
+    """Register ``fn`` as a datapath observer for the dynamic extent.
+
+    ``want_float=True`` asks the engine to also execute the float
+    reference for every observed site and attach it as ``ev.y_float``
+    (costs one extra float execution per event — single-run SNR
+    monitoring; the dual-run analysis driver leaves it off).
+    """
+    t = _Tap(fn, want_float)
+    _ACTIVE.append(t)
+    try:
+        yield t
+    finally:
+        _ACTIVE.remove(t)
+
+
+def emit(kind: str, path, policy, backend: str, x, w, y,
+         float_fn: Optional[Callable[[], jax.Array]] = None,
+         stride=None, padding=None) -> None:
+    """Deliver one event to every registered tap (engine-internal).
+
+    ``float_fn`` lazily produces the float reference output; it runs at
+    most once, and only if some tap requested ``want_float``.  Tracer
+    operands (jit tracing) suppress the event entirely.
+    """
+    if not _ACTIVE:
+        return
+    if isinstance(x, jax.core.Tracer) or isinstance(y, jax.core.Tracer):
+        return  # taps observe concrete values; jit traces pass through
+    y_float = None
+    if float_fn is not None and any(t.want_float for t in _ACTIVE):
+        y_float = float_fn()
+    ev = TapEvent(path=path, kind=kind, policy=policy, backend=backend,
+                  x=x, w=w, y=y, y_float=y_float, stride=stride,
+                  padding=padding)
+    for t in list(_ACTIVE):
+        t.fn(ev)

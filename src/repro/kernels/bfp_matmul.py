@@ -22,7 +22,6 @@ accumulated across sequential k steps in a VMEM scratch accumulator.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -27,7 +27,6 @@ Usage:
   ... --arch mixtral-8x7b --shape train_4k --out results/dryrun
 """
 import argparse
-import dataclasses
 import json
 import sys
 import time

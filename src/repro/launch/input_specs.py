@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.configs.base import LMConfig, SHAPES, ShapeConfig
+from repro.configs.base import LMConfig, ShapeConfig
 from repro.dist import specs as SP
 from repro.dist.sharding import DEFAULT_RULES
 from repro.models.lm import model as Mdl

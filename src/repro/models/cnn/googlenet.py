@@ -4,7 +4,6 @@ convs (1x1 / 3x3 / 5x5, mixed per-branch shapes) all route through
 ``engine.conv2d`` — fused implicit-im2col on the pallas backend."""
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -102,7 +101,8 @@ def apply(params, x: jax.Array, policy: PolicyLike = None,
           with_aux: bool = True):
     """Returns (loss3_logits, loss1_logits, loss2_logits) — the paper's
     three GoogLeNet columns.  Layer paths: "stem1|stem2r|stem2",
-    "inc<name>/b1|b3r|b3|b5r|b5|bp", "loss1|loss2/conv|fc1|fc2", "fc"."""
+    "inc<name>/b1|b3r|b3|b5r|b5|bp", "loss1|loss2/conv|fc1|fc2", "fc";
+    ``policy`` is a PolicyLike (incl. a bound ``engine.Plan``)."""
     x = L.relu(L.conv2d(params["stem1"], x, 2, "SAME", policy,
                         path="stem1"))
     x = L.max_pool(x, 3, 2, "SAME")

@@ -8,11 +8,14 @@ engine falls back to materialized :func:`im2col` + ``engine.gemm``
 (identical numerics; tests assert the two routes agree bit-exactly for
 Scheme.TILED).  ``policy=None`` gives the float reference path; a
 ``repro.engine.PolicyMap`` resolves a per-layer policy against the
-layer's ``path`` (paper Table-3 layer-wise assignments).  Weights may be
-pre-quantized to the ``{"m", "s"}`` wire format
-(``repro.engine.prequantize_cnn``): every backend — including the
-sidecar-consuming fused conv kernel — consumes it directly, so inference
-skips per-forward weight re-quantization.
+layer's ``path`` (paper Table-3 layer-wise assignments); a bound
+``repro.engine.Plan`` (from ``engine.bind(params, policy)``) rides the
+same argument with resolution + backend selection already done — apply
+the model to ``plan.params`` and pass the plan as ``policy``.  Weights
+may be pre-quantized to the ``{"m", "s"}`` wire format
+(``repro.engine.prequantize_cnn``, or ``bind`` does it): every backend —
+including the sidecar-consuming fused conv kernel — consumes it
+directly, so inference skips per-forward weight re-quantization.
 
 Parameters are plain pytrees (dicts); every layer is a pure function.
 """

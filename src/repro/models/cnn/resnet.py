@@ -10,7 +10,6 @@ from __future__ import annotations
 from typing import Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 
 from repro.engine import PolicyLike, join_path
 from repro.models.cnn import layers as L
@@ -104,7 +103,8 @@ def apply(params, x: jax.Array, policy: PolicyLike = None,
           training: bool = False) -> jax.Array:
     """Layer paths: "stem", "blocks/<i>/c1|c2|c3|proj", "fc" — e.g.
     PolicyMap.of(("^stem", None), default=BFPPolicy(l_w=8, l_i=8)) is the
-    paper's first-layer-in-float mixed assignment."""
+    paper's first-layer-in-float mixed assignment; ``policy`` also takes
+    a bound ``engine.Plan`` over the same paths."""
     depth, stage_depths, bottleneck = params["meta"]
     x = _conv_bn(params["stem"], x, 2, policy, training, path="stem")
     x = L.max_pool(x, 3, 2, "SAME")

@@ -9,7 +9,6 @@ implicit-im2col on the pallas backend, im2col+GEMM otherwise)."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.engine import PolicyLike
 from repro.models.cnn import layers as L

@@ -9,10 +9,9 @@ on exactly these layer shapes).
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.engine import PolicyLike
 from repro.models.cnn import layers as L
@@ -54,7 +53,8 @@ def init(key, num_classes: int = 1000, in_ch: int = 3,
 def apply(params, x: jax.Array, policy: PolicyLike = None) -> jax.Array:
     """Layer paths are the plan names ("conv1_1" ... "fc8"), so a
     PolicyMap rule like ("^conv1_1$", None) pins the first conv to float
-    (paper Table-3 layer-wise experiments)."""
+    (paper Table-3 layer-wise experiments); ``engine.bind(params, pm)``
+    binds the same paths once and rides this argument as a Plan."""
     for name, _ in VGG16_CONV_PLAN:
         if name == "pool":
             x = L.max_pool(x)

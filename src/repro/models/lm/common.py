@@ -2,18 +2,19 @@
 (full / sliding-window, train + KV-cache decode), SwiGLU FFN.
 
 Every linear routes through ``repro.engine.gemm`` so the paper's BFP
-datapath applies uniformly (DESIGN.md §3); ``policy=None`` is float, and
-a ``repro.engine.PolicyMap`` resolves per-component policies against the
-layer ``path`` ("attn/wq", "ffn/w1", ...).  Pre-quantized weights (the
-``{"m", "s"}`` wire format from ``repro.engine.prequantize``) pass to
-the engine AS-IS: the int8 mantissas + scale sidecar feed the integer
-datapath directly instead of being dequantized and re-quantized per
-forward.  Activations carry logical sharding annotations
-(repro.dist.sharding).
+datapath applies uniformly (DESIGN.md §3); ``policy=None`` is float, a
+``repro.engine.PolicyMap`` resolves per-component policies against the
+layer ``path`` ("attn/wq", "ffn/w1", ...), and a bound
+``repro.engine.Plan`` (``engine.bind``) carries the same paths with
+resolution + backend selection done once up front (ServeEngine binds at
+admission).  Pre-quantized weights (the ``{"m", "s"}`` wire format from
+``repro.engine.prequantize``) pass to the engine AS-IS: the int8
+mantissas + scale sidecar feed the integer datapath directly instead of
+being dequantized and re-quantized per forward.  Activations carry
+logical sharding annotations (repro.dist.sharding).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional, Tuple
 
 import jax

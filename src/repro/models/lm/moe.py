@@ -16,7 +16,7 @@ Returns the load-balancing auxiliary loss alongside the output.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -5,8 +5,7 @@ with (arXiv:2404.06395), cosine, and linear warmup.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, NamedTuple, Optional, Tuple
+from typing import Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -14,9 +14,8 @@ full payload per chip; all-reduce moves 2x that; all-to-all (n-1)/n).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional
 
 __all__ = ["HW", "collective_bytes", "roofline_terms", "RooflineReport"]
 

@@ -9,12 +9,16 @@ already-converted param tree) — the paper's deployment mode, where
 weights live in HBM as int8 mantissas + exponent sidecars, every GEMM
 runs the fixed-point datapath, and quantization happens ONCE at engine
 construction, not per decode step (benchmarks/engine_bench.py measures
-the difference).  ``policy`` may be a per-layer ``repro.engine.PolicyMap``.
+the difference).  ``policy`` may be a per-layer ``repro.engine.PolicyMap``;
+at construction it is bound into an ``engine.Plan`` (``self.plan``) so
+rule resolution and backend selection also happen once, at admission-time
+weight load, and ``strict_backend=True`` rejects configs whose requested
+backend cannot honour the policy (DESIGN.md §7.1).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -107,7 +111,8 @@ class ServeEngine:
     def __init__(self, params, cfg: LMConfig, slots: int = 4,
                  max_len: int = 512,
                  policy: PolicyLike = None,
-                 prequant: PolicyLike = None):
+                 prequant: PolicyLike = None,
+                 strict_backend: bool = False):
         if cfg.is_encdec:
             # decode-only slot engine: no encoder prefill path, and the
             # enc_out cache leaf ([B, S, D]) breaks the slot-axis-at-dim-1
@@ -118,7 +123,17 @@ class ServeEngine:
             # cached pre-quantized weights: block-format once here, serve
             # the int8+scale wire format on every subsequent GEMM
             params = EG.prequantize(params, prequant)
-        self.params, self.cfg, self.policy = params, cfg, policy
+        # Admission-time bind: resolve every site's PolicyMap rule and
+        # select its concrete backend ONCE, at weight load — decode steps
+        # dispatch through the bound plan instead of re-resolving per
+        # call.  ``strict_backend=True`` makes a serving config that
+        # requested a backend the policy can't run on FAIL HERE (raising
+        # BackendUnsupportedError) instead of silently drifting onto the
+        # emulated path.  Weight quantization stays governed by the
+        # ``prequant`` arg above, so numerics are unchanged.
+        self.plan = EG.bind(params, policy, tree="lm",
+                            strict=strict_backend, prequantize=False)
+        self.params, self.cfg, self.policy = params, cfg, self.plan
         self.slots = slots
         self.max_len = max_len
         self.cache = Mdl.init_cache(cfg, slots, max_len)
@@ -129,8 +144,10 @@ class ServeEngine:
         self.queue: List[Request] = []
         self._tok = jnp.zeros((slots, 1), jnp.int32)
 
+        plan = self.plan
+
         def _step(cache, tok, pos):
-            return Mdl.decode_step(params, cfg, cache, tok, pos, policy)
+            return Mdl.decode_step(params, cfg, cache, tok, pos, plan)
 
         self._step = jax.jit(_step)
 

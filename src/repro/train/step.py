@@ -6,8 +6,6 @@ gradient-accumulation chunks (constant memory in the number of chunks).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax

@@ -9,7 +9,6 @@ only the tiny strategy surface the suite uses: ``integers`` and
 """
 from __future__ import annotations
 
-import functools
 import random
 
 _DEFAULT_EXAMPLES = 10

@@ -12,7 +12,7 @@ except ImportError:  # minimal container: deterministic fallback sampler
 from repro.core import bfp
 from repro.core.bfp import Rounding, Scheme
 from repro.core.bfp_dot import bfp_dot, bfp_matmul_2d
-from repro.core.policy import BFPPolicy, PAPER_DEFAULT, TPU_TILED
+from repro.core.policy import BFPPolicy, PAPER_DEFAULT
 
 
 def test_block_exponent_exact():

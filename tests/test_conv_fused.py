@@ -18,11 +18,11 @@ import pytest
 
 from repro import engine as EG
 from repro.core import BFPPolicy, Scheme
-from repro.core.conv_utils import conv_geometry, conv_weight_matrix, im2col
+from repro.core.conv_utils import conv_weight_matrix, im2col
 from repro.core.prequant import prequant_conv_leaf
 from repro.engine import PolicyMap
 from repro.kernels import ops, ref
-from repro.models.cnn import layers as L, small
+from repro.models.cnn import small
 
 KEY = jax.random.PRNGKey(0)
 EQ4 = BFPPolicy(straight_through=False)

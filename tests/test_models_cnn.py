@@ -5,7 +5,6 @@ import numpy as np
 import pytest
 
 from repro.core import BFPPolicy, PAPER_DEFAULT
-from repro.core.bfp import Scheme
 from repro.models.cnn import analysis, googlenet, layers as L, resnet, small, vgg
 
 
@@ -79,6 +78,92 @@ def test_vgg_table4_analysis():
         assert abs(r.output_ex - r.output_multi) < 8.9, r
         # ReLU SNR-neutrality (paper §4.4, verified in their Table 4)
         assert abs(r.relu_ex - r.output_ex) < 1.5, r
+
+
+#: analyze_vgg rows captured from the pre-tap sequential walker (ISSUE 3
+#: regression pin): vgg.init(key0, 10, width_mult=0.25, input_hw=32,
+#: fc_dim=64), x = normal(key0, (2, 32, 32, 3)), BFPPolicy(), 6 layers.
+#: (name, input_ex, input_single, input_multi, weight_ex, weight_model,
+#:  output_ex, output_single, output_multi, relu_ex)
+_VGG_TABLE4_PINNED = [
+    ("conv1_1", 40.763931, 40.605503, 40.605499, 42.482407, 42.360992,
+     38.472313, 38.384842, 38.384842, 38.527714),
+    ("conv1_2", 34.968494, 34.224194, 32.817474, 40.485310, 40.479164,
+     34.013855, 33.300964, 32.130684, 34.210258),
+    ("conv2_1", 34.818081, 38.807625, 31.283648, 40.169861, 40.205021,
+     33.558323, 36.440056, 30.759815, 33.884216),
+    ("conv2_2", 31.748373, 32.100552, 28.374634, 39.284000, 39.309986,
+     31.136555, 31.344597, 28.037889, 31.770947),
+    ("conv3_1", 32.387501, 39.799828, 27.758234, 38.809685, 38.865807,
+     30.458771, 36.297459, 27.434103, 31.051081),
+    ("conv3_2", 30.834774, 39.334789, 27.161533, 40.338593, 40.383537,
+     29.402966, 36.817280, 26.959494, 29.332874),
+]
+
+
+def test_analyze_vgg_regression_pinned():
+    """The tap-based analyze_vgg reproduces the pre-refactor walker's
+    Table-4 rows (same params/input/policy) to float precision."""
+    params = vgg.init(KEY, 10, width_mult=0.25, input_hw=32, fc_dim=64)
+    x = jax.random.normal(KEY, (2, 32, 32, 3))
+    rows = analysis.analyze_vgg(params, x, BFPPolicy(), max_layers=6)
+    assert len(rows) == len(_VGG_TABLE4_PINNED)
+    for r, exp in zip(rows, _VGG_TABLE4_PINNED):
+        assert r.name == exp[0]
+        got = (r.input_ex, r.input_single, r.input_multi, r.weight_ex,
+               r.weight_model, r.output_ex, r.output_single,
+               r.output_multi, r.relu_ex)
+        for g, e in zip(got, exp[1:]):
+            assert abs(g - e) < 2e-3, (r.name, g, e)
+
+
+def test_analyze_model_resnet18_within_envelope():
+    """ISSUE 3 acceptance: measured-vs-predicted SNR on ResNet-18
+    (residual/projection topology) within the paper's 8.9 dB bar."""
+    params = resnet.init(KEY, 18, 10, width_mult=0.25,
+                         stage_depths=(1, 1, 1, 1))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
+    rows = analysis.analyze_model(resnet.apply, params, x, BFPPolicy())
+    convs = [r for r in rows if r.kind == "conv"]
+    assert len(convs) >= 8   # stem + blocks incl. projection shortcuts
+    assert any("proj" in r.path for r in convs)
+    for r in rows:
+        assert abs(r.output_ex - r.output_multi) < 8.9, r
+
+
+def test_analyze_model_googlenet_within_envelope():
+    """ISSUE 3 acceptance: GoogLeNet inception branches + aux heads."""
+    params = googlenet.init(KEY, 10, width_mult=0.125)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 64, 64, 3))
+    rows = analysis.analyze_model(googlenet.apply, params, x, BFPPolicy())
+    paths = {r.path for r in rows}
+    # branch convs, aux-head sites, and the classifier all analyzed
+    assert {"inc3a/b1", "inc3a/b3", "inc3a/b5", "inc3a/bp",
+            "loss1/conv", "loss1/fc1", "fc"} <= paths
+    for r in rows:
+        assert abs(r.output_ex - r.output_multi) < 8.9, r
+
+
+def test_analyze_model_policymap_skips_float_sites():
+    """Sites a PolicyMap rule pins to float carry no quantization —
+    they must not produce rows (and must not crash the traversal)."""
+    from repro.engine import PolicyMap
+    params = small.lenet_init(KEY)
+    x = jax.random.normal(KEY, (2, 28, 28, 1))
+    pm = PolicyMap.of(("^c1$", None),
+                      default=BFPPolicy(straight_through=False))
+    rows = analysis.analyze_model(small.lenet_apply, params, x, pm)
+    assert [r.path for r in rows] == ["c2", "fc1", "fc2"]
+
+
+def test_analyze_model_rejects_prequant_params():
+    from repro import engine as EG
+    params = small.lenet_init(KEY)
+    x = jax.random.normal(KEY, (2, 28, 28, 1))
+    pol = BFPPolicy(straight_through=False)
+    pq = EG.prequantize_cnn(params, pol)
+    with pytest.raises(ValueError, match="float weights"):
+        analysis.analyze_model(small.lenet_apply, pq, x, pol)
 
 
 def test_bit_width_monotonicity():

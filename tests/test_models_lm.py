@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import reduced, SHAPES
+from repro.configs.base import reduced
 from repro.configs.registry import ARCHS, cells
 from repro.core.policy import PAPER_DEFAULT
 from repro.models.lm import common as C, model as Mdl

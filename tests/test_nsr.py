@@ -6,8 +6,6 @@ assert much tighter bounds on synthetic data.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -16,7 +14,6 @@ except ImportError:  # minimal container: deterministic fallback sampler
 
 from repro.core import nsr
 from repro.core.policy import BFPPolicy
-from repro.core.bfp import Scheme
 
 
 def _acts(key, shape, spread=1.0):
