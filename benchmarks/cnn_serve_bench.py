@@ -1,0 +1,83 @@
+"""E14 CNN serving benchmark — requests/sec vs batch bucket size, and
+prequant on/off (ISSUE 4 acceptance: batched throughput >= 2x
+single-request on at least one paper-model shape).
+
+Rows:
+  cnn_serve/<model>/bucket<b>[/<variant>]   us per REQUEST at bucket b
+  cnn_serve/<model>/speedup                 batched vs single-request
+  cnn_serve/<model>/prequant                prequant-on vs off at max bucket
+
+The engine is identical across rows — only the bucket geometry (and the
+bind-time ``prequantize`` flag for the prequant row) changes, so the
+ratio isolates batching/coalescing, not model differences.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks import common
+from repro import engine as EG
+from repro.core.policy import PAPER_DEFAULT
+from repro.models.cnn import MODELS
+from repro.serve.cnn import CnnServeEngine, ImageRequest
+
+POLICY = PAPER_DEFAULT.with_(straight_through=False)
+
+
+def _throughput(plan, spec, n_req: int, bucket: int, reps: int) -> float:
+    """Median requests/sec serving ``n_req`` requests at one bucket size."""
+    imgs = [jax.random.normal(jax.random.PRNGKey(10 + i),
+                              spec.input_shape()) for i in range(n_req)]
+
+    def serve_once():
+        eng = CnnServeEngine(None, spec.apply, plan, slots=bucket,
+                             buckets=(bucket,))
+        for i, im in enumerate(imgs):
+            eng.submit(ImageRequest(rid=i, image=im))
+        eng.run()
+
+    serve_once()                      # compile the bucket off the clock
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        serve_once()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return n_req / ts[len(ts) // 2]
+
+
+def run():
+    models = ("vgg16",) if common.SMOKE else ("vgg16", "resnet18")
+    n_req = 4 if common.SMOKE else 16
+    buckets = (1, 4) if common.SMOKE else (1, 4, 8)
+    reps = 1 if common.SMOKE else 3
+
+    for name in models:
+        spec = MODELS[name]
+        params = spec.init(jax.random.PRNGKey(0))
+        plan = EG.bind(params, POLICY, tree="cnn")
+        rps = {}
+        for b in buckets:
+            rps[b] = _throughput(plan, spec, n_req, b, reps)
+            common.emit(f"cnn_serve/{name}/bucket{b}", 1e6 / rps[b],
+                        f"req_s={rps[b]:.1f}")
+        speedup = rps[max(buckets)] / rps[min(buckets)]
+        common.emit(f"cnn_serve/{name}/speedup", 0.0,
+                    f"batched_vs_single={speedup:.2f}x")
+
+        # prequant on/off at the max bucket: same plan geometry, weights
+        # re-quantized per forward instead of once at bind
+        plan_off = EG.bind(params, POLICY, tree="cnn", prequantize=False)
+        rps_off = _throughput(plan_off, spec, n_req, max(buckets), reps)
+        common.emit(f"cnn_serve/{name}/bucket{max(buckets)}/noprequant",
+                    1e6 / rps_off, f"req_s={rps_off:.1f}")
+        common.emit(f"cnn_serve/{name}/prequant", 0.0,
+                    f"prequant_speedup={rps[max(buckets)] / rps_off:.2f}x")
+
+
+if __name__ == "__main__":
+    common.set_smoke(False)
+    print("name,us_per_call,derived")
+    run()

@@ -14,6 +14,8 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
                        (ISSUE 2 acceptance)
   dispatch_bench       E13 bound-plan vs per-call dispatch (trace time +
                        eager steady state; ISSUE 3 acceptance)
+  cnn_serve_bench      E14 CNN serving: requests/sec vs batch bucket
+                       size + prequant on/off (ISSUE 4 acceptance)
 
 Flags:
   --smoke       tiny shapes, 1 rep — CI rot-check mode (the numbers are
@@ -30,10 +32,10 @@ import sys
 import time
 import traceback
 
-from benchmarks import (blocksize_ablation, common, conv_bench,
-                        dispatch_bench, engine_bench, kernel_bench,
-                        table1_storage, table2_scheme, table3_sweep,
-                        table4_nsr)
+from benchmarks import (blocksize_ablation, cnn_serve_bench, common,
+                        conv_bench, dispatch_bench, engine_bench,
+                        kernel_bench, table1_storage, table2_scheme,
+                        table3_sweep, table4_nsr)
 
 _ALL = {
     "table1": table1_storage.run,
@@ -45,6 +47,7 @@ _ALL = {
     "engine": engine_bench.run,
     "conv": conv_bench.run,
     "dispatch": dispatch_bench.run,
+    "cnn_serve": cnn_serve_bench.run,
 }
 
 

@@ -31,6 +31,7 @@ __all__ = [
     "Rounding",
     "Scheme",
     "BFPBlock",
+    "pow2",
     "block_exponent",
     "quantize",
     "dequantize",
@@ -45,6 +46,28 @@ __all__ = [
 # are all zero); a very negative one keeps dequantized zeros exact and the
 # step size harmless.
 _ZERO_BLOCK_EXP = -126
+
+
+def pow2(e: jax.Array) -> jax.Array:
+    """EXACT float32 2^e for integer ``e`` — the format's scale primitive.
+
+    ``jnp.exp2`` is a polynomial approximation and lands 1 ulp off 2^e
+    for many negative integer exponents on CPU/TPU backends.  That is
+    enough to break the power-of-two contract the whole datapath leans
+    on: with an inexact step, ``m * step / step`` drifts below the
+    integer and TRUNCATE re-quantization loses a count (the
+    requantization-idempotence property test caught this).  Build the
+    float32 directly instead: exponent field for the normal range,
+    mantissa bit for the denormal range — shifts + bitcast only, so the
+    same code lowers inside Pallas kernels.
+    """
+    e = jnp.asarray(e).astype(jnp.int32)
+    normal = (jnp.clip(e, -126, 127) + 127) << 23
+    subnorm = jnp.int32(1) << jnp.clip(e + 149, 0, 22)
+    bits = jnp.where(e >= -126, normal, subnorm)
+    bits = jnp.where(e < -149, 0, bits)               # underflow -> +0.0
+    bits = jnp.where(e > 127, 0x7F800000, bits)       # overflow  -> +inf
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
 
 
 class Rounding(enum.Enum):
@@ -104,8 +127,17 @@ class BFPBlock:
 
     @property
     def scale(self) -> jax.Array:
-        """2^(eps - (L-2)) as float32, broadcastable to mantissa.shape."""
-        return jnp.exp2((self.exponent - (self.bits - 2)).astype(jnp.float32))
+        """2^(eps - (L-2)) as float32, expanded to broadcast against
+        ``mantissa``.  Keepdims layouts (the paper schemes) pass through;
+        Scheme.TILED's non-keepdims reshapes ([rows, K/bk] against a
+        [rows, K] mantissa) repeat each tile's exponent along its blocked
+        axis (tiles are contiguous), so ``dequantize`` works for every
+        layout ``bfp_quantize_matrix`` produces."""
+        e = self.exponent
+        for ax, (se, sm) in enumerate(zip(e.shape, self.mantissa.shape)):
+            if se not in (1, sm):
+                e = jnp.repeat(e, sm // se, axis=ax)
+        return pow2(e - (self.bits - 2))
 
     def dequantize(self, dtype=jnp.float32) -> jax.Array:
         return (self.mantissa.astype(jnp.float32) * self.scale).astype(dtype)
@@ -162,7 +194,7 @@ def quantize(
         raise ValueError(f"bits (incl. sign) must be in [2, 24], got {bits}")
     x = x.astype(jnp.float32)
     eps = block_exponent(x, axes)
-    step = jnp.exp2((eps - (bits - 2)).astype(jnp.float32))
+    step = pow2(eps - (bits - 2))
     lim = 2 ** (bits - 1) - 1
     m = _apply_rounding(x / step, rounding, key)
     m = jnp.clip(m, -lim, lim).astype(_mantissa_dtype(bits))

@@ -130,8 +130,8 @@ def _bfp_matmul_2d_impl(x2d: jax.Array, w: jax.Array,
     part = jnp.einsum("btk,tkn->tbn", mx.astype(jnp.int32),
                       mw.astype(jnp.int32),
                       preferred_element_type=jnp.int32).astype(jnp.float32)
-    sx = jnp.exp2((bx.exponent - (policy.l_i - 2)).astype(jnp.float32))  # [B,t]
-    sw = jnp.exp2((bw.exponent - (policy.l_w - 2)).astype(jnp.float32))  # [t,N]
+    sx = bfp.pow2(bx.exponent - (policy.l_i - 2))  # [B,t]
+    sw = bfp.pow2(bw.exponent - (policy.l_w - 2))  # [t,N]
     scaled = part * sx.T[:, :, None] * sw[:, None, :]
     return jnp.sum(scaled, axis=0)
 
@@ -212,7 +212,7 @@ def bfp_matmul_2d_prequant(x2d: jax.Array, wm: jax.Array, ws: jax.Array,
               bfp.bfp_quantize_matrix(x2d, policy.l_i, "w", Scheme.TILED,
                                       bk, policy.rounding, key))
         sx = (bx.scale if policy.scheme is not Scheme.TILED else
-              jnp.exp2((bx.exponent - (policy.l_i - 2)).astype(jnp.float32)))
+              bfp.pow2(bx.exponent - (policy.l_i - 2)))
         mo = _int_matmul(bx.mantissa, wm, l_sum)
         return mo * (sx.reshape(b, 1) if sx.size != 1 else sx) * ws
 
@@ -223,8 +223,8 @@ def bfp_matmul_2d_prequant(x2d: jax.Array, wm: jax.Array, ws: jax.Array,
     if policy.scheme is Scheme.TILED:
         bx = bfp.bfp_quantize_matrix(x2d, policy.l_i, "w", Scheme.TILED,
                                      bk, policy.rounding, key)
-        sx_e = jnp.exp2((bx.exponent - (policy.l_i - 2))
-                        .astype(jnp.float32)).T[:, :, None]      # [t,B,1]
+        sx_e = bfp.pow2(bx.exponent
+                        - (policy.l_i - 2)).T[:, :, None]        # [t,B,1]
     else:
         bx = quantize_activations(x2d, policy, key)
         sx_e = bx.scale[None]                                    # [1,B|1,1]

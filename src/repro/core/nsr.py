@@ -29,12 +29,14 @@ from typing import List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.bfp import pow2 as bfp_pow2
 from repro.core.bfp_dot import quantize_activations, quantize_weights
 from repro.core.policy import BFPPolicy
 
 __all__ = [
     "snr_db", "nsr_from_snr_db", "snr_db_from_nsr",
     "quantization_noise_var", "predict_matrix_snr", "measure_matrix_snr",
+    "matrix_nsr_upper_bound", "gemm_nsr_upper_bound",
     "single_layer_output_snr", "chain_input_nsr", "LayerSNRReport",
     "analyze_gemm_chain",
 ]
@@ -44,7 +46,7 @@ def snr_db(signal: jax.Array, noisy: jax.Array) -> jax.Array:
     """Measured SNR: 10 log10(sum(signal^2) / sum((noisy-signal)^2))."""
     s = jnp.sum(jnp.square(signal.astype(jnp.float32)))
     e = jnp.sum(jnp.square((noisy - signal).astype(jnp.float32)))
-    return 10.0 * jnp.log10(s / jnp.maximum(e, 1e-300))
+    return 10.0 * jnp.log10(s / jnp.maximum(e, jnp.finfo(jnp.float32).tiny))
 
 
 def nsr_from_snr_db(snr: jax.Array) -> jax.Array:
@@ -52,12 +54,12 @@ def nsr_from_snr_db(snr: jax.Array) -> jax.Array:
 
 
 def snr_db_from_nsr(nsr: jax.Array) -> jax.Array:
-    return -10.0 * jnp.log10(jnp.maximum(nsr, 1e-300))
+    return -10.0 * jnp.log10(jnp.maximum(nsr, jnp.finfo(jnp.float32).tiny))
 
 
 def quantization_noise_var(exponent: jax.Array, bits: int) -> jax.Array:
     """Per-block noise variance step^2 / 12 (paper eq. 8, our convention)."""
-    step = jnp.exp2((exponent - (bits - 2)).astype(jnp.float32))
+    step = bfp_pow2(exponent - (bits - 2))
     return jnp.square(step) / 12.0
 
 
@@ -86,17 +88,92 @@ def predict_matrix_snr(x2d: jax.Array, bits: int, operand: str,
     exps, elems = _block_sizes_and_exps(x2d, bits, operand, policy)
     noise_energy = jnp.sum(quantization_noise_var(exps, bits)) * elems
     signal_energy = jnp.sum(jnp.square(x2d.astype(jnp.float32)))
-    return 10.0 * jnp.log10(signal_energy / jnp.maximum(noise_energy, 1e-300))
+    return 10.0 * jnp.log10(signal_energy /
+                            jnp.maximum(noise_energy,
+                                        jnp.finfo(jnp.float32).tiny))
 
 
 def measure_matrix_snr(x2d: jax.Array, bits: int, operand: str,
                        policy: BFPPolicy) -> jax.Array:
-    """Empirical SNR of the same block formatting (for model validation)."""
+    """Empirical SNR of the same block formatting (for model validation).
+    Works for every scheme incl. TILED (``BFPBlock.scale`` expands the
+    per-tile exponent layout)."""
     if operand == "w":
         blk = quantize_weights(x2d, policy.with_(l_w=bits))
     else:
         blk = quantize_activations(x2d, policy.with_(l_i=bits))
     return snr_db(x2d, blk.dequantize())
+
+
+# ---------------------------------------------------------------------------
+# NSR upper bounds (paper abstract: "the NSR upper bound ... provides the
+# promising guidance for BFP based CNN engine design").  Where eq. 8-13
+# model the EXPECTED noise (step^2/12 per element), these are hard
+# worst-case bounds no measurement can exceed — the property suite
+# (tests/test_bfp_properties.py) pins them over generated GEMMs.
+# ---------------------------------------------------------------------------
+
+def matrix_nsr_upper_bound(block_elems: int, bits: int) -> float:
+    """Hard worst-case NSR of block formatting (never exceeded).
+
+    Per element the format error is < step (round-off contributes at
+    most step/2; the clipped block max loses < step), so a block of n
+    elements carries noise energy < n*step^2.  Each block's signal
+    energy is at least (2^eps)^2 — the defining block max satisfies
+    |x_max| >= 2^eps.  With step = 2^(eps - (L-2)) per our convention:
+
+        eta_block < n * 2^(-2(L-2))
+
+    and the matrix aggregate (total noise / total signal) cannot exceed
+    the worst per-block ratio.  ~10.8 dB above the step^2/12 + measured-
+    signal expectation — the price of a guarantee.
+    """
+    return float(block_elems) * 2.0 ** (-2 * (bits - 2))
+
+
+def _format_noise_energy_bound(x2d: jax.Array, bits: int, operand: str,
+                               policy: BFPPolicy) -> jax.Array:
+    """Worst-case format noise ENERGY: sum over blocks of n * step^2."""
+    exps, elems = _block_sizes_and_exps(x2d, bits, operand, policy)
+    step = bfp_pow2(exps - (bits - 2))
+    return jnp.sum(jnp.square(step)) * elems
+
+
+def gemm_nsr_upper_bound(x2d: jax.Array, w2d: jax.Array,
+                         policy: BFPPolicy) -> jax.Array:
+    """Analytic upper bound on the measured output NSR of one BFP GEMM.
+
+    The fixed-point datapath is exact on the formatted operands (paper
+    Fig. 2; test_int_datapath_exactness), so the output error is exactly
+
+        E = e_x (W + e_w) + X e_w
+
+    with per-operand error energies bounded from the block geometry
+    alone (||e||_F^2 <= sum over blocks n*step^2, the
+    :func:`matrix_nsr_upper_bound` derivation).  Frobenius
+    submultiplicativity then gives
+
+        ||E||_F <= ||e_x|| (||W|| + ||e_w||) + ||X|| ||e_w||
+        eta_O   <= (that)^2 / ||X W||_F^2
+
+    Loose (worst case per element, Frobenius instead of spectral norms)
+    but DETERMINISTIC: both sides share the ||X W|| denominator, so the
+    comparison is robust even when the output nearly cancels.  ``x2d``
+    is [B, K] activations, ``w2d`` [K, N] weights — the NN orientation
+    of ``bfp_dot``.
+    """
+    x = x2d.astype(jnp.float32)
+    w = w2d.astype(jnp.float32)
+    ex = jnp.sqrt(_format_noise_energy_bound(x, policy.l_i, "i", policy)) \
+        if policy.quantize_inputs else jnp.asarray(0.0)
+    ew = jnp.sqrt(_format_noise_energy_bound(w, policy.l_w, "w", policy)) \
+        if policy.quantize_weights else jnp.asarray(0.0)
+    nx, nw = jnp.linalg.norm(x), jnp.linalg.norm(w)
+    e_out = ex * (nw + ew) + nx * ew
+    sig = jnp.sum(jnp.square(x @ w))
+    # guard must be a float32-representable tiny (1e-300 flushes to 0.0
+    # with x64 off, making the guard a no-op and a zero signal -> nan)
+    return jnp.square(e_out) / jnp.maximum(sig, jnp.finfo(jnp.float32).tiny)
 
 
 def single_layer_output_snr(snr_i_db: jax.Array,

@@ -62,8 +62,7 @@ def prequant_leaf(w: jax.Array, policy: BFPPolicy) -> Any:
     def one(mat):
         blk = bfp.bfp_quantize_matrix(mat, policy.l_w, "i", bfp.Scheme.TILED,
                                       bk, policy.rounding)
-        return blk.mantissa, jnp.exp2(
-            (blk.exponent - (policy.l_w - 2)).astype(jnp.float32))
+        return blk.mantissa, bfp.pow2(blk.exponent - (policy.l_w - 2))
 
     m, s = jax.vmap(one)(w2)
     return {"m": m.reshape(*lead, k, n),

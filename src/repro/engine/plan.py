@@ -84,6 +84,10 @@ class Plan:
         #: per-plan fallback-warning dedup for unbound-path dispatch, so
         #: one plan's downgrades never mute another's
         self._warned: set = set()
+        #: per-plan cache of jitted forwards, keyed by apply function —
+        #: every consumer binding the same plan to the same model shares
+        #: one traced callable (see :meth:`jit_forward`)
+        self._jit_cache: Dict[Any, Any] = {}
 
     def __repr__(self) -> str:
         n_bfp = sum(1 for s in self._sites.values() if s.policy is not None)
@@ -125,6 +129,26 @@ class Plan:
         return conv_and_tap(x, w, resolve_policy(self.policy, path),
                             stride, padding, key, strict=self.strict,
                             path=path, warned=self._warned)
+
+    def jit_forward(self, apply_fn):
+        """A jitted ``apply_fn(plan.params, x, plan)``, cached per
+        ``apply_fn`` on this plan.
+
+        This is how a bound plan is REUSED across jit'd callables: N
+        serve engines (or batch buckets, or benchmark drivers) bound to
+        the same plan get the SAME callable object back, so they share
+        one trace-cache — jax retraces per input shape (each batch
+        bucket compiles once), never per consumer.  The plan and its
+        pre-quantized params ride the closure; extra positional args
+        (e.g. a model's ``training`` flag) pass through.
+        """
+        fn = self._jit_cache.get(apply_fn)
+        if fn is None:
+            def fwd(x, *args, _apply=apply_fn):
+                return _apply(self.params, x, self, *args)
+            fn = jax.jit(fwd)
+            self._jit_cache[apply_fn] = fn
+        return fn
 
     def describe(self) -> str:
         """Human-readable site table (examples / serving admission logs)."""

@@ -28,7 +28,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.bfp import pow2
+
 _ZERO_BLOCK_EXP = -126
+
 
 
 def _floor_log2(amax: jax.Array) -> jax.Array:
@@ -47,7 +50,7 @@ def _block_format(tile: jax.Array, bits: int, axis: int):
     """
     amax = jnp.max(jnp.abs(tile), axis=axis, keepdims=True)
     e = _floor_log2(amax)
-    step = jnp.exp2((e - (bits - 2)).astype(jnp.float32))
+    step = pow2(e - (bits - 2))
     lim = float(2 ** (bits - 1) - 1)
     m = jnp.clip(jnp.round(tile.astype(jnp.float32) / step), -lim, lim)
     # int8 feeds the MXU's native 8-bit path (L <= 8, the paper's headline

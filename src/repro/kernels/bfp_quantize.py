@@ -14,7 +14,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.bfp import pow2
+
 _ZERO_BLOCK_EXP = -126
+
 
 
 def _bfp_quantize_kernel(x_ref, m_ref, e_ref, *, bits: int):
@@ -24,7 +27,7 @@ def _bfp_quantize_kernel(x_ref, m_ref, e_ref, *, bits: int):
     e = (jnp.right_shift(fbits, jnp.uint32(23)) & jnp.uint32(0xFF)).astype(
         jnp.int32) - 127
     e = jnp.where(amax > 0, e, _ZERO_BLOCK_EXP)
-    step = jnp.exp2((e - (bits - 2)).astype(jnp.float32))
+    step = pow2(e - (bits - 2))
     lim = float(2 ** (bits - 1) - 1)
     m = jnp.clip(jnp.round(tile.astype(jnp.float32) / step), -lim, lim)
     m_ref[...] = m.astype(jnp.int8)  # quantize kernel is the L<=8 streaming path

@@ -21,6 +21,21 @@ import jax.numpy as jnp
 _ZERO_BLOCK_EXP = -126
 
 
+def pow2(e):
+    """Exact float32 2^e for integer e (jnp.exp2 is ~1 ulp off at many
+    negative integer exponents): exponent-field construction for the
+    normal range, mantissa-bit construction for denormals — shifts +
+    bitcast only, TPU-lowerable.  Deliberately independent copy of
+    repro.core.bfp.pow2 (the oracle must not call into core)."""
+    e = jnp.asarray(e).astype(jnp.int32)
+    normal = (jnp.clip(e, -126, 127) + 127) << 23
+    subnorm = jnp.int32(1) << jnp.clip(e + 149, 0, 22)
+    bits = jnp.where(e >= -126, normal, subnorm)
+    bits = jnp.where(e < -149, 0, bits)
+    bits = jnp.where(e > 127, 0x7F800000, bits)
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
 def _floor_log2(amax: jax.Array) -> jax.Array:
     """floor(log2 x) for x >= 0 via exponent-field extraction (bit-exact)."""
     bits = jax.lax.bitcast_convert_type(amax.astype(jnp.float32), jnp.uint32)
@@ -33,7 +48,7 @@ def quantize_tile(x: jax.Array, bits: int, axis: int) -> Tuple[jax.Array, jax.Ar
     """Block-format along ``axis`` (whole axis = one block). -> (m, e)."""
     amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
     e = _floor_log2(amax)
-    step = jnp.exp2((e - (bits - 2)).astype(jnp.float32))
+    step = pow2(e - (bits - 2))
     lim = float(2 ** (bits - 1) - 1)
     m = jnp.clip(jnp.round(x.astype(jnp.float32) / step), -lim, lim)
     return m.astype(jnp.int8 if bits <= 8 else jnp.int32), e
@@ -114,7 +129,7 @@ def bfp_matmul_ref(x: jax.Array, w: jax.Array, l_i: int, l_w: int,
         mw, ew = quantize_tile(ws, l_w, axis=0)          # [bk,N], [1,N]
         part = jax.lax.dot(mx.astype(jnp.int32), mw.astype(jnp.int32),
                            preferred_element_type=jnp.int32)
-        sx = jnp.exp2((ex - (l_i - 2)).astype(jnp.float32))
-        sw = jnp.exp2((ew - (l_w - 2)).astype(jnp.float32))
+        sx = pow2(ex - (l_i - 2))
+        sw = pow2(ew - (l_w - 2))
         out = out + part.astype(jnp.float32) * (sx * sw)
     return out

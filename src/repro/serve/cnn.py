@@ -1,0 +1,237 @@
+"""Batched CNN inference service on sharded BFP plans (DESIGN.md §9).
+
+The paper's workload is a CNN *accelerator* serving fixed-point
+inference; this module gives the four paper models (and anything with
+the ``apply(params, x, policy)`` convention) the same deployment path
+the LM decode engine has:
+
+  * a shape-stable slot table (``serve.slots.SlotTable``, the
+    continuous-batching-lite bookkeeping shared with ``ServeEngine``):
+    image requests admit into free slots, finished slots free
+    immediately for the next queued request;
+  * bucketed batch coalescing: each step stacks the active slots into
+    the smallest configured batch bucket (padding with duplicates of a
+    live image — logits-neutral for any weights), so the jitted forward
+    compiles once per bucket, not once per request count;
+  * a bind-once ``engine.Plan``: policy resolution, backend selection,
+    and weight pre-quantization happen at admission-time construction
+    (``strict_backend=True`` rejects undeployable configs HERE);
+    ``Plan.jit_forward`` means N engines bound to one plan share one
+    traced forward per bucket shape;
+  * data-parallel batch sharding through ``dist.sharding.axis_rules``
+    + a ``launch.mesh`` mesh: the stacked batch is annotated
+    ``("batch", None, None, None)`` before the forward, so the SAME
+    code path runs 1-device in tier-1 tests (identity / trivial mesh)
+    and N-device in production.
+
+Bit-exactness contract (pinned by tests/test_serve_cnn.py through
+``engine.taps`` events): a request served through the engine produces
+exactly the logits of a direct ``apply(plan.params, batch, plan)`` on
+the same rows.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import engine as EG
+from repro.dist import sharding as DS
+from repro.engine import PolicyLike
+from repro.engine.backends import BackendUnsupportedError
+from repro.engine.plan import Plan
+from repro.serve.slots import SlotTable
+
+__all__ = ["ImageRequest", "CnnServeEngine", "default_buckets"]
+
+#: logical axes of an NHWC image batch — only the batch axis shards
+#: (pure data parallelism; DEFAULT_RULES maps "batch" -> "data")
+_BATCH_AXES = ("batch", None, None, None)
+
+
+@dataclasses.dataclass
+class ImageRequest:
+    """One classification request: an [H, W, C] image in, logits out."""
+
+    rid: int
+    image: jax.Array
+    logits: Optional[np.ndarray] = None
+    label: Optional[int] = None
+    done: bool = False
+
+
+def default_buckets(slots: int) -> Tuple[int, ...]:
+    """Powers of two up to ``slots`` (plus ``slots`` itself): 8 -> (1, 2,
+    4, 8), 6 -> (1, 2, 4, 6).  One jit compilation per bucket."""
+    out: List[int] = []
+    b = 1
+    while b < slots:
+        out.append(b)
+        b *= 2
+    out.append(slots)
+    return tuple(out)
+
+
+class CnnServeEngine:
+    """Slot-table batched CNN server over a bound execution plan.
+
+    Args:
+      params: float param tree (``models.cnn`` conventions).  Ignored
+        when ``policy`` is already a bound :class:`engine.Plan` — pass
+        ``None`` and reuse the plan's pre-quantized params (that is the
+        multi-engine deployment shape: bind once, serve many).
+      apply_fn: ``apply_fn(params, x, policy)`` -> logits, or a tuple of
+        heads (GoogLeNet) — head 0 is taken as the classifier output.
+      policy: None / BFPPolicy / PolicyMap (bound here via
+        ``engine.bind``) or an existing ``Plan`` (reused as-is).
+      slots: size of the admission slot table (max requests in flight).
+      buckets: ascending batch-bucket sizes; each step pads the active
+        group up to the smallest fitting bucket.  Default:
+        ``default_buckets(slots)``.
+      prequant: pre-quantize eligible weight leaves at bind time (the
+        paper's deployment mode).  Ignored when ``policy`` is a Plan.
+      strict_backend: refuse (raise) backend downgrades at construction
+        instead of warn-once — an undeployable serving config fails at
+        admission, not mid-traffic.  With a pre-bound Plan this verifies
+        the plan carries no downgraded (fallback) sites.
+      mesh / rules: optional ``launch.mesh`` mesh + logical-axis rules
+        (default ``dist.sharding.DEFAULT_RULES``); when given, every
+        forward runs under ``axis_rules`` with the batch axis sharded.
+      jit: jit the bound forward (shared across engines via
+        ``Plan.jit_forward``).  ``jit=False`` runs eagerly — slower,
+        but ``engine.taps`` observers see every GEMM/conv site (taps
+        are suppressed under jit tracing), which is how the
+        bit-exactness regression pins this engine to the direct path.
+    """
+
+    def __init__(self, params: Any, apply_fn: Callable[..., Any],
+                 policy: PolicyLike = None, *, slots: int = 8,
+                 buckets: Optional[Sequence[int]] = None,
+                 prequant: bool = True, strict_backend: bool = False,
+                 mesh=None, rules: Optional[Dict[str, Any]] = None,
+                 jit: bool = True):
+        if isinstance(policy, Plan):
+            # bind-once reuse across engines: the plan's params serve,
+            # and its backend selection is already fixed — enforce the
+            # documented contract instead of silently ignoring args
+            if params is not None:
+                raise ValueError("pass params=None when policy is a "
+                                 "bound Plan (the plan's params serve)")
+            if strict_backend:
+                bad = sorted(s.path for s in policy.sites.values()
+                             if s.fallback)
+                if bad:
+                    raise BackendUnsupportedError(
+                        f"strict_backend: plan carries downgraded sites "
+                        f"{bad}; rebind with engine.bind(..., strict=True)")
+            self.plan = policy
+        else:
+            self.plan = EG.bind(params, policy, tree="cnn",
+                                strict=strict_backend,
+                                prequantize=prequant)
+        self.apply_fn = apply_fn
+        self.table = SlotTable(slots)
+        self.buckets = (tuple(sorted(buckets)) if buckets
+                        else default_buckets(slots))
+        if self.buckets[-1] < 1:
+            raise ValueError(f"bad buckets {self.buckets}")
+        self.mesh = mesh
+        self.rules = dict(rules) if rules is not None \
+            else dict(DS.DEFAULT_RULES)
+        self._fwd = (self.plan.jit_forward(apply_fn) if jit
+                     else lambda x: apply_fn(self.plan.params, x,
+                                             self.plan))
+        self._shape: Optional[Tuple[int, ...]] = None
+        self._next_rid = 0
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, req: Any = None, *, image: Optional[jax.Array] = None
+               ) -> ImageRequest:
+        """Queue a request (or wrap a bare ``image=`` into one).
+
+        All images must share one [H, W, C] shape — the slot table is
+        shape-stable by construction.
+        """
+        if req is None:
+            if image is None:
+                raise ValueError("pass a request or image=")
+            req = ImageRequest(rid=self._next_rid, image=image)
+        self._next_rid = max(self._next_rid, req.rid) + 1
+        img = req.image
+        if getattr(img, "ndim", 0) != 3:
+            raise ValueError(f"image must be [H, W, C], got "
+                             f"{getattr(img, 'shape', None)}")
+        if self._shape is None:
+            self._shape = tuple(img.shape)
+        elif tuple(img.shape) != self._shape:
+            raise ValueError(f"image shape {tuple(img.shape)} != engine "
+                             f"shape {self._shape} (slot table is "
+                             f"shape-stable)")
+        self.table.submit(req)
+        return req
+
+    # -- serving ------------------------------------------------------------
+
+    def _bucket_for(self, n: int) -> int:
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.buckets[-1]
+
+    def _sharding_ctx(self):
+        return (DS.axis_rules(self.rules, self.mesh)
+                if self.mesh is not None else contextlib.nullcontext())
+
+    def _run_group(self, group: List[int]) -> None:
+        reqs = [self.table.req[s] for s in group]
+        bucket = self._bucket_for(len(reqs))
+        imgs = [r.image for r in reqs]
+        if len(imgs) < bucket:
+            # pad with a DUPLICATE of a live image: rows are processed
+            # independently by every conv/GEMM, so a duplicate row's
+            # activations equal its original's at every layer and can
+            # never raise a shared block max above the live rows' own —
+            # logits-neutral for ANY weights.  (A zero image is only
+            # neutral while zero rows STAY zero, i.e. zero biases/BN
+            # shifts; a trained model's bias pattern could otherwise own
+            # an EQ2/EQ4 whole-matrix exponent from layer 2 on.)
+            imgs = imgs + [imgs[0]] * (bucket - len(imgs))
+        x = jnp.stack(imgs)
+        with self._sharding_ctx():
+            x = DS.shard(x, *_BATCH_AXES)
+            out = self._fwd(x)
+        logits = out[0] if isinstance(out, (tuple, list)) else out
+        logits = np.asarray(logits)
+        for i, (s, r) in enumerate(zip(group, reqs)):
+            r.logits = logits[i]
+            r.label = int(np.argmax(logits[i]))
+            r.done = True
+            self.table.free(s)
+
+    def step(self) -> int:
+        """Admit, coalesce, run one bucketed forward per chunk of active
+        slots; returns the number of requests completed this step."""
+        self.table.admit()
+        active = self.table.active()
+        if not active:
+            return 0
+        cap = self.buckets[-1]
+        for i in range(0, len(active), cap):
+            self._run_group(active[i:i + cap])
+        return len(active)
+
+    def run(self) -> List[Any]:
+        """Drain the queue; returns the requests still in flight or
+        queued when called.  Requests a prior step() already COMPLETED
+        are not re-reported — keep your own list (as launch.serve_cnn
+        does) when accounting across manual step() calls."""
+        all_reqs = [self.table.req[s] for s in self.table.active()] + \
+            list(self.table.queue)
+        while self.table.pending():
+            self.step()
+        return all_reqs

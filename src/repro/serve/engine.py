@@ -27,6 +27,7 @@ from repro import engine as EG
 from repro.configs.base import LMConfig
 from repro.engine import PolicyLike
 from repro.models.lm import model as Mdl
+from repro.serve.slots import SlotTable
 
 __all__ = ["prefill", "generate", "ServeEngine", "Request"]
 
@@ -139,9 +140,13 @@ class ServeEngine:
         self.cache = Mdl.init_cache(cfg, slots, max_len)
         #: pristine per-slot state for admission-time row resets
         self._cache0 = self.cache
-        self.slot_req: List[Optional[Request]] = [None] * slots
+        #: shared slot-table bookkeeping (serve.slots); ``slot_req`` and
+        #: ``queue`` are aliases of the table's lists, so row-level code
+        #: below mutates the same state the table reports on
+        self.table = SlotTable(slots)
+        self.slot_req: List[Optional[Request]] = self.table.req
         self.slot_pos = [0] * slots
-        self.queue: List[Request] = []
+        self.queue: List[Request] = self.table.queue
         self._tok = jnp.zeros((slots, 1), jnp.int32)
 
         plan = self.plan
@@ -156,7 +161,7 @@ class ServeEngine:
             # an empty prompt would leave _admit's prefill loop with no
             # logits to seed the first decode from, wedging the slot
             raise ValueError("request prompt must be non-empty")
-        self.queue.append(req)
+        self.table.submit(req)
 
     def _merge_rows(self, old, new, rows):
         """Keep only slot ``rows`` of the stepped cache; every other
@@ -181,42 +186,39 @@ class ServeEngine:
         return jax.tree_util.tree_map(one, old, new)
 
     def _admit(self):
-        for s in range(self.slots):
-            if self.slot_req[s] is None and self.queue:
-                req = self.queue.pop(0)
-                self.slot_req[s] = req
-                # reset slot s to pristine state: recurrent families
-                # (ssm/hybrid) READ-modify-write their states h' = f(h, x),
-                # so a reused slot must not prefill from the previous
-                # occupant's (or a wholesale-stepped garbage) state.  KV
-                # rows are position-overwritten anyway, so this costs one
-                # merge and buys correctness for every cache family.
-                self.cache = self._merge_rows(self.cache, self._cache0,
-                                              [s])
-                others = [r for i, r in enumerate(self.slot_req)
-                          if r is not None and i != s]
-                # per-slot prefill: the shape-stable step runs the whole
-                # batch, but ONLY row s's cache writes are kept — already
-                # active slots would otherwise have their rows clobbered
-                # at the new request's (wrong) positions.  Batch rows are
-                # independent in decode_step, so garbage other rows pick
-                # up MID-loop is never read by row s: one merge after the
-                # loop is bit-identical and len(prompt)x cheaper; with no
-                # other slot active the merge is skipped entirely.
-                cache = self.cache
-                for t, tok in enumerate(req.prompt):
-                    toks = self._tok.at[s, 0].set(tok)
-                    logits, cache = self._step(
-                        cache, toks, jnp.asarray(t, jnp.int32))
-                self.cache = (self._merge_rows(self.cache, cache, [s])
-                              if others else cache)
-                self.slot_pos[s] = len(req.prompt)
-                req._next = int(jnp.argmax(logits[s, -1]))
+        while (adm := self.table.admit_one()) is not None:
+            s, req = adm
+            # reset slot s to pristine state: recurrent families
+            # (ssm/hybrid) READ-modify-write their states h' = f(h, x),
+            # so a reused slot must not prefill from the previous
+            # occupant's (or a wholesale-stepped garbage) state.  KV
+            # rows are position-overwritten anyway, so this costs one
+            # merge and buys correctness for every cache family.
+            self.cache = self._merge_rows(self.cache, self._cache0, [s])
+            others = [r for i, r in enumerate(self.slot_req)
+                      if r is not None and i != s]
+            # per-slot prefill: the shape-stable step runs the whole
+            # batch, but ONLY row s's cache writes are kept — already
+            # active slots would otherwise have their rows clobbered
+            # at the new request's (wrong) positions.  Batch rows are
+            # independent in decode_step, so garbage other rows pick
+            # up MID-loop is never read by row s: one merge after the
+            # loop is bit-identical and len(prompt)x cheaper; with no
+            # other slot active the merge is skipped entirely.
+            cache = self.cache
+            for t, tok in enumerate(req.prompt):
+                toks = self._tok.at[s, 0].set(tok)
+                logits, cache = self._step(
+                    cache, toks, jnp.asarray(t, jnp.int32))
+            self.cache = (self._merge_rows(self.cache, cache, [s])
+                          if others else cache)
+            self.slot_pos[s] = len(req.prompt)
+            req._next = int(jnp.argmax(logits[s, -1]))
 
     def step(self) -> int:
         """One decode step over all active slots; returns #active."""
         self._admit()
-        active = [s for s in range(self.slots) if self.slot_req[s]]
+        active = self.table.active()
         if not active:
             return 0
         toks = self._tok
@@ -250,12 +252,14 @@ class ServeEngine:
             self.slot_pos[s] += 1
             if len(req.out) >= req.max_new:
                 req.done = True
-                self.slot_req[s] = None
+                self.table.free(s)
         return len(active)
 
     def run(self) -> List[Request]:
-        done: List[Request] = []
-        all_reqs = list(self.queue)
-        while self.queue or any(self.slot_req):
+        # include requests a prior step() already admitted into slots —
+        # snapshotting only the queue would drop them from the result
+        all_reqs = [r for r in self.slot_req if r is not None] + \
+            list(self.queue)
+        while self.table.pending():
             self.step()
         return all_reqs

@@ -1,0 +1,71 @@
+"""Shared slot-table machinery for the batched serve engines.
+
+A :class:`SlotTable` is the Python-side bookkeeping of
+continuous-batching-lite (DESIGN.md §7.1 / §9): a fixed number of
+shape-stable slots, a FIFO queue of submitted requests, admission of
+queued requests into free slots, and immediate slot reuse when a request
+finishes.  The jitted step functions stay whole-batch and shape-stable;
+this table only decides WHICH rows are live.  Both serve engines share
+it — ``serve.engine.ServeEngine`` (LM decode, where admission interleaves
+per-slot prefill) and ``serve.cnn.CnnServeEngine`` (batched CNN
+inference, where admission is wholesale and every admitted request
+completes in one bucketed forward).
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Tuple
+
+__all__ = ["SlotTable"]
+
+
+class SlotTable:
+    """Fixed-size request staging: ``req[s] is None`` == slot ``s`` free.
+
+    ``req`` and ``queue`` are plain lists on purpose — engines alias them
+    (``self.slot_req = table.req``) so existing row-level bookkeeping
+    keeps working against the shared state.
+    """
+
+    def __init__(self, slots: int):
+        if slots < 1:
+            raise ValueError(f"need at least one slot, got {slots}")
+        self.slots = slots
+        self.req: List[Optional[Any]] = [None] * slots
+        self.queue: List[Any] = []
+
+    def submit(self, req: Any) -> None:
+        self.queue.append(req)
+
+    def admit_one(self) -> Optional[Tuple[int, Any]]:
+        """Admit ONE queued request into the lowest free slot.
+
+        Returns ``(slot, request)`` or None when the queue is empty or
+        every slot is occupied.  Engines that do per-admission work (the
+        LM engine's masked per-slot prefill) interleave it between
+        ``admit_one`` calls, preserving admission-order semantics.
+        """
+        if not self.queue:
+            return None
+        for s in range(self.slots):
+            if self.req[s] is None:
+                r = self.queue.pop(0)
+                self.req[s] = r
+                return s, r
+        return None
+
+    def admit(self) -> List[int]:
+        """Fill every free slot from the queue; newly admitted slot ids."""
+        out: List[int] = []
+        while (adm := self.admit_one()) is not None:
+            out.append(adm[0])
+        return out
+
+    def free(self, s: int) -> None:
+        self.req[s] = None
+
+    def active(self) -> List[int]:
+        return [s for s in range(self.slots) if self.req[s] is not None]
+
+    def pending(self) -> bool:
+        """True while queued or in-flight work remains."""
+        return bool(self.queue) or any(r is not None for r in self.req)

@@ -1,4 +1,6 @@
 """repro.dist: logical-axis sharding, spec trees, gradient compression."""
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -28,6 +30,48 @@ def test_shard_applies_constraint_inside_rules():
     assert sharding.current_rules() is None        # context restored
     np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
     assert z.shape == (3, 5)
+
+
+def test_indivisible_rule_warns_once_per_rule():
+    """ISSUE 4 satellite: dropping a rule on a non-divisible dim is no
+    longer silent — one ShardingRuleDropped per rule, not per call, so
+    production misconfigs surface without flooding the serving loop.
+    (Unit-tested against the lowering helper with synthetic axis sizes:
+    real multi-device meshes are not constructible in the 1-CPU tier-1
+    environment.)"""
+    sizes = {"data": 4, "model": 2}
+    rules = {"batch": "data", "ffn": "model", "experts": ("data", "model")}
+    sharding._DROP_WARNED.clear()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        p1 = sharding.resolve_spec(rules, sizes, (6, 7), ("batch", "ffn"))
+        p2 = sharding.resolve_spec(rules, sizes, (6, 7), ("batch", "ffn"))
+        p3 = sharding.resolve_spec(rules, sizes, (9,), ("experts",))
+    assert p1 == (None, None) == p2          # dropped -> replicated
+    assert p3 == (None,)                     # tuple-axis rule (size 8)
+    drops = [r for r in rec
+             if issubclass(r.category, sharding.ShardingRuleDropped)]
+    assert len(drops) == 3                   # once per RULE, not per call
+    assert any("batch" in str(d.message) and "'data'" in str(d.message)
+               for d in drops)
+    # the dedup is per (rule, geometry): the SAME rule dropped at a
+    # DIFFERENT dim (smoke warm-up then misconfigured prod mesh in one
+    # process) must warn again, not stay muted
+    with warnings.catch_warnings(record=True) as rec_geo:
+        warnings.simplefilter("always")
+        sharding.resolve_spec(rules, sizes, (1001,), ("batch",))
+    assert [r for r in rec_geo
+            if issubclass(r.category, sharding.ShardingRuleDropped)]
+    # divisible dims still lower to their physical axes
+    assert sharding.resolve_spec(rules, sizes, (8, 4),
+                                 ("batch", "ffn")) == ("data", "model")
+    # unknown / unnamed axes replicate silently (no rule -> no warning)
+    with warnings.catch_warnings(record=True) as rec2:
+        warnings.simplefilter("always")
+        assert sharding.resolve_spec(rules, sizes, (5, 5),
+                                     ("nope", None)) == (None, None)
+    assert not [r for r in rec2
+                if issubclass(r.category, sharding.ShardingRuleDropped)]
 
 
 def test_param_and_cache_specs_structure():
