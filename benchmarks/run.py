@@ -2,7 +2,8 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
 
-  table1_storage       paper Table 1 (scheme storage costs)
+  table1_storage       paper Table 1 (scheme storage costs) + MEASURED
+                       packed-container / checkpoint bytes (ISSUE 5)
   table2_scheme        paper Table 2 (eq.2 vs eq.4 accuracy, no retrain)
   table3_sweep         paper Table 3 (L_W x L_I accuracy-drop grid) + E5
   table4_nsr           paper Table 4 (per-layer SNR: measured vs model)

@@ -8,8 +8,13 @@ Run:  PYTHONPATH=src python examples/quickstart.py
    and compare with measurement,
 4. deploy a CNN with engine.bind: policies resolved, backends selected,
    weights pre-quantized ONCE — then just run (DESIGN.md §7.1),
-5. watch the real datapath with engine taps (DESIGN.md §7.2).
+5. watch the real datapath with engine taps (DESIGN.md §7.2),
+6. save a bit-packed BFP checkpoint and serve from it — the paper's
+   Table-1 storage cut measured in real bytes (DESIGN.md §10).
 """
+import os
+import tempfile
+
 import jax
 import jax.numpy as jnp
 
@@ -47,17 +52,16 @@ print("measured  output SNR          :", rep.snr_output_measured, "dB")
 pol = PAPER_DEFAULT.with_(straight_through=False)
 params = small.lenet_init(jax.random.PRNGKey(4))
 imgs = jax.random.normal(jax.random.PRNGKey(5), (2, 28, 28, 1))
-plan = engine.bind(params, engine.PolicyMap.of(("^c1$", None),  # stem float
-                                               default=pol))
+pmap = engine.PolicyMap.of(("^c1$", None),              # stem stays float
+                           default=pol)
+plan = engine.bind(params, pmap)
 print("\nbound plan:\n" + plan.describe())
 out_bound = small.lenet_apply(plan.params, imgs, plan)   # plan rides `policy`
 print("bound forward:", out_bound.shape)
 
 # legacy shim: the per-call path still works — same engine, same bits,
 # policies re-resolved and weights re-quantized every forward.
-out_legacy = small.lenet_apply(params, imgs,
-                               engine.PolicyMap.of(("^c1$", None),
-                                                   default=pol))
+out_legacy = small.lenet_apply(params, imgs, pmap)
 print("legacy per-call matches bound plan:",
       bool(jnp.all(out_bound == out_legacy)))
 
@@ -67,6 +71,30 @@ with engine.taps(lambda ev: print(f"  tap {ev.path:<4} {ev.kind:<4} "
                                   f"{float(snr_db(ev.y_float, ev.y)):.1f} dB"),
                  want_float=True):
     small.lenet_apply(params, imgs, pol)
+
+# --- 6. packed BFP checkpoints: Table 1 in real bytes ------------------------
+# format="bfp_packed" stores GEMM/conv weights as bit-packed mantissas +
+# one int8 exponent per block (core.packed.PackedBFP); restore yields the
+# {"m","s"} sidecars directly — serving never materializes float weights.
+from repro.checkpoint import store  # noqa: E402
+
+with tempfile.TemporaryDirectory() as ckpt:
+    store.save(os.path.join(ckpt, "f32"), 0, params)
+    store.save(os.path.join(ckpt, "bfp"), 0, params,
+               format="bfp_packed", policy=pmap)    # same per-layer map
+
+    def du(d):
+        return sum(os.path.getsize(os.path.join(r, f))
+                   for r, _, fs in os.walk(d) for f in fs)
+
+    ratio = du(os.path.join(ckpt, "bfp")) / du(os.path.join(ckpt, "f32"))
+    print(f"\npacked checkpoint is {ratio:.2f}x the float32 npz (L=8)")
+    weights, _ = store.restore(os.path.join(ckpt, "bfp"), params)
+    plan_pk = engine.bind(weights, pmap)
+    out_pk = small.lenet_apply(plan_pk.params, imgs, plan_pk)
+    print("packed restore serves bit-identically:",
+          bool(jnp.all(out_pk == out_bound)))
+
 print("\nDone — see examples/cnn_bfp_sweep.py for the paper's Table-3 "
       "experiment, benchmarks/table4_nsr.py for the tap-based SNR "
       "analysis, and examples/train_lm.py for the training stack.")

@@ -14,6 +14,19 @@ Fault-tolerance properties (DESIGN.md §5):
     a different pod count re-shards transparently);
   * async: ``save_async`` snapshots to host RAM synchronously (cheap) and
     writes in a background thread so the train loop keeps stepping.
+
+Packed BFP checkpoints (DESIGN.md §10, docs/formats.md): ``save(...,
+format="bfp_packed", policy=...)`` stores every prequant-eligible
+GEMM/conv weight leaf as a bit-packed :class:`~repro.core.packed
+.PackedBFP` container (the same ``core.prequant`` leaf-selection walk a
+bound plan uses; norm gains, biases, embeddings, and odd-K leaves stay
+float32), cutting the on-disk artifact ~4x at 8-bit mantissas.
+``restore`` then rebuilds packed leaves per its ``packed=`` mode:
+``"prequant"`` (default: the ``{"m", "s"}`` sidecars a serving engine
+binds with no float weights ever materialized), ``"dequant"`` (a plain
+float tree), or ``"keep"`` (raw containers — ``engine.bind`` unpacks
+them).  The manifest gains ``format`` and ``packed_leaves`` fields; the
+atomicity/checksum/GC machinery is format-agnostic.
 """
 from __future__ import annotations
 
@@ -28,28 +41,61 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.packed import (PackedBFP, is_packed, pack_param_tree,
+                               unpack_dequant, unpack_prequant)
+
 __all__ = ["save", "save_async", "restore", "latest_step", "Checkpointer"]
 
 
-def _flatten(tree) -> Tuple[List[np.ndarray], Any]:
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    return [np.asarray(x) for x in leaves], treedef
+def _flatten(tree, is_leaf=None) -> Tuple[List[Any], Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_leaf)
+    return [x if is_packed(x) else np.asarray(x) for x in leaves], treedef
 
 
 def _step_dir(base: str, step: int) -> str:
     return os.path.join(base, f"step_{step:08d}")
 
 
-def save(base: str, step: int, tree, keep: int = 3) -> str:
-    """Synchronous atomic save.  Returns the final directory."""
+def save(base: str, step: int, tree, keep: int = 3, *,
+         format: str = "float32", policy: Any = None,
+         tree_kind: str = "auto") -> str:
+    """Synchronous atomic save.  Returns the final directory.
+
+    ``format="float32"`` (default) stores every leaf as-is.
+    ``format="bfp_packed"`` additionally needs ``policy`` (BFPPolicy or
+    ``engine.PolicyMap``): GEMM/conv weight leaves the prequant walk
+    selects are stored as serialized :class:`PackedBFP` containers
+    (uint8 rows in the same ``arrays.npz``), everything else as float.
+    ``tree_kind`` ("cnn" | "lm" | "auto") picks the path convention, as
+    in ``engine.bind``.  A tree that already contains PackedBFP leaves
+    is stored packed under either format (no policy needed).
+    """
+    if format not in ("float32", "bfp_packed"):
+        raise ValueError(f"unknown checkpoint format {format!r}")
+    if format == "bfp_packed" and policy is not None:
+        tree = pack_param_tree(tree, policy, tree_kind)
+    leaves, treedef = _flatten(tree, is_leaf=is_packed)
+    packed_idx = [i for i, l in enumerate(leaves) if is_packed(l)]
+    if format == "bfp_packed" and not packed_idx:
+        # the caller explicitly asked for a packed artifact; silently
+        # writing a full-size float32 checkpoint would hide a typo'd
+        # PolicyMap / wrong tree_kind until the disk budget blows
+        raise ValueError(
+            "format='bfp_packed' packed zero leaves — pass policy= (a "
+            "BFPPolicy or PolicyMap whose rules resolve for at least one "
+            "GEMM/conv weight), or check tree_kind" if policy is None else
+            "format='bfp_packed' packed zero leaves: the policy resolved "
+            "no prequant-eligible GEMM/conv weight (typo'd PolicyMap "
+            "rules, or wrong tree_kind?)")
     os.makedirs(base, exist_ok=True)
     final = _step_dir(base, step)
     tmp = final + ".tmp"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
-    leaves, treedef = _flatten(tree)
-    payload = {f"leaf_{i}": leaf for i, leaf in enumerate(leaves)}
+    payload = {f"leaf_{i}": (np.frombuffer(leaf.to_bytes(), np.uint8)
+                             if is_packed(leaf) else leaf)
+               for i, leaf in enumerate(leaves)}
     np.savez(os.path.join(tmp, "arrays.npz"), **payload)
     with open(os.path.join(tmp, "arrays.npz"), "rb") as f:
         crc = zlib.crc32(f.read())
@@ -57,8 +103,13 @@ def save(base: str, step: int, tree, keep: int = 3) -> str:
         "step": step,
         "treedef": str(treedef),
         "n_leaves": len(leaves),
+        # packed leaves report their ORIGINAL tensor geometry, so shape
+        # validation at restore is format-agnostic
         "shapes": [list(l.shape) for l in leaves],
-        "dtypes": [str(l.dtype) for l in leaves],
+        "dtypes": [(f"bfp_packed{l.bits}" if is_packed(l) else str(l.dtype))
+                   for l in leaves],
+        "format": "bfp_packed" if packed_idx else "float32",
+        "packed_leaves": packed_idx,
         "crc32": crc,
         "status": "complete",
     }
@@ -118,39 +169,87 @@ def latest_step(base: str) -> Optional[int]:
 
 
 def restore(base: str, tree_like, step: Optional[int] = None,
-            sharding_fn: Optional[Callable[[Any], Any]] = None):
+            sharding_fn: Optional[Callable[[Any], Any]] = None,
+            packed: str = "prequant"):
     """Restore into the structure of ``tree_like``.
 
     sharding_fn(leaf_path_index -> sharding) — when given, leaves are
     device_put with it (elastic re-shard onto the current mesh).
     Returns (tree, step) or (None, None) when no valid checkpoint exists.
+
+    For ``format="bfp_packed"`` checkpoints, ``packed`` selects what a
+    packed weight leaf restores to:
+
+      * ``"prequant"`` (default): the ``{"m", "s"}`` sidecar dict every
+        engine backend consumes — the serving load path; no float weight
+        is ever materialized for these leaves;
+      * ``"dequant"``: dense float32 (``m * s``), for consumers that
+        need a plain float tree (e.g. resuming float training);
+      * ``"keep"``: the raw :class:`PackedBFP` containers (smallest host
+        footprint; ``engine.bind`` / the serve engines unpack them).
+
+    Float32 checkpoints ignore ``packed``.  Sharded placement via
+    ``sharding_fn`` applies to plain array leaves — including
+    ``"dequant"``-mode weights, which ARE plain float arrays (elastic
+    restarts re-shard them like any other leaf).  ``"prequant"`` /
+    ``"keep"`` leaves stay host-side until the bind-time unpack places
+    them.
     """
+    if packed not in ("prequant", "dequant", "keep"):
+        raise ValueError(f"packed must be 'prequant', 'dequant', or "
+                         f"'keep'; got {packed!r}")
     step = latest_step(base) if step is None else step
     if step is None:
         return None, None
     d = _step_dir(base, step)
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    packed_idx = set(manifest.get("packed_leaves", []))
     data = np.load(os.path.join(d, "arrays.npz"))
     leaves_ref, treedef = jax.tree_util.tree_flatten(tree_like)
-    leaves = [data[f"leaf_{i}"] for i in range(len(leaves_ref))]
+    if manifest.get("n_leaves", len(leaves_ref)) != len(leaves_ref):
+        raise ValueError(
+            f"checkpoint has {manifest['n_leaves']} leaves, model tree has "
+            f"{len(leaves_ref)} — architecture mismatch")
+    leaves: List[Any] = [data[f"leaf_{i}"] for i in range(len(leaves_ref))]
+    for i in packed_idx:
+        leaves[i] = PackedBFP.from_bytes(leaves[i].tobytes())
     for i, (new, ref) in enumerate(zip(leaves, leaves_ref)):
         if tuple(new.shape) != tuple(jnp.shape(ref)):
             raise ValueError(
-                f"checkpoint leaf {i} shape {new.shape} != model "
+                f"checkpoint leaf {i} shape {tuple(new.shape)} != model "
                 f"{jnp.shape(ref)} — architecture mismatch")
-    if sharding_fn is not None:
-        leaves = [jax.device_put(l, sharding_fn(i))
-                  for i, l in enumerate(leaves)]
-    else:
-        leaves = [jnp.asarray(l) for l in leaves]
-    return jax.tree_util.tree_unflatten(treedef, leaves), step
+    out: List[Any] = []
+    for i, leaf in enumerate(leaves):
+        if is_packed(leaf):
+            if packed == "dequant":
+                leaf = unpack_dequant(leaf)      # plain float: place below
+            else:
+                out.append(leaf if packed == "keep"
+                           else unpack_prequant(leaf))
+                continue
+        if sharding_fn is not None:
+            out.append(jax.device_put(leaf, sharding_fn(i)))
+        else:
+            out.append(jnp.asarray(leaf))
+    return jax.tree_util.tree_unflatten(treedef, out), step
 
 
 class Checkpointer:
-    """Async checkpointer: snapshot-to-host sync, write in background."""
+    """Async checkpointer: snapshot-to-host sync, write in background.
 
-    def __init__(self, base: str, keep: int = 3):
+    ``format``/``policy``/``tree_kind`` are forwarded to :func:`save`,
+    so packed checkpoints ride the async path too.
+    """
+
+    def __init__(self, base: str, keep: int = 3, *,
+                 format: str = "float32", policy: Any = None,
+                 tree_kind: str = "auto"):
         self.base = base
         self.keep = keep
+        self.format = format
+        self.policy = policy
+        self.tree_kind = tree_kind
         self._thread: Optional[threading.Thread] = None
         self.last_error: Optional[Exception] = None
 
@@ -164,11 +263,18 @@ class Checkpointer:
 
     def save_async(self, step: int, tree):
         self.wait()
-        host_tree = jax.tree_util.tree_map(np.asarray, tree)  # snapshot now
+        # snapshot now; PackedBFP leaves are already host bytes and must
+        # NOT go through np.asarray (a 0-d object array would be pickled
+        # into arrays.npz and be unreadable at restore)
+        host_tree = jax.tree_util.tree_map(
+            lambda l: l if is_packed(l) else np.asarray(l), tree,
+            is_leaf=is_packed)
 
         def _run():
             try:
-                save(self.base, step, host_tree, self.keep)
+                save(self.base, step, host_tree, self.keep,
+                     format=self.format, policy=self.policy,
+                     tree_kind=self.tree_kind)
             except Exception as e:  # surfaced on next wait()
                 self.last_error = e
 
@@ -176,7 +282,10 @@ class Checkpointer:
         self._thread.start()
 
 
-def save_async(base: str, step: int, tree, keep: int = 3) -> Checkpointer:
-    ck = Checkpointer(base, keep)
+def save_async(base: str, step: int, tree, keep: int = 3, *,
+               format: str = "float32", policy: Any = None,
+               tree_kind: str = "auto") -> Checkpointer:
+    ck = Checkpointer(base, keep, format=format, policy=policy,
+                      tree_kind=tree_kind)
     ck.save_async(step, tree)
     return ck

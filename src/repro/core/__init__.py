@@ -4,6 +4,9 @@ from repro.core.bfp import (BFPBlock, Rounding, Scheme, quantize, dequantize,
                             average_bits_per_element, num_block_exponents,
                             accumulator_bits, max_safe_k)
 from repro.core.bfp_dot import bfp_dot, bfp_matmul_2d
+from repro.core.packed import (PackedBFP, is_packed, pack_block, pack_matrix,
+                               pack_prequant, unpack_block, unpack_dequant,
+                               unpack_prequant)
 from repro.core.policy import BFPPolicy, PAPER_DEFAULT, TPU_TILED
 
 __all__ = [
@@ -11,4 +14,6 @@ __all__ = [
     "bfp_quantize_matrix", "block_exponent", "average_bits_per_element",
     "num_block_exponents", "accumulator_bits", "max_safe_k",
     "bfp_dot", "bfp_matmul_2d", "BFPPolicy", "PAPER_DEFAULT", "TPU_TILED",
+    "PackedBFP", "is_packed", "pack_block", "unpack_block", "pack_prequant",
+    "unpack_prequant", "unpack_dequant", "pack_matrix",
 ]

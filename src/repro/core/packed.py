@@ -1,0 +1,400 @@
+"""Packed BFP container — the storage/wire format the paper promises.
+
+Table 1's storage argument is ~``L`` bits per element plus one shared
+exponent per block, but a :class:`~repro.core.bfp.BFPBlock` in memory
+still pads mantissas to int8/int16 and exponents to int32.  This module
+is the byte-real counterpart: a :class:`PackedBFP` serializes any
+BFPBlock (every paper scheme, TILED layouts, prequant ``{"m", "s"}``
+sidecars, flat wire blocks) into
+
+  * a small self-describing header (version, mantissa width, mantissa /
+    exponent-plane geometry, JSON metadata),
+  * an **exponent plane**: one ``int8`` per block, and
+  * a **mantissa bitstream**: sign+mantissa packed at exactly the
+    configured width ``L`` (offset-binary, MSB first, byte-padded at the
+    very end only) — 6-bit mantissas really take 6 bits.
+
+Round-trips are lossless by construction (integer mantissas and integer
+exponents in, the same integers out), which is what lets the checkpoint
+store (``checkpoint.store`` ``format="bfp_packed"``), the serving weight
+loaders (``engine.bind`` on packed leaves), and the gradient wire
+(``dist.compress``) all share this one container.  See DESIGN.md §10 and
+docs/formats.md for the byte layout.
+
+Everything here is host-side numpy (checkpoint/wire code), NOT jit-safe;
+the in-graph quantizers stay in ``core.bfp``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import struct
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bfp
+from repro.core.bfp import BFPBlock, Rounding, Scheme
+
+__all__ = [
+    "PackedBFP", "pack_block", "unpack_block", "pack_prequant",
+    "unpack_prequant", "unpack_dequant", "pack_matrix", "pack_param_tree",
+    "is_packed", "packed_nbytes",
+]
+
+_MAGIC = b"BFPK"
+_VERSION = 1
+#: fixed part of the serialized header (magic, version, bits, ndims,
+#: meta length) — see ``to_bytes``
+_FIXED_HEADER = 4 + 1 + 1 + 1 + 1 + 4
+
+
+def _mantissa_dtype(bits: int):
+    return jnp.int8 if bits <= 8 else (jnp.int16 if bits <= 16 else jnp.int32)
+
+
+#: elements per (un)pack chunk — bounds transient host RAM at
+#: ~CHUNK*bits bytes (a few tens of MB) regardless of leaf size, so
+#: full-size models decode without an n*bits*8-byte intermediate.
+#: Must stay a multiple of 8 so every non-final chunk's bitstream ends
+#: on a byte boundary.
+_CHUNK = 1 << 20
+
+
+def _pack_bits(m: np.ndarray, bits: int) -> bytes:
+    """Bit-pack signed mantissas at exactly ``bits`` wide (MSB first).
+
+    Values are stored offset-binary (``m + 2^(L-1)``), so the legal
+    mantissa range ``[-(2^(L-1)-1), 2^(L-1)-1]`` maps into
+    ``[1, 2^L - 2]`` — always representable in ``bits`` unsigned bits.
+    Chunked: peak transient memory is ~``_CHUNK * bits`` bytes.
+    """
+    flat = np.asarray(m).reshape(-1)
+    lim = (1 << (bits - 1)) - 1
+    if flat.size and (flat.min() < -lim or flat.max() > lim):
+        raise ValueError(
+            f"mantissa outside [-{lim}, {lim}] for L={bits} (got "
+            f"[{flat.min()}, {flat.max()}]) — not a {bits}-bit BFP block")
+    shifts = np.arange(bits - 1, -1, -1, dtype=np.uint32)
+    out = bytearray()
+    for start in range(0, flat.size, _CHUNK):
+        u = (flat[start:start + _CHUNK].astype(np.int64)
+             + (lim + 1)).astype(np.uint32)
+        bitplane = ((u[:, None] >> shifts) & 1).astype(np.uint8)
+        out += np.packbits(bitplane.reshape(-1)).tobytes()
+    return bytes(out)
+
+
+def _unpack_bits(payload: bytes, n: int, bits: int) -> np.ndarray:
+    """Inverse of :func:`_pack_bits` — n int32 mantissas out (chunked)."""
+    if n == 0:
+        return np.zeros((0,), np.int32)
+    need = -(-n * bits // 8)
+    if len(payload) < need:
+        raise ValueError(f"mantissa bitstream truncated: have "
+                         f"{len(payload)} bytes, need {need}")
+    buf = np.frombuffer(payload, np.uint8)
+    out = np.empty(n, np.int32)
+    for start in range(0, n, _CHUNK):
+        cnt = min(_CHUNK, n - start)
+        bit0 = start * bits                      # byte-aligned: 8 | _CHUNK
+        byte0, byte1 = bit0 // 8, -(-(bit0 + cnt * bits) // 8)
+        raw = np.unpackbits(buf[byte0:byte1],
+                            count=cnt * bits).reshape(cnt, bits)
+        acc = np.zeros(cnt, np.int32)
+        for b in range(bits):                    # shift-accumulate: no
+            acc = (acc << 1) | raw[:, b]         # (n, bits) int64 matmul
+        out[start:start + cnt] = acc
+    return out - (1 << (bits - 1))
+
+
+def _exp_int8(e: np.ndarray) -> np.ndarray:
+    e = np.asarray(e)
+    if e.size and (e.min() < -128 or e.max() > 127):
+        raise ValueError(
+            f"block exponent outside int8 range [-128, 127] (got "
+            f"[{e.min()}, {e.max()}]) — cannot store one int8 per block")
+    return e.astype(np.int8)
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedBFP:
+    """One bit-packed BFP tensor: header + exponent plane + bitstream.
+
+    ``shape`` is the mantissa tensor's shape (== the source tensor's);
+    ``exp_shape`` the exponent plane's (one entry per block).  ``meta``
+    is small JSON-serializable provenance (scheme, operand, block_k,
+    ``kind`` = "block" | "prequant" | "wire", conv HWIO geometry, ...) —
+    the restore paths read it, the container does not depend on it.
+    """
+
+    bits: int
+    shape: Tuple[int, ...]
+    exp_shape: Tuple[int, ...]
+    exponents: np.ndarray            #: int8, C-order, ``exp_shape``
+    payload: bytes                   #: ceil(prod(shape) * bits / 8) bytes
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if not 2 <= self.bits <= 24:
+            raise ValueError(f"bits must be in [2, 24], got {self.bits}")
+        n = int(np.prod(self.shape, dtype=np.int64)) if self.shape else 1
+        need = -(-n * self.bits // 8)
+        if len(self.payload) != need:
+            raise ValueError(f"payload is {len(self.payload)} bytes; "
+                             f"shape {self.shape} at L={self.bits} needs "
+                             f"{need}")
+        if tuple(self.exponents.shape) != tuple(self.exp_shape):
+            raise ValueError("exponent plane shape mismatch")
+
+    @property
+    def n_elements(self) -> int:
+        return int(np.prod(self.shape, dtype=np.int64))
+
+    @property
+    def nbytes(self) -> int:
+        """Exact serialized size (header + exponent plane + bitstream)."""
+        meta_len = len(json.dumps(self.meta).encode())
+        return (_FIXED_HEADER + 4 * (len(self.shape) + len(self.exp_shape))
+                + meta_len + self.exponents.size + len(self.payload))
+
+    # -- serialization ------------------------------------------------------
+
+    def to_bytes(self) -> bytes:
+        """Serialize (docs/formats.md layout):
+
+        ========  =========================================================
+        bytes     field
+        ========  =========================================================
+        0:4       magic ``b"BFPK"``
+        4         version (1)
+        5         mantissa width L, sign included
+        6, 7      ndim(shape), ndim(exp_shape)
+        8:12      meta JSON length (u32 LE)
+        ..        shape dims, then exp_shape dims (u32 LE each)
+        ..        meta JSON (utf-8)
+        ..        exponent plane (int8, C-order, one per block)
+        ..        mantissa bitstream (offset-binary, MSB first)
+        ========  =========================================================
+        """
+        meta_b = json.dumps(self.meta).encode()
+        out = [_MAGIC,
+               struct.pack("<BBBBI", _VERSION, self.bits, len(self.shape),
+                           len(self.exp_shape), len(meta_b))]
+        for d in (*self.shape, *self.exp_shape):
+            out.append(struct.pack("<I", d))
+        out.append(meta_b)
+        out.append(self.exponents.astype(np.int8).tobytes(order="C"))
+        out.append(self.payload)
+        return b"".join(out)
+
+    @classmethod
+    def from_bytes(cls, buf: bytes) -> "PackedBFP":
+        buf = bytes(buf)
+        if buf[:4] != _MAGIC:
+            raise ValueError(f"not a PackedBFP container (magic "
+                             f"{buf[:4]!r} != {_MAGIC!r})")
+        ver, bits, nd, ne, meta_len = struct.unpack("<BBBBI",
+                                                    buf[4:_FIXED_HEADER])
+        if ver != _VERSION:
+            raise ValueError(f"unsupported PackedBFP version {ver}")
+        off = _FIXED_HEADER
+        dims = struct.unpack(f"<{nd + ne}I", buf[off:off + 4 * (nd + ne)])
+        off += 4 * (nd + ne)
+        shape, exp_shape = dims[:nd], dims[nd:]
+        meta = json.loads(buf[off:off + meta_len].decode()) if meta_len \
+            else {}
+        off += meta_len
+        n_exp = int(np.prod(exp_shape, dtype=np.int64)) if ne else 1
+        exps = np.frombuffer(buf[off:off + n_exp],
+                             np.int8).reshape(exp_shape)
+        off += n_exp
+        n = int(np.prod(shape, dtype=np.int64)) if nd else 1
+        need = -(-n * bits // 8)
+        payload = buf[off:off + need]
+        if len(payload) != need:
+            raise ValueError(f"truncated container: {len(payload)} payload "
+                             f"bytes, need {need}")
+        return cls(bits=bits, shape=tuple(shape), exp_shape=tuple(exp_shape),
+                   exponents=exps, payload=payload, meta=meta)
+
+
+def is_packed(x: Any) -> bool:
+    return isinstance(x, PackedBFP)
+
+
+def packed_nbytes(shape: Tuple[int, ...], exp_shape: Tuple[int, ...],
+                  bits: int, meta_len: int = 2) -> int:
+    """Analytic serialized size for a hypothetical container (the Table-1
+    accounting, byte-exact): header + one int8 per block + the bitstream."""
+    n = int(np.prod(shape, dtype=np.int64))
+    n_exp = int(np.prod(exp_shape, dtype=np.int64))
+    return (_FIXED_HEADER + 4 * (len(shape) + len(exp_shape)) + meta_len
+            + n_exp + -(-n * bits // 8))
+
+
+# ---------------------------------------------------------------------------
+# BFPBlock <-> container
+# ---------------------------------------------------------------------------
+
+def pack_block(blk: BFPBlock, **meta: Any) -> PackedBFP:
+    """Serialize a BFPBlock losslessly (any scheme/axes layout, incl. the
+    TILED non-keepdims exponent planes)."""
+    m = np.asarray(blk.mantissa)
+    e = np.asarray(blk.exponent)
+    meta.setdefault("kind", "block")
+    return PackedBFP(bits=blk.bits, shape=tuple(m.shape),
+                     exp_shape=tuple(e.shape), exponents=_exp_int8(e),
+                     payload=_pack_bits(m, blk.bits), meta=dict(meta))
+
+
+def unpack_block(p: PackedBFP) -> BFPBlock:
+    """Reconstruct the exact BFPBlock (bit-identical mantissas/exponents)."""
+    m = _unpack_bits(p.payload, p.n_elements, p.bits).reshape(p.shape)
+    return BFPBlock(mantissa=jnp.asarray(m.astype(_mantissa_dtype(p.bits))),
+                    exponent=jnp.asarray(
+                        p.exponents.astype(np.int32)).reshape(p.exp_shape),
+                    bits=p.bits)
+
+
+def pack_matrix(w: jax.Array, bits: int, operand: str, scheme: Scheme,
+                block_k: Optional[int] = None,
+                rounding: Rounding = Rounding.ROUND,
+                **meta: Any) -> PackedBFP:
+    """Quantize one GEMM operand under ``scheme`` and pack it — the
+    one-call path benchmarks and tests use to measure real bytes."""
+    blk = bfp.bfp_quantize_matrix(w, bits, operand, scheme, block_k,
+                                  rounding)
+    return pack_block(blk, scheme=scheme.value, operand=operand,
+                      block_k=block_k, **meta)
+
+
+# ---------------------------------------------------------------------------
+# Prequant {"m", "s"} sidecars <-> container
+# ---------------------------------------------------------------------------
+
+def _steps_to_exponents(s: np.ndarray, bits: int) -> np.ndarray:
+    """Recover integer BLOCK exponents from the power-of-two step sidecar:
+    s = 2^(eps - (L-2)) exactly, so frexp is exact too."""
+    s = np.asarray(s, np.float32)
+    if s.size and (not np.all(np.isfinite(s)) or np.any(s <= 0)):
+        raise ValueError("prequant scale sidecar must be positive finite")
+    frac, e = np.frexp(s.astype(np.float64))
+    if s.size and not np.all(frac == 0.5):
+        raise ValueError("prequant scales are not exact powers of two — "
+                         "refusing a lossy pack")
+    return (e - 1 + (bits - 2)).astype(np.int64)
+
+
+def pack_prequant(d: Dict[str, Any], bits: int, **meta: Any) -> PackedBFP:
+    """Pack a prequant ``{"m", "s"}`` weight losslessly.
+
+    ``bits`` is the policy's ``l_w`` (the mantissa storage width; int8
+    sidecars of an L<=8 policy really shrink to L bits here).  Works for
+    2-D, stacked ``[.., K, N]``, and conv-HWIO mantissas (``s`` stays in
+    the GEMM view ``[K//bk, N]``): the container records both shapes, so
+    :func:`unpack_prequant` reproduces the dict bit-exactly.
+    """
+    m, s = np.asarray(d["m"]), np.asarray(d["s"])
+    eps = _steps_to_exponents(s, bits)
+    meta.setdefault("kind", "prequant")
+    return PackedBFP(bits=bits, shape=tuple(m.shape),
+                     exp_shape=tuple(s.shape), exponents=_exp_int8(eps),
+                     payload=_pack_bits(m, bits), meta=dict(meta))
+
+
+def unpack_prequant(p: PackedBFP) -> Dict[str, jax.Array]:
+    """Container -> the exact ``{"m", "s"}`` sidecar dict ``pack_prequant``
+    consumed — int mantissas and float32 power-of-two steps, no float
+    weight ever materialized."""
+    m = _unpack_bits(p.payload, p.n_elements, p.bits).reshape(p.shape)
+    steps = np.ldexp(1.0, p.exponents.astype(np.int64) - (p.bits - 2))
+    return {"m": jnp.asarray(m.astype(_mantissa_dtype(p.bits))),
+            "s": jnp.asarray(steps.astype(np.float32)).reshape(p.exp_shape)}
+
+
+def unpack_dequant(p: PackedBFP) -> jax.Array:
+    """Container -> dense float32 (``m * s``), for float-tree restores.
+
+    Handles the conv case (HWIO mantissa with a GEMM-view ``[K//bk, N]``
+    sidecar) by dequantizing in the GEMM view and reshaping back.
+    """
+    from repro.core.prequant import dequantize_prequant
+    if p.meta.get("kind") == "block":
+        return unpack_block(p).dequantize()
+    d = unpack_prequant(p)
+    m, s = d["m"], d["s"]
+    if m.ndim == 4 and s.ndim == 2:          # conv HWIO mantissa
+        kh, kw, c, n = m.shape
+        flat = dequantize_prequant({"m": m.reshape(kh * kw * c, n), "s": s})
+        return flat.reshape(kh, kw, c, n)
+    return dequantize_prequant(d)
+
+
+# ---------------------------------------------------------------------------
+# Param-tree packing (the checkpoint walk)
+# ---------------------------------------------------------------------------
+
+def pack_param_tree(params: Any, policy: Any, kind: str = "auto") -> Any:
+    """Replace every prequant-eligible GEMM/conv weight leaf with a
+    :class:`PackedBFP`; every other leaf (norm gains, biases, embeddings,
+    odd-K weights, rules resolving to None) stays untouched.
+
+    Uses the SAME leaf selection and layer-path derivation as
+    ``core.prequant.quantize_param_tree`` / ``quantize_cnn_param_tree``
+    (shared walkers), so a packed checkpoint stores exactly the leaves a
+    bound plan would pre-quantize — restoring to ``{"m", "s"}`` sidecars
+    is bit-identical to binding the float tree under the same policy.
+    A tree that ALREADY holds prequant ``{"m", "s"}`` dicts at those
+    sites (e.g. ``plan.params`` from ``engine.bind`` — the bind-once,
+    checkpoint-the-bound-weights flow) packs them as-is, losslessly.
+
+    ``kind``: "cnn" | "lm" | "auto" (same detection ``engine.bind`` uses).
+    """
+    from repro.core import prequant as PQ
+    if policy is None:
+        raise ValueError("pack_param_tree needs a BFPPolicy or PolicyMap "
+                         "(got None — nothing would be packed)")
+    if kind == "auto":
+        kind = PQ.detect_tree_kind(params)   # same detector engine.bind uses
+    if kind not in ("cnn", "lm"):
+        raise ValueError(f"kind must be 'cnn', 'lm', or 'auto'; got {kind!r}")
+
+    def pack_one(leaf, pol, path, conv):
+        if PQ.is_prequant(leaf):            # already bound: pack losslessly
+            d = leaf
+        else:
+            d = (PQ.prequant_conv_leaf if conv
+                 else PQ.prequant_leaf)(leaf, pol)
+            if not PQ.is_prequant(d):
+                return leaf                 # odd K etc.: stays float
+        return pack_prequant(d, pol.l_w, path=path,
+                             conv=conv, block_k=pol.block_k,
+                             scheme=pol.scheme.value)
+
+    def one(tree_path, leaf):
+        keys = PQ._path_keys(tree_path)
+        prequantized = PQ.is_prequant(leaf)
+        arr = leaf["m"] if prequantized else leaf
+        if not hasattr(arr, "ndim") or (
+                not prequantized and
+                not jnp.issubdtype(arr.dtype, jnp.floating)):
+            return leaf
+        if kind == "lm":
+            if not PQ.lm_eligible(keys) or arr.ndim < 2:
+                return leaf
+            path = PQ.lm_rule_path(keys)
+            pol = PQ._resolve(policy, path)
+            return leaf if pol is None else pack_one(leaf, pol, path, False)
+        if not keys or keys[-1] != "w":
+            return leaf
+        path = PQ.cnn_rule_path(params, keys)
+        pol = None if path is None else PQ._resolve(policy, path)
+        if pol is None or arr.ndim not in (2, 4):
+            return leaf
+        return pack_one(leaf, pol, path, arr.ndim == 4)
+
+    return jax.tree_util.tree_map_with_path(one, params,
+                                            is_leaf=PQ.is_prequant)

@@ -34,11 +34,26 @@ from repro.core.policy import BFPPolicy
 
 __all__ = ["quantize_param_tree", "quantize_cnn_param_tree", "prequant_leaf",
            "prequant_conv_leaf", "dequantize_prequant", "is_prequant",
-           "lm_rule_path", "lm_eligible", "cnn_rule_path"]
+           "lm_rule_path", "lm_eligible", "cnn_rule_path",
+           "detect_tree_kind"]
 
 
 def is_prequant(w: Any) -> bool:
     return isinstance(w, dict) and "m" in w and "s" in w
+
+
+def detect_tree_kind(params: Any) -> str:
+    """"lm" or "cnn" — THE param-tree convention detector.
+
+    Single source of truth shared by ``engine.bind`` and
+    ``core.packed.pack_param_tree`` (checkpoint ``format="bfp_packed"``),
+    so the walk that packs a checkpoint can never classify a tree
+    differently from the walk that binds it.
+    """
+    if isinstance(params, dict) and (
+            {"embed", "layers", "dec", "periods"} & set(params)):
+        return "lm"
+    return "cnn"
 
 
 def _resolve(policy: Any, path: Optional[str]) -> Optional[BFPPolicy]:

@@ -7,4 +7,9 @@ logical names to physical mesh axes with ``sharding.axis_rules``.  Outside
 an ``axis_rules`` context every annotation is the identity, so the same
 model code runs unmodified on a single CPU host (tests) and on the
 production meshes (launch.dryrun / launch.train).
+
+``compress`` carries the BFP gradient wire: ``quantize_leaf`` is the
+jit-safe in-graph model, ``pack_leaf``/``wire_report`` the actual
+bit-packed bytes (``core.packed.PackedBFP``, DESIGN.md §10) — pinned
+bit-exact against each other, padding counted honestly.
 """

@@ -8,34 +8,79 @@ gradients is biased step-to-step; the standard fix is ERROR FEEDBACK
 quantization is carried and added back before the next one, so the
 compressed sum converges to the true sum.
 
-``quantize_leaf`` is the wire model (round-trip through the BFP format);
-``make_compressor`` packages init + transform for
-``train.step.make_train_step(grad_transform=...)``.
+Two faces of one wire format (pinned bit-exact against each other in
+tests/test_packed.py):
+
+  * :func:`quantize_leaf` — the jit-safe in-graph MODEL of the wire
+    (round-trip through the BFP format), used inside the training step
+    via :func:`make_compressor`;
+  * :func:`pack_leaf` / :func:`unpack_leaf` — the ACTUAL bytes: a
+    bit-packed :class:`~repro.core.packed.PackedBFP` container (one int8
+    exponent per block, mantissas at exactly ``bits`` wide), whose
+    dequantized round trip equals ``quantize_leaf`` exactly.  This is
+    what crosses a real host boundary, and what :func:`wire_report`
+    measures.
+
+Byte accounting is HONEST: the last block of a leaf is zero-padded to
+``block`` elements, and those padding bits travel — ``leaf_wire_bytes``
+and ``wire_report`` count them (the old analytic ratio silently ignored
+the remainder block).  ``block`` geometry is validated up front,
+including alignment with a ``Scheme.TILED`` ``tile_k`` when the wire
+shares buffers with the tiled execution datapath.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import bfp
+from repro.core import packed as PK
 
-__all__ = ["quantize_leaf", "make_compressor"]
+__all__ = ["quantize_leaf", "make_compressor", "pack_leaf", "unpack_leaf",
+           "leaf_wire_bytes", "wire_report", "validate_wire_block"]
 
-#: Elements per shared exponent on the wire (one int32 exponent per block;
+#: Elements per shared exponent on the wire (one int8 exponent per block;
 #: 512 matches the paper's Table-1 storage sweet spot: +8/512 bits/elem).
 WIRE_BLOCK = 512
 
 
-def quantize_leaf(g: jax.Array, bits: int,
-                  block: int = WIRE_BLOCK) -> jax.Array:
+def validate_wire_block(block: int, tile_k: Optional[int] = None) -> None:
+    """Reject unusable wire-block geometry up front.
+
+    ``block`` must be a positive int; when ``tile_k`` is given (the
+    ``Scheme.TILED`` K-tile the execution datapath blocks on), ``block``
+    must be a multiple of it, so wire blocks land on tile boundaries and
+    a wire-quantized tensor re-blocks into whole execution tiles.  This
+    used to be unchecked: a ``WIRE_BLOCK`` that straddled TILED tiles
+    silently mixed exponent groups.
+    """
+    if not isinstance(block, int) or isinstance(block, bool) or block < 1:
+        raise ValueError(f"wire block must be a positive int, got {block!r}")
+    if tile_k is not None:
+        if not isinstance(tile_k, int) or isinstance(tile_k, bool) \
+                or tile_k < 1:
+            raise ValueError(f"tile_k must be a positive int, got {tile_k!r}")
+        if block % tile_k:
+            raise ValueError(
+                f"wire block {block} is not a multiple of the TILED "
+                f"tile_k {tile_k} — wire blocks would straddle execution "
+                f"tiles and mix exponent groups")
+
+
+def quantize_leaf(g: jax.Array, bits: int, block: int = WIRE_BLOCK,
+                  tile_k: Optional[int] = None) -> jax.Array:
     """Round-trip one leaf through the BFP wire format (same shape out).
 
     The leaf is flattened, split into ``block``-element blocks (zero
     padded), block-formatted at ``bits`` (incl. sign), and dequantized —
-    exactly the error the int8+exponent wire introduces.
+    exactly the error the packed int-mantissa+exponent wire
+    (:func:`pack_leaf`) introduces; the two are pinned bit-exact in
+    tests.  jit-safe (this is the in-graph model the train step runs).
     """
+    validate_wire_block(block, tile_k)
     if not jnp.issubdtype(g.dtype, jnp.floating):
         return g
     flat = g.reshape(-1).astype(jnp.float32)
@@ -46,7 +91,93 @@ def quantize_leaf(g: jax.Array, bits: int,
     return q.reshape(-1)[:n].reshape(g.shape).astype(g.dtype)
 
 
-def make_compressor(bits: int = 8, block: int = WIRE_BLOCK
+# ---------------------------------------------------------------------------
+# The actual wire bytes
+# ---------------------------------------------------------------------------
+
+def pack_leaf(g: jax.Array, bits: int, block: int = WIRE_BLOCK,
+              tile_k: Optional[int] = None) -> PK.PackedBFP:
+    """Block-format one leaf and serialize the REAL wire payload.
+
+    Returns a :class:`PackedBFP` whose ``nbytes`` is exactly what a
+    transfer moves: header + one int8 exponent per block + mantissas
+    bit-packed at ``bits`` — including the zero-padding of the remainder
+    block (honest accounting; the padding travels).  Host-side, not
+    jit-safe.  ``unpack_leaf(pack_leaf(g, ...))`` equals
+    ``quantize_leaf(g, ...)`` bit-exactly.
+    """
+    validate_wire_block(block, tile_k)
+    arr = np.asarray(g)
+    if not np.issubdtype(arr.dtype, np.floating):
+        raise ValueError(f"pack_leaf needs a float leaf, got {arr.dtype}")
+    flat = jnp.asarray(arr, jnp.float32).reshape(-1)
+    n = int(flat.shape[0])
+    nb = -(-n // block)
+    padded = jnp.pad(flat, (0, nb * block - n)).reshape(nb, block)
+    blk = bfp.quantize(padded, bits, (1,))
+    return PK.pack_block(blk, kind="wire", orig_shape=list(arr.shape),
+                         orig_size=n, block=block)
+
+
+def unpack_leaf(p: PK.PackedBFP) -> jax.Array:
+    """Wire container -> dequantized float32 leaf in its original shape."""
+    if p.meta.get("kind") != "wire":
+        raise ValueError(f"not a wire container (kind="
+                         f"{p.meta.get('kind')!r})")
+    deq = PK.unpack_block(p).dequantize()
+    n = int(p.meta["orig_size"])
+    return deq.reshape(-1)[:n].reshape(tuple(p.meta["orig_shape"]))
+
+
+def leaf_wire_bytes(n_elems: int, bits: int, block: int = WIRE_BLOCK) -> int:
+    """Analytic wire bytes for an ``n_elems`` leaf — padding INCLUDED.
+
+    ``ceil(n/block)`` blocks travel ``block`` mantissas each (the
+    remainder block is zero-padded to full size and its padding bits are
+    on the wire) plus one int8 exponent per block.  Container header
+    excluded (constant ~50 bytes/leaf); ``pack_leaf(...).nbytes`` is the
+    header-exact number.
+    """
+    validate_wire_block(block)
+    nb = -(-n_elems // block)
+    return -(-nb * block * bits // 8) + nb
+
+
+def wire_report(tree: Any, bits: int, block: int = WIRE_BLOCK,
+                tile_k: Optional[int] = None) -> Dict[str, Any]:
+    """Measure REAL wire bytes for a gradient/param pytree.
+
+    Packs every float leaf through :func:`pack_leaf` and sums actual
+    serialized container sizes (headers, exponent planes, padded
+    mantissa bitstreams).  Non-float leaves transfer uncompressed and are
+    counted at their raw ``nbytes``.  Returns::
+
+        {"wire_bytes", "float_bytes", "ratio", "n_leaves",
+         "n_uncompressed", "per_leaf": [(shape, wire, raw), ...]}
+    """
+    validate_wire_block(block, tile_k)
+    wire = raw = 0
+    per_leaf = []
+    n_unc = 0
+    leaves = jax.tree_util.tree_leaves(tree)
+    for leaf in leaves:
+        arr = np.asarray(leaf)
+        if np.issubdtype(arr.dtype, np.floating):
+            p = pack_leaf(arr, bits, block, tile_k)
+            w = p.nbytes
+        else:
+            w = arr.nbytes
+            n_unc += 1
+        wire += w
+        raw += arr.nbytes
+        per_leaf.append((tuple(arr.shape), w, arr.nbytes))
+    return {"wire_bytes": wire, "float_bytes": raw,
+            "ratio": wire / raw if raw else 0.0, "n_leaves": len(leaves),
+            "n_uncompressed": n_unc, "per_leaf": per_leaf}
+
+
+def make_compressor(bits: int = 8, block: int = WIRE_BLOCK,
+                    tile_k: Optional[int] = None
                     ) -> Tuple[Callable[[Any], Any],
                                Callable[[Any, Any], Tuple[Any, Any]]]:
     """Error-feedback BFP compressor for gradient pytrees.
@@ -58,8 +189,11 @@ def make_compressor(bits: int = 8, block: int = WIRE_BLOCK
 
     with ``e = g + r;  q = Q(e);  r' = e - q`` per leaf, which keeps the
     accumulated compressed gradient unbiased (test_system asserts the
-    50-step sum converges to the true sum).
+    50-step sum converges to the true sum).  ``block`` geometry
+    (positivity; ``tile_k`` alignment for TILED-shared buffers) is
+    validated HERE, once, not on the jitted per-step path.
     """
+    validate_wire_block(block, tile_k)
 
     def init_fn(params: Any) -> Any:
         return jax.tree_util.tree_map(

@@ -26,7 +26,7 @@ from repro.engine.backends import (BackendFallbackWarning,
                                    register_backend, select_backend)
 from repro.engine.core import (conv2d, conv2d_im2col, gemm, prequantize,
                                prequantize_cnn)
-from repro.engine.plan import Plan, Site, bind
+from repro.engine.plan import Plan, Site, bind, unpack_packed
 from repro.engine.policy_map import (PolicyLike, PolicyMap, join_path,
                                      resolve_policy)
 from repro.engine.taps import TapEvent, taps
@@ -34,7 +34,7 @@ from repro.engine.taps import TapEvent, taps
 __all__ = [
     "gemm", "conv2d", "conv2d_im2col", "prequantize", "prequantize_cnn",
     "is_prequant",
-    "bind", "Plan", "Site",
+    "bind", "Plan", "Site", "unpack_packed",
     "taps", "TapEvent",
     "PolicyMap", "PolicyLike", "resolve_policy", "join_path",
     "register_backend", "get_backend", "available_backends",

@@ -40,8 +40,10 @@ from typing import Any, Dict, Iterable, Optional, Tuple, Union
 
 import jax
 
+from repro.core.packed import is_packed, unpack_prequant
 from repro.core.policy import BFPPolicy
-from repro.core.prequant import (_path_keys, cnn_rule_path, is_prequant,
+from repro.core.prequant import (_path_keys, cnn_rule_path,
+                                 detect_tree_kind, is_prequant,
                                  lm_eligible, lm_rule_path,
                                  quantize_cnn_param_tree,
                                  quantize_param_tree)
@@ -49,7 +51,25 @@ from repro.engine import backends as BK
 from repro.engine.core import conv_and_tap, gemm_and_tap
 from repro.engine.policy_map import PolicyLike, PolicyMap, resolve_policy
 
-__all__ = ["Site", "Plan", "bind"]
+__all__ = ["Site", "Plan", "bind", "unpack_packed"]
+
+
+def unpack_packed(params: Any) -> Any:
+    """Replace every :class:`~repro.core.packed.PackedBFP` leaf with its
+    ``{"m", "s"}`` prequant sidecar — the packed-artifact load path.
+
+    This is how a serving engine consumes a ``format="bfp_packed"``
+    checkpoint restored with ``packed="keep"``: the ~4x-smaller container
+    unpacks straight into the wire format every backend executes, so no
+    float weight is ever materialized for a prequant-eligible site.
+    Trees without packed leaves pass through untouched (same object).
+    """
+    flat = jax.tree_util.tree_leaves(params, is_leaf=is_packed)
+    if not any(is_packed(l) for l in flat):
+        return params
+    return jax.tree_util.tree_map(
+        lambda l: unpack_prequant(l) if is_packed(l) else l,
+        params, is_leaf=is_packed)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -195,11 +215,8 @@ class _ScopedPolicy:
         return resolve_policy(self._policy, path)
 
 
-def _detect_tree(params: Any) -> str:
-    if isinstance(params, dict) and (
-            {"embed", "layers", "dec", "periods"} & set(params)):
-        return "lm"
-    return "cnn"
+#: shared with core.packed.pack_param_tree — one detector, one walk
+_detect_tree = detect_tree_kind
 
 
 def _discover_sites(params: Any, tree: str):
@@ -236,7 +253,10 @@ def bind(params: Any, policy: PolicyLike,
 
     Args:
       params: model param tree (models.cnn or models.lm conventions; an
-        already pre-quantized tree is fine — quantization is idempotent).
+        already pre-quantized tree is fine — quantization is idempotent —
+        and so is a packed artifact: ``PackedBFP`` leaves restored with
+        ``checkpoint.store.restore(..., packed="keep")`` unpack directly
+        into their ``{"m", "s"}`` sidecars here).
       policy: None / BFPPolicy / PolicyMap — resolved per site, once.
       model_paths: optional explicit site list — strings or (path, kind)
         pairs.  Restricts the discovered sites to these paths and binds
@@ -254,6 +274,9 @@ def bind(params: Any, policy: PolicyLike,
     ``strict`` when a requested backend cannot honour its policy.
     """
     _validate_policy_backends(policy)
+    # packed serving artifacts (checkpoint restore(packed="keep")) unpack
+    # straight into {"m", "s"} sidecars here — never through float
+    params = unpack_packed(params)
     kind = _detect_tree(params) if tree == "auto" else tree
     if kind not in ("cnn", "lm"):
         raise ValueError(f"tree must be 'cnn', 'lm', or 'auto'; got {kind!r}")

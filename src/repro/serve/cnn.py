@@ -80,10 +80,15 @@ class CnnServeEngine:
     """Slot-table batched CNN server over a bound execution plan.
 
     Args:
-      params: float param tree (``models.cnn`` conventions).  Ignored
-        when ``policy`` is already a bound :class:`engine.Plan` — pass
-        ``None`` and reuse the plan's pre-quantized params (that is the
-        multi-engine deployment shape: bind once, serve many).
+      params: param tree (``models.cnn`` conventions) — float, already
+        pre-quantized ``{"m", "s"}``, or a packed artifact holding
+        ``PackedBFP`` leaves (``checkpoint.store.restore(...,
+        packed="keep")``): ``engine.bind`` unpacks those straight into
+        sidecars, so serving loads the ~4x-smaller checkpoint without
+        ever materializing float weights for prequant-eligible sites.
+        Ignored when ``policy`` is already a bound :class:`engine.Plan`
+        — pass ``None`` and reuse the plan's pre-quantized params (that
+        is the multi-engine deployment shape: bind once, serve many).
       apply_fn: ``apply_fn(params, x, policy)`` -> logits, or a tuple of
         heads (GoogLeNet) — head 0 is taken as the classifier output.
       policy: None / BFPPolicy / PolicyMap (bound here via

@@ -120,6 +120,11 @@ class ServeEngine:
             # contract _merge_rows relies on
             raise ValueError("ServeEngine does not serve encoder-decoder "
                              "configs; use serve.generate with enc_feats")
+        # packed weight artifacts (checkpoint.store format="bfp_packed",
+        # restored with packed="keep") unpack straight into {"m", "s"}
+        # sidecars at admission — the ~4x-smaller load path; float
+        # weights are never materialized for those sites
+        params = EG.unpack_packed(params)
         if prequant is not None:
             # cached pre-quantized weights: block-format once here, serve
             # the int8+scale wire format on every subsequent GEMM

@@ -25,7 +25,7 @@ try:
 except ImportError:  # minimal container: deterministic fallback sampler
     from _hypothesis_stub import given, settings, strategies as st
 
-from repro.core import bfp, nsr
+from repro.core import bfp, nsr, packed, prequant
 from repro.core.bfp import Rounding, Scheme
 from repro.core.bfp_dot import bfp_matmul_2d
 from repro.core.policy import BFPPolicy
@@ -206,3 +206,68 @@ def test_gemm_bound_tightens_with_bits(bits, seed):
         x, w, pol.with_(l_w=bits + 1, l_i=bits + 1)))
     assert b2 < b1
     assert b1 / b2 > 2.0     # ~4x in the small-error regime
+
+
+# ---------------------------------------------------------------------------
+# Packed BFP container (ISSUE 5): serialize -> bytes -> deserialize is
+# bit-exact for every scheme x mantissa width x odd geometry
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=N_EXAMPLES, deadline=None)
+@given(bits=BITS, scale_pow=SCALE_POWS, seed=SEEDS,
+       scheme=st.sampled_from([Scheme.EQ2, Scheme.EQ3, Scheme.EQ4,
+                               Scheme.EQ5, Scheme.TILED]),
+       operand=st.sampled_from(["w", "i"]),
+       rows=st.sampled_from([1, 3, 7, 8, 16]),
+       cols=st.sampled_from([1, 4, 12, 33, 64]))
+def test_packed_container_round_trip_bit_exact(bits, scale_pow, seed,
+                                               scheme, operand, rows, cols):
+    """pack -> to_bytes -> from_bytes -> unpack reproduces the EXACT
+    BFPBlock (integer mantissas, integer exponents, identical dequant)
+    for every scheme, mantissa width 4-12, and odd shapes whose bit
+    count does not land on a byte boundary.  The payload is exactly
+    ceil(n*L/8) bytes — a 6-bit mantissa really takes 6 bits."""
+    x = _block(seed, rows, cols, scale_pow)
+    k = x.shape[1] if operand == "w" else x.shape[0]
+    block_k = (k if k % 4 else 4) if scheme is Scheme.TILED else None
+    blk = bfp.bfp_quantize_matrix(x, bits, operand, scheme, block_k)
+    p = packed.pack_block(blk, scheme=scheme.value, operand=operand)
+    assert len(p.payload) == -(-x.size * bits // 8)
+    assert p.nbytes == len(p.to_bytes())
+    p2 = packed.PackedBFP.from_bytes(p.to_bytes())
+    assert p2.bits == bits and p2.shape == tuple(x.shape)
+    assert p2.meta["scheme"] == scheme.value
+    b2 = packed.unpack_block(p2)
+    np.testing.assert_array_equal(np.asarray(blk.mantissa),
+                                  np.asarray(b2.mantissa))
+    np.testing.assert_array_equal(np.asarray(blk.exponent),
+                                  np.asarray(b2.exponent))
+    np.testing.assert_array_equal(np.asarray(blk.dequantize()),
+                                  np.asarray(b2.dequantize()))
+
+
+@settings(max_examples=N_EXAMPLES, deadline=None)
+@given(bits=BITS, scale_pow=SCALE_POWS, seed=SEEDS,
+       k=st.sampled_from([4, 6, 12, 16]),
+       n=st.sampled_from([1, 5, 10, 33]),
+       block_k=st.sampled_from([1, 2, None]))
+def test_packed_prequant_round_trip_bit_exact(bits, scale_pow, seed, k, n,
+                                              block_k):
+    """The prequant {"m", "s"} sidecar survives the packed container
+    bit-exactly: integer mantissas AND the float32 power-of-two step
+    sidecar (recovered from int8 block exponents) are identical, so a
+    packed checkpoint restore is indistinguishable from binding the
+    float tree."""
+    w = _block(seed, k, n, scale_pow)
+    pol = BFPPolicy(l_w=bits, scheme=Scheme.TILED, block_k=block_k,
+                    straight_through=False)
+    d = prequant.prequant_leaf(w, pol)
+    assert prequant.is_prequant(d)
+    p = packed.PackedBFP.from_bytes(
+        packed.pack_prequant(d, pol.l_w).to_bytes())
+    d2 = packed.unpack_prequant(p)
+    np.testing.assert_array_equal(np.asarray(d["m"]), np.asarray(d2["m"]))
+    np.testing.assert_array_equal(np.asarray(d["s"]), np.asarray(d2["s"]))
+    np.testing.assert_array_equal(
+        np.asarray(prequant.dequantize_prequant(d)),
+        np.asarray(packed.unpack_dequant(p)))

@@ -1,0 +1,48 @@
+"""Tier-1 docs-sync guard (ISSUE 5 satellite).
+
+The CI docs-sync job EXECUTES examples/quickstart.py and every fenced
+README ```python block (tools/check_docs.py).  This file keeps the
+cheap half in tier-1: the extractor finds the blocks, and every block
+(plus the assembled session) at least COMPILES — so a syntax-breaking
+doc edit or a fence typo fails the local suite immediately, not just in
+CI.
+"""
+import importlib.util
+import os
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _check_docs():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", os.path.join(REPO, "tools", "check_docs.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_readme_blocks_extract_and_compile():
+    cd = _check_docs()
+    readme = os.path.join(REPO, "README.md")
+    with open(readme) as f:
+        blocks = cd.extract_blocks(f.read())
+    # the README documents at least: core API, plans/taps, packed
+    # checkpoints, CNN serving
+    assert len(blocks) >= 4, f"README python blocks vanished: {len(blocks)}"
+    for i, b in enumerate(blocks):
+        compile(b, f"<README block {i + 1}>", "exec")
+    script, n = cd.assemble(readme)
+    assert n == len(blocks)
+    compile(script, "<README assembled>", "exec")
+
+
+def test_quickstart_compiles():
+    path = os.path.join(REPO, "examples", "quickstart.py")
+    with open(path) as f:
+        compile(f.read(), path, "exec")
+
+
+def test_extractor_skips_non_python_fences():
+    cd = _check_docs()
+    md = "```bash\necho no\n```\n```python\nx = 1\n```\n```\nplain\n```\n"
+    assert cd.extract_blocks(md) == ["x = 1"]

@@ -1,0 +1,398 @@
+"""Packed BFP container end-to-end (ISSUE 5): container hygiene, the
+checkpoint size acceptance (vgg16-reduced packed <= 0.35x float32 npz at
+8-bit mantissas), the save-packed -> restore -> serve bit-exactness
+regression against the float-checkpoint path, and the dist wire-bytes
+contract (model == wire, padding counted, tile alignment validated).
+"""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine as EG
+from repro.checkpoint import store
+from repro.configs.base import reduced
+from repro.configs.registry import ARCHS
+from repro.core import bfp, packed, prequant
+from repro.core.bfp import BFPBlock
+from repro.core.policy import TPU_TILED
+from repro.dist import compress
+from repro.models.cnn import MODELS
+from repro.serve.cnn import CnnServeEngine
+from repro.serve.engine import Request, ServeEngine
+from repro.train.step import init_state
+
+KEY = jax.random.PRNGKey(0)
+
+#: serving-mode policy: whole-K tiles so every conv/fc K in the reduced
+#: models packs; straight_through off (inference numerics)
+POL = TPU_TILED.with_(block_k=None, straight_through=False)
+
+
+def _dir_bytes(d):
+    return sum(os.path.getsize(os.path.join(r, f))
+               for r, _, fs in os.walk(d) for f in fs)
+
+
+# ---------------------------------------------------------------------------
+# Container hygiene
+# ---------------------------------------------------------------------------
+
+def test_container_rejects_garbage_and_truncation():
+    blk = bfp.quantize(jax.random.normal(KEY, (4, 16)), 8, (1,))
+    p = packed.pack_block(blk)
+    buf = p.to_bytes()
+    with pytest.raises(ValueError, match="magic"):
+        packed.PackedBFP.from_bytes(b"NOPE" + buf[4:])
+    with pytest.raises(ValueError, match="version"):
+        packed.PackedBFP.from_bytes(buf[:4] + bytes([99]) + buf[5:])
+    with pytest.raises(ValueError, match="truncated"):
+        packed.PackedBFP.from_bytes(buf[:-3])
+    # and the header is self-describing: nbytes == serialized length ==
+    # the analytic accounting
+    import json
+    assert p.nbytes == len(buf)
+    assert packed.packed_nbytes(p.shape, p.exp_shape, p.bits,
+                                meta_len=len(json.dumps(p.meta))) == len(buf)
+
+
+def test_bitstream_chunking_crosses_boundaries_bit_exact():
+    """The (un)packer processes leaves in _CHUNK-element chunks to bound
+    transient memory; a leaf spanning several chunks with an odd mantissa
+    width must still round-trip bit-exactly (chunk seams are mid-byte
+    free because _CHUNK is a multiple of 8)."""
+    n = packed._CHUNK * 2 + 12345            # 3 chunks, ragged tail
+    rng = np.random.default_rng(0)
+    for bits in (5, 8, 11):
+        lim = 2 ** (bits - 1) - 1
+        m = rng.integers(-lim, lim + 1, size=n).astype(np.int32)
+        payload = packed._pack_bits(m, bits)
+        assert len(payload) == -(-n * bits // 8)
+        got = packed._unpack_bits(payload, n, bits)
+        np.testing.assert_array_equal(m, got)
+
+
+def test_mantissa_out_of_range_rejected():
+    blk = BFPBlock(mantissa=jnp.full((2, 4), 100, jnp.int8),
+                   exponent=jnp.zeros((2, 1), jnp.int32), bits=4)
+    with pytest.raises(ValueError, match="mantissa outside"):
+        packed.pack_block(blk)
+
+
+def test_exponent_outside_int8_rejected():
+    # an exponent below -128 (denormal-range block max) cannot be stored
+    # as one int8 per block, and the container refuses a lossy clip
+    blk = BFPBlock(mantissa=jnp.zeros((1, 8), jnp.int8),
+                   exponent=jnp.full((1, 1), -150, jnp.int32), bits=8)
+    with pytest.raises(ValueError, match="int8 range"):
+        packed.pack_block(blk)
+
+
+def test_non_power_of_two_scales_rejected():
+    d = {"m": jnp.ones((4, 2), jnp.int8), "s": jnp.full((2, 2), 0.3)}
+    with pytest.raises(ValueError, match="powers of two"):
+        packed.pack_prequant(d, 8)
+
+
+def test_pack_param_tree_needs_policy_and_known_kind():
+    params = MODELS["lenet"].init(KEY)
+    with pytest.raises(ValueError, match="BFPPolicy or PolicyMap"):
+        packed.pack_param_tree(params, None)
+    with pytest.raises(ValueError, match="kind"):
+        packed.pack_param_tree(params, POL, kind="nope")
+
+
+def test_pack_param_tree_leaves_non_gemm_leaves_alone():
+    params = MODELS["resnet18"].init(KEY)
+    pk = packed.pack_param_tree(params, POL, "cnn")
+    flat_f = jax.tree_util.tree_leaves_with_path(params)
+    packed_paths = {jax.tree_util.keystr(p)
+                    for p, l in jax.tree_util.tree_leaves_with_path(
+                        pk, is_leaf=packed.is_packed)
+                    if packed.is_packed(l)}
+    assert packed_paths                       # convs + fc got packed
+    assert all("'w'" in p for p in packed_paths)
+    # bn gains/biases and conv biases survive bit-identical
+    for path, leaf in flat_f:
+        if jax.tree_util.keystr(path) not in packed_paths:
+            sub = pk
+            for k in path:
+                sub = sub[getattr(k, "key", getattr(k, "idx", None))]
+            if hasattr(sub, "shape"):
+                np.testing.assert_array_equal(np.asarray(leaf),
+                                              np.asarray(sub))
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint: size acceptance + bit-exact serve regression
+# ---------------------------------------------------------------------------
+
+def test_vgg16_reduced_packed_checkpoint_small_and_serves_bit_exact():
+    """ISSUE 5 acceptance: the packed vgg16-reduced checkpoint is
+    <= 0.35x the float32 npz at 8-bit mantissas, and a packed-restore
+    serve produces logits BIT-IDENTICAL to the float-checkpoint path."""
+    spec = MODELS["vgg16"]
+    params = spec.init(KEY)
+    imgs = jax.random.normal(jax.random.PRNGKey(1),
+                             (2, *spec.input_shape()))
+    with tempfile.TemporaryDirectory() as d:
+        store.save(os.path.join(d, "f32"), 0, params)
+        store.save(os.path.join(d, "bfp"), 0, params,
+                   format="bfp_packed", policy=POL)
+        f32_dir = os.path.join(d, "f32", "step_00000000")
+        bfp_dir = os.path.join(d, "bfp", "step_00000000")
+        ratio = _dir_bytes(bfp_dir) / _dir_bytes(f32_dir)
+        assert ratio <= 0.35, f"packed checkpoint ratio {ratio:.3f}"
+
+        # float-checkpoint path: restore f32, bind (prequantizes), serve
+        p_f, _ = store.restore(os.path.join(d, "f32"), params)
+        eng_f = CnnServeEngine(p_f, spec.apply, POL, slots=2, jit=False)
+        # packed path: restore straight to {"m","s"} sidecars, serve —
+        # no float weights ever materialized for the packed sites
+        p_q, step = store.restore(os.path.join(d, "bfp"), params)
+        assert step == 0
+        eng_q = CnnServeEngine(p_q, spec.apply, POL, slots=2, jit=False)
+
+        r_f = eng_f.submit(image=imgs[0])
+        r_q = eng_q.submit(image=imgs[0])
+        eng_f.run()
+        eng_q.run()
+        np.testing.assert_array_equal(r_f.logits, r_q.logits)
+
+        # manifest records the format and which leaves are packed
+        import json
+        with open(os.path.join(bfp_dir, "manifest.json")) as f:
+            man = json.load(f)
+        assert man["format"] == "bfp_packed" and man["packed_leaves"]
+        assert any(dt.startswith("bfp_packed") for dt in man["dtypes"])
+
+
+def test_restore_keep_mode_binds_without_float_materialization():
+    spec = MODELS["lenet"]
+    params = spec.init(KEY)
+    imgs = jax.random.normal(jax.random.PRNGKey(2),
+                             (1, *spec.input_shape()))
+    plan_ref = EG.bind(params, POL, tree="cnn")
+    y_ref = spec.apply(plan_ref.params, imgs, plan_ref)
+    with tempfile.TemporaryDirectory() as d:
+        store.save(d, 0, params, format="bfp_packed", policy=POL)
+        kept, _ = store.restore(d, params, packed="keep")
+        n_containers = sum(
+            packed.is_packed(l) for l in
+            jax.tree_util.tree_leaves(kept, is_leaf=packed.is_packed))
+        assert n_containers > 0
+        plan = EG.bind(kept, POL, tree="cnn")     # unpacks PackedBFP leaves
+        y = spec.apply(plan.params, imgs, plan)
+        np.testing.assert_array_equal(np.asarray(y_ref), np.asarray(y))
+        # dequant mode gives a plain float tree of the original structure
+        deq, _ = store.restore(d, params, packed="dequant")
+        assert jax.tree_util.tree_structure(deq) == \
+            jax.tree_util.tree_structure(params)
+        w = deq["c1"]["w"]
+        assert jnp.issubdtype(w.dtype, jnp.floating)
+        # dequantized values equal the sidecar dequant, not the raw float
+        side = prequant.prequant_conv_leaf(params["c1"]["w"], POL)
+        kh, kw, c, n = np.asarray(side["m"]).shape
+        want = prequant.dequantize_prequant(
+            {"m": side["m"].reshape(kh * kw * c, n), "s": side["s"]}
+        ).reshape(kh, kw, c, n)
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(want))
+        # dequant-mode weights are plain float arrays, so sharding_fn
+        # places them like any other leaf (elastic-restart contract)
+        dev = jax.devices()[0]
+        placed, _ = store.restore(d, params, packed="dequant",
+                                  sharding_fn=lambda i: dev)
+        w_placed = placed["c1"]["w"]
+        assert w_placed.devices() == {dev}
+        np.testing.assert_array_equal(np.asarray(w_placed), np.asarray(w))
+
+
+def test_restore_shape_mismatch_still_caught_for_packed_leaves():
+    from repro.models.cnn import small
+    params = MODELS["lenet"].init(KEY)
+    other = small.lenet_init(KEY, num_classes=7)   # same tree, fc2 differs
+    with tempfile.TemporaryDirectory() as d:
+        store.save(d, 0, params, format="bfp_packed", policy=POL)
+        with pytest.raises(ValueError, match="mismatch"):
+            store.restore(d, other)
+        # a DIFFERENT tree (fewer leaves) is a diagnosable ValueError,
+        # not an IndexError from packed-index bookkeeping
+        with pytest.raises(ValueError, match="mismatch"):
+            store.restore(d, {"w": params["c1"]["w"]})
+
+
+def test_pack_param_tree_accepts_bound_plan_params():
+    """The bind-once, checkpoint-the-bound-weights flow: plan.params
+    already holds {"m","s"} sidecars; packing them is lossless and the
+    restore equals the sidecars bit-exactly."""
+    spec = MODELS["lenet"]
+    params = spec.init(KEY)
+    plan = EG.bind(params, POL, tree="cnn")
+    with tempfile.TemporaryDirectory() as d:
+        store.save(d, 0, plan.params, format="bfp_packed", policy=POL)
+        got, _ = store.restore(d, params)          # prequant sidecars
+    w_l = jax.tree_util.tree_leaves_with_path(plan.params)
+    g_l = jax.tree_util.tree_leaves_with_path(got)
+    assert len(w_l) == len(g_l)
+    for (pw, lw), (pg, lg) in zip(w_l, g_l):
+        assert jax.tree_util.keystr(pw) == jax.tree_util.keystr(pg)
+        np.testing.assert_array_equal(np.asarray(lw), np.asarray(lg))
+
+
+def test_save_format_validation():
+    from repro.engine import PolicyMap
+    params = MODELS["lenet"].init(KEY)
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(ValueError, match="unknown checkpoint format"):
+            store.save(d, 0, params, format="int4")
+        with pytest.raises(ValueError, match="packed zero leaves"):
+            store.save(d, 0, params, format="bfp_packed")
+        # a packed request whose policy resolves NOTHING fails loudly
+        # instead of silently writing a full-size float32 artifact
+        none_map = PolicyMap.of(("^no_such_layer$", POL), default=None)
+        with pytest.raises(ValueError, match="packed zero leaves"):
+            store.save(d, 0, params, format="bfp_packed", policy=none_map)
+        assert store.latest_step(d) is None       # nothing was written
+        with pytest.raises(ValueError, match="packed"):
+            store.save(d, 0, params, format="bfp_packed", policy=POL)
+            store.restore(d, params, packed="nope")
+        # a pre-packed tree needs no policy
+        pk = packed.pack_param_tree(params, POL, "cnn")
+        store.save(d, 1, pk, format="bfp_packed")
+        got, step = store.restore(d, params, packed="keep")
+        assert step == 1
+
+
+def test_async_checkpointer_handles_packed_trees():
+    """Regression: save_async used to np.asarray PackedBFP leaves into
+    pickled 0-d object arrays that restore could not read.  The async
+    path now snapshots containers as-is and forwards format/policy."""
+    params = MODELS["lenet"].init(KEY)
+    with tempfile.TemporaryDirectory() as d:
+        ck = store.Checkpointer(d, format="bfp_packed", policy=POL)
+        ck.save_async(3, params)
+        ck.wait()
+        got, step = store.restore(d, params, packed="keep")
+        assert step == 3
+        assert any(packed.is_packed(l) for l in
+                   jax.tree_util.tree_leaves(got, is_leaf=packed.is_packed))
+        # and an already-packed tree snapshots through the async path too
+        pk = packed.pack_param_tree(params, POL, "cnn")
+        ck2 = store.Checkpointer(d)
+        ck2.save_async(4, pk)
+        ck2.wait()
+        got2, step2 = store.restore(d, params)    # prequant sidecars
+        assert step2 == 4
+        assert any(prequant.is_prequant(l) for l in
+                   jax.tree_util.tree_leaves(
+                       got2, is_leaf=prequant.is_prequant))
+
+
+# ---------------------------------------------------------------------------
+# LM trees: packed checkpoint == prequantize, and the serve engines load it
+# ---------------------------------------------------------------------------
+
+def _lm_cfg():
+    return reduced(ARCHS["tinyllama-1.1b"], n_layers=2, d_model=64,
+                   d_ff=128, vocab=256)
+
+
+def test_lm_packed_checkpoint_matches_prequantize():
+    cfg = _lm_cfg()
+    params = init_state(cfg, KEY).params
+    want = EG.prequantize(params, POL)
+    with tempfile.TemporaryDirectory() as d:
+        store.save(d, 0, params, format="bfp_packed", policy=POL,
+                   tree_kind="lm")
+        got, _ = store.restore(d, params)          # packed="prequant"
+    w_l = jax.tree_util.tree_leaves_with_path(want)
+    g_l = jax.tree_util.tree_leaves_with_path(got)
+    assert len(w_l) == len(g_l)
+    for (pw, lw), (pg, lg) in zip(w_l, g_l):
+        assert jax.tree_util.keystr(pw) == jax.tree_util.keystr(pg)
+        np.testing.assert_array_equal(np.asarray(lw), np.asarray(lg))
+
+
+def test_lm_serve_engine_accepts_packed_artifact():
+    cfg = _lm_cfg()
+    params = init_state(cfg, KEY).params
+    with tempfile.TemporaryDirectory() as d:
+        store.save(d, 0, params, format="bfp_packed", policy=POL,
+                   tree_kind="lm")
+        kept, _ = store.restore(d, params, packed="keep")
+        deq, _ = store.restore(d, params, packed="dequant")
+
+    def run(p):
+        eng = ServeEngine(p, cfg, slots=2, max_len=64)
+        reqs = [Request(rid=i, prompt=[1 + i, 2, 3], max_new=4)
+                for i in range(3)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        return [r.out for r in reqs]
+
+    # the packed artifact decodes exactly like the dequantized tree (the
+    # float backend dequantizes {"m","s"} on the fly to the same values)
+    assert run(kept) == run(deq)
+
+
+# ---------------------------------------------------------------------------
+# dist wire: real bytes, honest padding, tile alignment
+# ---------------------------------------------------------------------------
+
+def test_wire_pack_matches_in_graph_model_bit_exact():
+    g = jax.random.normal(KEY, (37, 29))           # 1073 elems: padded tail
+    for bits in (4, 6, 8):
+        got = compress.unpack_leaf(compress.pack_leaf(g, bits, block=128))
+        want = compress.quantize_leaf(g, bits, block=128)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_wire_bytes_count_remainder_padding():
+    # 513 elements at block=512 travel as TWO full blocks — the padding
+    # is on the wire and the accounting says so (the old analytic ratio
+    # ignored it)
+    assert compress.leaf_wire_bytes(513, 8, 512) == 2 * 512 + 2
+    assert compress.leaf_wire_bytes(512, 8, 512) == 512 + 1
+    assert compress.leaf_wire_bytes(1, 4, 512) == 256 + 1
+    g = jax.random.normal(KEY, (513,))
+    p = compress.pack_leaf(g, 8, block=512)
+    overhead = p.nbytes - compress.leaf_wire_bytes(513, 8, 512)
+    assert 0 < overhead < 120                     # header only
+
+
+def test_wire_block_tile_alignment_validated():
+    g = jax.random.normal(KEY, (64,))
+    with pytest.raises(ValueError, match="multiple of the TILED"):
+        compress.quantize_leaf(g, 8, block=48, tile_k=32)
+    with pytest.raises(ValueError, match="multiple of the TILED"):
+        compress.pack_leaf(g, 8, block=48, tile_k=32)
+    with pytest.raises(ValueError, match="multiple of the TILED"):
+        compress.make_compressor(8, block=48, tile_k=32)
+    with pytest.raises(ValueError, match="positive int"):
+        compress.quantize_leaf(g, 8, block=0)
+    # aligned geometry passes
+    compress.quantize_leaf(g, 8, block=64, tile_k=32)
+
+
+def test_wire_report_measures_real_ratio():
+    tree = {"w": jax.random.normal(KEY, (256, 64)),
+            "step": jnp.asarray(3, jnp.int32)}
+    rep = compress.wire_report(tree, bits=8, block=512)
+    assert rep["n_leaves"] == 2 and rep["n_uncompressed"] == 1
+    assert rep["wire_bytes"] < rep["float_bytes"]
+    # a 16k-element f32 leaf at 8 bits: ~0.25x + exponents + header
+    shape, wire, raw = max(rep["per_leaf"], key=lambda t: t[2])
+    assert shape == (256, 64)
+    assert 0.24 < wire / raw < 0.27
+
+
+def test_wire_rejects_non_float_and_non_wire_containers():
+    with pytest.raises(ValueError, match="float leaf"):
+        compress.pack_leaf(jnp.arange(8), 8)
+    blk = bfp.quantize(jax.random.normal(KEY, (2, 8)), 8, (1,))
+    with pytest.raises(ValueError, match="wire"):
+        compress.unpack_leaf(packed.pack_block(blk))

@@ -1,0 +1,75 @@
+"""Docs-sync check: the README's ``python`` blocks must RUN as written.
+
+Extracts every fenced ```python block from README.md (in document
+order), concatenates them into one script, and executes it — the blocks
+are written as one continuous session, so later blocks may use names
+earlier blocks define.  Any API drift (renamed function, changed
+signature, stale example) fails here instead of rotting in the docs.
+
+Usage:
+    PYTHONPATH=src python tools/check_docs.py [--print] [FILE ...]
+
+``--print`` dumps the assembled script instead of running it.  Extra
+FILE arguments are checked the same way (default: README.md only —
+DESIGN.md's fences are illustrative fragments, not sessions).
+
+CI runs this (plus examples/quickstart.py) in the docs-sync job;
+tests/test_docs.py runs the extraction logic so the block count is
+pinned in tier-1 too.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_FENCE = re.compile(r"^```python[ \t]*$(.*?)^```[ \t]*$",
+                    re.MULTILINE | re.DOTALL)
+
+
+def extract_blocks(md_text: str) -> list[str]:
+    """All ```python fenced blocks, in order (bash/other fences skipped)."""
+    return [m.group(1).strip("\n") for m in _FENCE.finditer(md_text)]
+
+
+def assemble(path: str) -> tuple[str, int]:
+    """(assembled script, number of blocks) for the markdown file."""
+    with open(path) as f:
+        blocks = extract_blocks(f.read())
+    if not blocks:
+        raise SystemExit(f"{path}: no ```python blocks found — "
+                         f"is the file fenced correctly?")
+    rel = os.path.relpath(path, REPO)
+    out = [f"# assembled from {rel} by tools/check_docs.py\n"]
+    for i, b in enumerate(blocks):
+        out.append(f"# --- {rel} block {i + 1} ---\n{b}\n")
+    return "\n".join(out), len(blocks)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(prog="check_docs")
+    ap.add_argument("files", nargs="*",
+                    default=[os.path.join(REPO, "README.md")])
+    ap.add_argument("--print", action="store_true", dest="show",
+                    help="dump the assembled script, don't run it")
+    args = ap.parse_args()
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    for path in args.files:
+        script, n = assemble(path)
+        if args.show:
+            print(script)
+            continue
+        print(f"[check_docs] {os.path.relpath(path, REPO)}: "
+              f"executing {n} python block(s)", flush=True)
+        # one namespace per FILE: blocks are a continuous session
+        exec(compile(script, f"<{os.path.relpath(path, REPO)}>", "exec"),
+             {"__name__": "__docs__"})
+        print(f"[check_docs] {os.path.relpath(path, REPO)}: OK",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()
