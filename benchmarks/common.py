@@ -5,9 +5,15 @@ each suite consults it to shrink shapes/grids/reps so the whole harness
 finishes in CI seconds — the point is that benchmark SCRIPTS cannot rot,
 not that smoke numbers mean anything.  ``--csv PATH`` tees every
 ``emit`` row to a file (uploaded as a CI artifact).
+
+``--bench-json PATH`` additionally collects the structured
+legacy-vs-new kernel records (kernel_bench / conv_bench layer rows)
+into a JSON artifact — the pinned ``BENCH_kernels.json`` trajectory
+that ``tools/check_bench.py`` gates in CI (ISSUE 6).
 """
 from __future__ import annotations
 
+import pathlib
 import time
 from typing import Callable, Optional, TextIO
 
@@ -18,6 +24,9 @@ SMOKE = False
 
 _CSV: Optional[TextIO] = None
 
+#: collected structured records when ``--bench-json`` is active
+_JSON: Optional[list] = None
+
 
 def set_smoke(on: bool) -> None:
     global SMOKE
@@ -27,6 +36,27 @@ def set_smoke(on: bool) -> None:
 def set_csv(fh: Optional[TextIO]) -> None:
     global _CSV
     _CSV = fh
+
+
+def set_json(records: Optional[list]) -> None:
+    global _JSON
+    _JSON = records
+
+
+def add_record(rec: dict) -> None:
+    """Append one structured record to the --bench-json collection
+    (no-op when JSON collection is off)."""
+    if _JSON is not None:
+        _JSON.append(rec)
+
+
+def bench_tune_cache():
+    """The repo's committed autotune cache (``tune_cache.json`` at the
+    repo root, filled by ``python -m repro.tune``) — empty cache when the
+    file is absent, so benches degrade to fallback tiles."""
+    from repro.tune.cache import TuneCache
+    p = pathlib.Path(__file__).resolve().parent.parent / "tune_cache.json"
+    return TuneCache.load(str(p))
 
 
 def bench_reps(warmup: int = 2, iters: int = 5) -> dict:
@@ -46,6 +76,31 @@ def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
         ts.append(time.perf_counter() - t0)
     ts.sort()
     return ts[len(ts) // 2] * 1e6
+
+
+def time_pair(fn_a: Callable, fn_b: Callable, warmup: int = 1,
+              iters: int = 5) -> tuple:
+    """Interleaved median microseconds for two rival zero-arg callables.
+
+    Timing the rivals in separate blocks puts any machine drift (CPU
+    contention, thermal ramps) entirely on the a/b RATIO — exactly the
+    number the legacy-vs-new layer rows gate on.  Alternating a/b
+    samples makes drift hit both sides equally instead.
+    """
+    for _ in range(warmup):
+        jax.block_until_ready(fn_a())
+        jax.block_until_ready(fn_b())
+    ta, tb = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a())
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b())
+        tb.append(time.perf_counter() - t0)
+    ta.sort()
+    tb.sort()
+    return ta[len(ta) // 2] * 1e6, tb[len(tb) // 2] * 1e6
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):

@@ -23,23 +23,19 @@ from __future__ import annotations
 import jax
 
 from benchmarks import common
-from benchmarks.common import bench_reps, emit, time_call
+from benchmarks.common import (add_record, bench_reps, bench_tune_cache,
+                               emit, time_call, time_pair)
 from repro import engine as EG
 from repro.core.bfp import Scheme
 from repro.core.conv_utils import conv_geometry
 from repro.core.policy import BFPPolicy
 from repro.kernels import ops
+from repro.tune.cache import use_cache
+from repro.tune.shapes import CONV_LAYERS
+from repro.tune.tables import aligned_tile, conv_row_tile
 
-# (name, in_ch, out_ch, k, stride) — VGG-16 and ResNet-18 conv geometry
-_LAYERS = [
-    ("vgg16/conv1_1", 3, 64, 3, 1),
-    ("vgg16/conv2_1", 64, 128, 3, 1),
-    ("vgg16/conv3_1", 128, 256, 3, 1),
-    ("vgg16/conv5_3", 512, 512, 3, 1),
-    ("resnet18/stem7x7", 3, 64, 7, 2),
-    ("resnet18/block_3x3", 64, 64, 3, 1),
-    ("resnet18/down_3x3_s2", 128, 256, 3, 2),
-]
+#: VGG-16 / ResNet-18 conv geometry — the shared canonical table
+_LAYERS = list(CONV_LAYERS)
 
 
 def _bytes_model(b, h, w, c, kh, kw, stride, padding):
@@ -79,6 +75,66 @@ def run():
         emit(f"conv/{name}/im2col_gemm", us_im2col,
              f"act_bytes={im2col_b};bytes_cut={im2col_b / fused_b:.2f}x;"
              f"speedup={us_im2col / us_fused:.2f}x")
+
+    layer_rows()
+
+
+def layer_rows():
+    """E15 legacy-vs-new fused-conv rows on the canonical layer shapes
+    (same interpret mode and shapes; bit-identical outputs)."""
+    hw = 8 if common.SMOKE else 32
+    batch = 1
+    reps = bench_reps(warmup=1, iters=5)
+    cache = bench_tune_cache()
+    base = BFPPolicy(scheme=Scheme.TILED, block_k=128,
+                     straight_through=False)
+    layers = _LAYERS[:3] if common.SMOKE else _LAYERS
+    for i, (name, c, oc, k, stride) in enumerate(layers):
+        if common.SMOKE:
+            c, oc = min(c, 16), min(oc, 16)
+        # same per-layer block policy as the tune CLI, so cached tile
+        # entries key-match
+        pol = base if (k * k * c) % 128 == 0 else \
+            base.with_(block_k=c if c <= 128 else None)
+        key = jax.random.PRNGKey(100 + i)
+        x = jax.random.normal(key, (batch, hw, hw, c))
+        w = jax.random.normal(jax.random.fold_in(key, 1),
+                              (k, k, c, oc)) * 0.1
+        oh, ow, _, _ = conv_geometry(hw, hw, k, k, stride, "SAME")
+
+        legacy = lambda: ops.bfp_conv2d(x, w, pol, stride, "SAME", True,
+                                        dot_impl="int32", pipeline=False)
+
+        def new():
+            # cache scope inside the callable: the interleaved rival
+            # (legacy) must keep its fallback tiles
+            with use_cache(cache):
+                return ops.bfp_conv2d(x, w, pol, stride, "SAME", True)
+
+        us_legacy, us_new = time_pair(legacy, new, **reps)
+        with use_cache(cache):
+            t_oh, bn = ops._conv_tiles(batch * oh * ow, k * k * c, oc,
+                                       pol, True, None)
+        tiles_legacy = [conv_row_tile(oh, ow), aligned_tile(oc)]
+        tiles_new = [t_oh or tiles_legacy[0], bn or tiles_legacy[1]]
+
+        x_b, _ = _bytes_model(batch, hw, hw, c, k, k, stride, "SAME")
+        hbm = x_b + k * k * c * oc * 4 + batch * oh * ow * oc * 4
+        emit(f"conv/{name}/legacy", us_legacy, f"tiles={tiles_legacy}")
+        emit(f"conv/{name}/new", us_new,
+             f"tiles={tiles_new};speedup={us_legacy / us_new:.2f}x")
+        add_record({
+            "kind": "conv", "name": name,
+            "shape": [batch, hw, hw, c, k, oc, stride],
+            "l_i": pol.l_i, "l_w": pol.l_w, "block_k": pol.block_k,
+            "hbm_bytes": hbm,
+            "tokens_per_s": round(batch * oh * ow / us_new * 1e6, 1),
+            "legacy": {"us": round(us_legacy, 1), "dot_impl": "int32",
+                       "pipeline": False, "tiles": tiles_legacy},
+            "new": {"us": round(us_new, 1), "dot_impl": "auto",
+                    "pipeline": True, "tiles": tiles_new},
+            "speedup": round(us_legacy / us_new, 3),
+        })
 
 
 if __name__ == "__main__":

@@ -3,6 +3,13 @@
 On CPU the Pallas kernel runs in interpret mode (orders of magnitude
 slower than compiled TPU); the emulated-int path is the meaningful CPU
 number.  Reports us/call and the effective GEMM rate.
+
+E15 (ISSUE 6): per canonical GEMM layer shape (repro.tune.shapes),
+the LEGACY kernel datapath (int32-widened dots, no K-pipeline, fallback
+tiles) vs the NEW one (resolved dot mode + pipelined K-loop + autotuned
+tiles from the committed tune_cache.json).  Same interpret mode, same
+shapes, bit-identical outputs — the us ratio is the claim.  Rows land in
+the ``--bench-json`` artifact gated by tools/check_bench.py.
 """
 from __future__ import annotations
 
@@ -10,9 +17,15 @@ import jax
 
 from repro.core import bfp
 from repro.core.bfp_dot import bfp_matmul_2d
-from repro.core.policy import PAPER_DEFAULT, TPU_TILED
+from repro.core.policy import BFPPolicy, PAPER_DEFAULT, TPU_TILED
+from repro.core.bfp import Scheme
+from repro.core.prequant import prequant_act
+from repro.tune.cache import use_cache
+from repro.tune.shapes import GEMM_LAYERS
+from repro.tune.tables import fallback_tiles
 from benchmarks import common
-from benchmarks.common import bench_reps, emit, time_call
+from benchmarks.common import (add_record, bench_reps, bench_tune_cache,
+                               emit, time_call, time_pair)
 
 
 def run():
@@ -44,6 +57,70 @@ def run():
         emit(f"kernel/acc_bits_LW{lw}_LI{li}_K{kk}", 0.0,
              f"acc_bits={bfp.accumulator_bits(lw, li, kk)};"
              f"max_safe_k_int32={bfp.max_safe_k(lw, li)}")
+
+    layer_rows()
+
+
+def layer_rows():
+    """E15 legacy-vs-new GEMM rows on the canonical layer shapes."""
+    from repro.kernels import ops
+    reps = bench_reps(warmup=1, iters=3)
+    cache = bench_tune_cache()
+    base = BFPPolicy(scheme=Scheme.TILED, block_k=128,
+                     straight_through=False)
+    for i, (name, b, k, n) in enumerate(GEMM_LAYERS):
+        if common.SMOKE:
+            b, k, n = min(b, 128), min(k, 256), min(n, 128)
+        # same block policy the tune CLI uses, so lookups hit its entries
+        pol = base if k % 128 == 0 else base.with_(block_k=None)
+        key = jax.random.PRNGKey(i)
+        x = jax.random.normal(key, (b, k))
+        w = jax.random.normal(jax.random.fold_in(key, 1), (k, n)) * 0.1
+
+        legacy = lambda: ops.bfp_matmul(x, w, pol, True, dot_impl="int32",
+                                        pipeline=False)
+
+        def new():
+            # cache scope inside the callable: the interleaved rival
+            # (legacy) must keep its fallback tiles
+            with use_cache(cache):
+                return ops.bfp_matmul(x, w, pol, True)
+
+        us_legacy, us_new = time_pair(legacy, new, **reps)
+        with use_cache(cache):
+            tiles_new = ops._gemm_tiles(b, k, n, pol, True, None, None)
+        tiles_legacy = fallback_tiles(b, k, n, pol.block_k)
+
+        # fused requantize epilogue vs dequantize-then-requantize (the
+        # HBM-traffic trade; bit-identical, pinned by tests)
+        out_pol = base.with_(block_k=8)
+        fused = lambda: ops.bfp_matmul(x, w, pol, True, out_policy=out_pol)
+        twostep = lambda: prequant_act(
+            ops.bfp_matmul(x, w, pol, True), out_pol)
+        with use_cache(cache):
+            us_fused, us_twostep = time_pair(fused, twostep, **reps)
+
+        hbm = (b * k + k * n + b * n) * 4
+        emit(f"kernel/{name}/legacy", us_legacy, f"tiles={tiles_legacy}")
+        emit(f"kernel/{name}/new", us_new,
+             f"tiles={tiles_new};speedup={us_legacy / us_new:.2f}x")
+        add_record({
+            "kind": "gemm", "name": name, "shape": [b, k, n],
+            "l_i": pol.l_i, "l_w": pol.l_w, "block_k": pol.block_k,
+            "hbm_bytes": hbm,
+            "tokens_per_s": round(b / us_new * 1e6, 1),
+            "legacy": {"us": round(us_legacy, 1), "dot_impl": "int32",
+                       "pipeline": False, "tiles": list(tiles_legacy)},
+            "new": {"us": round(us_new, 1), "dot_impl": "auto",
+                    "pipeline": True, "tiles": list(tiles_new)},
+            "speedup": round(us_legacy / us_new, 3),
+            "epilogue": {
+                "us_fused": round(us_fused, 1),
+                "us_twostep": round(us_twostep, 1),
+                # f32 activation round-trip vs int8 mantissa + f32 steps
+                "act_bytes_f32": b * n * 4,
+                "act_bytes_wire": b * n + 4 * (b * n // 8)},
+        })
 
 
 if __name__ == "__main__":

@@ -22,6 +22,13 @@ Flags:
   --smoke       tiny shapes, 1 rep — CI rot-check mode (the numbers are
                 meaningless; the scripts running end-to-end is the point)
   --csv PATH    tee every emitted row to PATH (CI uploads it)
+  --bench-json PATH
+                collect the structured legacy-vs-new kernel records
+                (kernel/conv layer rows) into PATH.  The committed
+                BENCH_kernels.json at the repo root is this artifact from
+                a full (non-smoke) run; CI regenerates it and
+                tools/check_bench.py fails on a >20% speedup regression
+                (ratios are machine-independent; absolute us are not)
 
 Roofline/dry-run numbers are produced by ``repro.launch.dryrun`` (they
 need the 512-device env) and summarized in EXPERIMENTS.md.
@@ -29,6 +36,7 @@ need the 512-device env) and summarized in EXPERIMENTS.md.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -60,6 +68,9 @@ def main() -> None:
                     help="tiny shapes / 1 rep (CI rot check)")
     ap.add_argument("--csv", metavar="PATH",
                     help="also write CSV rows to PATH")
+    ap.add_argument("--bench-json", metavar="PATH",
+                    help="write structured legacy-vs-new kernel records "
+                         "(kernel/conv suites) to PATH")
     args = ap.parse_args()
     names = args.names or list(_ALL)
     unknown = [n for n in names if n not in _ALL]
@@ -68,6 +79,8 @@ def main() -> None:
     common.set_smoke(args.smoke)
     fh = open(args.csv, "w") if args.csv else None
     common.set_csv(fh)
+    records = [] if args.bench_json else None
+    common.set_json(records)
 
     print("name,us_per_call,derived")
     if fh:
@@ -83,6 +96,14 @@ def main() -> None:
         print(f"# {n} done in {time.time() - t0:.1f}s", flush=True)
     if fh:
         fh.close()
+    if args.bench_json:
+        doc = {"schema": 1, "mode": "smoke" if args.smoke else "full",
+               "target": "interpret", "records": records}
+        with open(args.bench_json, "w") as jf:
+            json.dump(doc, jf, indent=1, sort_keys=True)
+            jf.write("\n")
+        print(f"# wrote {len(records)} records to {args.bench_json}",
+              flush=True)
     if failures:
         sys.exit(1)
 

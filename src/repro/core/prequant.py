@@ -34,6 +34,7 @@ from repro.core.policy import BFPPolicy
 
 __all__ = ["quantize_param_tree", "quantize_cnn_param_tree", "prequant_leaf",
            "prequant_conv_leaf", "dequantize_prequant", "is_prequant",
+           "prequant_act", "dequantize_act", "act_block",
            "lm_rule_path", "lm_eligible", "cnn_rule_path",
            "detect_tree_kind"]
 
@@ -116,6 +117,58 @@ def dequantize_prequant(w: Any, dtype=jnp.float32) -> jax.Array:
     bk = m.shape[-2] // s.shape[-2]
     s_full = jnp.repeat(s, bk, axis=-2)
     return (m.astype(dtype) * s_full.astype(dtype))
+
+
+def prequant_act(x: jax.Array, policy: BFPPolicy) -> Any:
+    """Activations [.., K] -> {"m": int8 [.., K], "s": f32 [.., K//bk]}.
+
+    The ACTIVATION wire format: blocks run along the LAST axis, one per
+    (row, K-chunk of ``policy.block_k``) — for NHWC conv activations the
+    last axis is C, so blocks are per (pixel, channel-chunk), exactly the
+    blocks the fused conv kernel forms inline when ``block_k | C``.
+
+    This is the reference two-step requantizer the kernels' fused
+    epilogue must match BIT-exactly (ISSUE 6 acceptance): it runs the
+    same block-format math (``bfp_quantize_matrix``) the in-kernel
+    quantizer is pinned against.  Quantization idempotence (PR 4
+    property suite) then makes dequantize-then-requantize consumers
+    (emulated/float backends) agree bit-exactly too.
+
+    Requires ``policy.l_i <= 8`` (int8 mantissa wire) and
+    ``block_k | K`` — raises ValueError otherwise, mirroring the
+    emulated path's block contract.
+    """
+    k = x.shape[-1]
+    bk = policy.block_k or k
+    if k % bk:
+        raise ValueError(f"activation prequant needs block_k | K, got "
+                         f"block_k={bk}, K={k}")
+    if policy.l_i > 8:
+        raise ValueError(f"activation prequant streams int8 mantissas; "
+                         f"L_I={policy.l_i} > 8")
+    lead = x.shape[:-1]
+    blk = bfp.bfp_quantize_matrix(x.reshape(-1, k), policy.l_i, "w",
+                                  bfp.Scheme.TILED, bk, policy.rounding)
+    return {"m": blk.mantissa.reshape(*lead, k),
+            "s": bfp.pow2(blk.exponent - (policy.l_i - 2)).reshape(
+                *lead, k // bk)}
+
+
+def dequantize_act(x: Any, dtype=jnp.float32) -> jax.Array:
+    """Materialize an activation-prequant dict back to dense float.
+
+    Inverse layout of :func:`prequant_act`: blocks along the LAST axis
+    ([.., K] mantissa with [.., K//bk] steps) — vs the weight format's
+    [-2] axis (:func:`dequantize_prequant`).
+    """
+    m, s = x["m"], x["s"]
+    bk = m.shape[-1] // s.shape[-1]
+    return m.astype(dtype) * jnp.repeat(s, bk, axis=-1).astype(dtype)
+
+
+def act_block(x: Any) -> int:
+    """Block size of an activation-prequant dict (K // sidecar columns)."""
+    return x["m"].shape[-1] // x["s"].shape[-1]
 
 
 def _path_keys(path):

@@ -19,7 +19,8 @@ MAC -> power-of-two rescale, Fig. 2) behind every model GEMM:
 ``repro.core.bfp_dot.bfp_dot`` remains as a thin compatibility shim over
 :func:`gemm`.
 """
-from repro.core.prequant import is_prequant
+from repro.core.prequant import (act_block, dequantize_act, is_prequant,
+                                 prequant_act)
 from repro.engine.backends import (BackendFallbackWarning,
                                    BackendUnsupportedError,
                                    available_backends, get_backend,
@@ -33,7 +34,7 @@ from repro.engine.taps import TapEvent, taps
 
 __all__ = [
     "gemm", "conv2d", "conv2d_im2col", "prequantize", "prequantize_cnn",
-    "is_prequant",
+    "is_prequant", "prequant_act", "dequantize_act", "act_block",
     "bind", "Plan", "Site", "unpack_packed",
     "taps", "TapEvent",
     "PolicyMap", "PolicyLike", "resolve_policy", "join_path",

@@ -58,6 +58,16 @@ class Backend:
     conv: Optional[ConvFn] = None
     #: (policy, w, stride, padding) -> can ``conv`` honour this faithfully?
     conv_supports: Callable[..., bool] = lambda pol, w, stride, pad: False
+    #: can ``matmul``/``conv`` consume activation-prequant ``{"m", "s"}``
+    #: inputs natively (pallas: the x-prequant kernel variants)?  False
+    #: means the engine dequantizes the dict first — bit-identical via
+    #: quantization idempotence, just one more HBM round-trip.
+    act_prequant: bool = False
+    #: do ``matmul``/``conv`` accept an ``out_policy=`` kwarg emitting the
+    #: activation wire format straight from the accumulator (fused
+    #: requantize epilogue)?  False means the engine requantizes the
+    #: float output in a second step (bit-identical, slower).
+    out_quant: bool = False
 
 
 _REGISTRY: Dict[str, Backend] = {}
@@ -66,10 +76,13 @@ _REGISTRY: Dict[str, Backend] = {}
 def register_backend(name: str, matmul: MatmulFn,
                      supports: Optional[Callable] = None,
                      conv: Optional[ConvFn] = None,
-                     conv_supports: Optional[Callable] = None) -> None:
+                     conv_supports: Optional[Callable] = None,
+                     act_prequant: bool = False,
+                     out_quant: bool = False) -> None:
     _REGISTRY[name] = Backend(
         name, matmul, supports or (lambda pol, w: True), conv,
-        conv_supports or (lambda pol, w, stride, pad: conv is not None))
+        conv_supports or (lambda pol, w, stride, pad: conv is not None),
+        act_prequant, out_quant)
 
 
 def get_backend(name: str) -> Backend:
@@ -150,11 +163,16 @@ def _emulated_matmul(x2d, w, policy, key=None):
     return out.astype(jnp.result_type(x2d.dtype, w.dtype))
 
 
-def _pallas_matmul(x2d, w, policy, key=None):
+def _pallas_matmul(x2d, w, policy, key=None, out_policy=None):
+    # x2d may be an activation-prequant {"m", "s"} dict (the fused
+    # epilogue's output chained into the next layer) — ops dispatches the
+    # x-prequant kernel variants; out_policy asks for the fused
+    # requantize epilogue (activation wire format straight from VMEM).
     from repro.kernels import ops  # local import: kernels are optional
     if is_prequant(w):
-        return ops.bfp_matmul_prequant(x2d, w["m"], w["s"], policy)
-    return ops.bfp_matmul(x2d, w, policy)
+        return ops.bfp_matmul_prequant(x2d, w["m"], w["s"], policy,
+                                       out_policy=out_policy)
+    return ops.bfp_matmul(x2d, w, policy, out_policy=out_policy)
 
 
 def _pallas_supports(policy: BFPPolicy, w) -> bool:
@@ -173,12 +191,13 @@ def _pallas_supports(policy: BFPPolicy, w) -> bool:
     return True
 
 
-def _pallas_conv(x, w, policy, stride, padding, key=None):
+def _pallas_conv(x, w, policy, stride, padding, key=None, out_policy=None):
     from repro.kernels import ops  # local import: kernels are optional
     if is_prequant(w):
         return ops.bfp_conv2d_prequant(x, w["m"], w["s"], policy, stride,
-                                       padding)
-    return ops.bfp_conv2d(x, w, policy, stride, padding)
+                                       padding, out_policy=out_policy)
+    return ops.bfp_conv2d(x, w, policy, stride, padding,
+                          out_policy=out_policy)
 
 
 def _pallas_conv_supports(policy: BFPPolicy, w, stride, padding) -> bool:
@@ -195,4 +214,5 @@ def _pallas_conv_supports(policy: BFPPolicy, w, stride, padding) -> bool:
 register_backend("float", _float_matmul)
 register_backend("emulated", _emulated_matmul)
 register_backend("pallas", _pallas_matmul, _pallas_supports,
-                 conv=_pallas_conv, conv_supports=_pallas_conv_supports)
+                 conv=_pallas_conv, conv_supports=_pallas_conv_supports,
+                 act_prequant=True, out_quant=True)

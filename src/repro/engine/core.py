@@ -32,9 +32,12 @@ from __future__ import annotations
 from typing import Any, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 
+from repro.core.bfp import Rounding, Scheme
 from repro.core.conv_utils import conv_weight_matrix, im2col
-from repro.core.prequant import (is_prequant, quantize_cnn_param_tree,
+from repro.core.prequant import (act_block, dequantize_act, is_prequant,
+                                 prequant_act, quantize_cnn_param_tree,
                                  quantize_param_tree)
 from repro.engine import backends as BK
 from repro.engine import taps as TAPS
@@ -45,33 +48,130 @@ __all__ = ["gemm", "conv2d", "conv2d_im2col", "prequantize",
 
 
 # ---------------------------------------------------------------------------
+# Activation wire format plumbing (ISSUE 6 fused requantize epilogue).
+#
+# ``out_policy`` asks an execution to emit the CONSUMING layer's
+# quantized-input wire format {"m": int8 [.., N], "s": f32 [.., N//bk]}
+# instead of dense float — on a backend advertising ``out_quant`` the
+# requantization fuses into the kernel epilogue (the f32 activation
+# never touches HBM); anywhere else the engine requantizes the float
+# output in a second step, bit-identically (core.prequant.prequant_act
+# is the pinned reference).  Symmetrically, an execution whose ``x`` is
+# already that wire format feeds it straight to an ``act_prequant``
+# backend, and is dequantized first (bit-identical by quantization
+# idempotence) for every other route.
+# ---------------------------------------------------------------------------
+
+def _check_out_policy(out_policy) -> None:
+    """Epilogue requantization is defined for exactly the activation wire
+    format: TILED blocks along the last axis, round-to-nearest, int8
+    mantissas.  (block_k | N and l_i <= 8 are checked where the sizes
+    are known: ops epilogue config / prequant_act.)"""
+    if out_policy.scheme is not Scheme.TILED or not out_policy.block_k:
+        raise ValueError(
+            "out_policy must be Scheme.TILED with an explicit block_k "
+            f"(activation wire format); got scheme={out_policy.scheme}, "
+            f"block_k={out_policy.block_k}")
+    if out_policy.rounding is not Rounding.ROUND:
+        raise ValueError("out_policy requantization is round-to-nearest "
+                         f"only; got {out_policy.rounding}")
+
+
+def _act_ok_gemm(be: BK.Backend, pol, w, x2d) -> bool:
+    """Can ``be`` consume this activation-prequant dict natively?"""
+    if not be.act_prequant or pol is None:
+        return False
+    if x2d["m"].dtype != jnp.int8:
+        return False
+    bk = act_block(x2d)
+    if pol.block_k not in (None, bk):
+        return False
+    if is_prequant(w):  # weight sidecar block must match the act block
+        if w["m"].shape[-2] // w["s"].shape[-2] != bk:
+            return False
+    return True
+
+
+def _reshape_out(out, lead, n):
+    """Restore leading dims on a dense or wire-format output."""
+    if is_prequant(out):
+        bq = out["m"].shape[-1] // out["s"].shape[-1]
+        return {"m": out["m"].reshape(*lead, n),
+                "s": out["s"].reshape(*lead, n // bq)}
+    return out.reshape(*lead, n)
+
+
+def _tap_view(y):
+    """Dense float view of an execution output for tap observers (taps
+    compare against float references; the wire-format dict is
+    dequantized for observation only — the model still sees the dict)."""
+    return dequantize_act(y) if is_prequant(y) else y
+
+
+# ---------------------------------------------------------------------------
 # Execution primitives (shared by the per-call shims and bound Plans).
 # PolicyMap resolution and tap emission never happen here; backend
 # selection (registry + support checks, the per-call path) runs only
 # when no pre-selected ``backend`` is passed — bound Plans pass theirs.
 # ---------------------------------------------------------------------------
 
-def _gemm_exec(x: jax.Array, w: Any, pol, key=None,
+def _gemm_exec(x: Any, w: Any, pol, key=None,
                backend: Optional[BK.Backend] = None,
                strict: bool = False, path: Optional[str] = None,
-               warned=None) -> Tuple[jax.Array, BK.Backend]:
-    """Flatten leading dims, run the (given or selected) backend matmul."""
+               warned=None, out_policy=None) -> Tuple[Any, BK.Backend]:
+    """Flatten leading dims, run the (given or selected) backend matmul.
+
+    ``x`` may be the activation wire format; ``out_policy`` requests it
+    on the output (see the module comment above)."""
     n = (w["m"] if is_prequant(w) else w).shape[-1]
-    lead = x.shape[:-1]
-    x2d = x.reshape(-1, x.shape[-1])
+    if out_policy is not None:
+        _check_out_policy(out_policy)
+    x_pq = is_prequant(x)
+    xm = x["m"] if x_pq else x
+    lead = xm.shape[:-1]
+    if x_pq:
+        x2d = {"m": x["m"].reshape(-1, xm.shape[-1]),
+               "s": x["s"].reshape(-1, x["s"].shape[-1])}
+    else:
+        x2d = x.reshape(-1, xm.shape[-1])
     be = backend
     if be is None:
         be = (BK.get_backend("float") if pol is None
               else BK.select_backend(pol, w, strict=strict, path=path,
                                      warned=warned))
-    out = be.matmul(x2d, w, pol, key)
-    return out.reshape(*lead, n), be
+    if x_pq and not _act_ok_gemm(be, pol, w, x2d):
+        x2d = dequantize_act(x2d)
+    if out_policy is not None and be.out_quant and pol is not None:
+        out = be.matmul(x2d, w, pol, key, out_policy=out_policy)
+    else:
+        out = be.matmul(x2d, w, pol, key)
+        if out_policy is not None:
+            out = prequant_act(out, out_policy)
+    return _reshape_out(out, lead, n), be
 
 
-def _conv_exec(x: jax.Array, w: Any, pol, stride: int, padding: str,
+def _act_ok_conv(be: BK.Backend, pol, w, x) -> bool:
+    """Conv counterpart of :func:`_act_ok_gemm` — blocks are per
+    (pixel, channel-chunk), so the act block must also match a
+    weight-prequant sidecar's HWIO-major K block."""
+    if not be.act_prequant or pol is None:
+        return False
+    if x["m"].dtype != jnp.int8:
+        return False
+    bk = act_block(x)
+    if pol.block_k not in (None, bk):
+        return False
+    if is_prequant(w):
+        kh, kw, c, _ = w["m"].shape
+        if (kh * kw * c) // w["s"].shape[-2] != bk:
+            return False
+    return True
+
+
+def _conv_exec(x: Any, w: Any, pol, stride: int, padding: str,
                key=None, backend: Optional[BK.Backend] = None,
                strict: bool = False, path: Optional[str] = None,
-               warned=None) -> Tuple[jax.Array, BK.Backend]:
+               warned=None, out_policy=None) -> Tuple[Any, BK.Backend]:
     """Fused conv when the backend has one and can honour (policy,
     geometry); honest materialized-im2col + matmul fallback otherwise.
 
@@ -81,28 +181,46 @@ def _conv_exec(x: jax.Array, w: Any, pol, stride: int, padding: str,
     re-selects with support checks, exactly the legacy per-call
     semantics.  A bound Plan passes its pre-selected ``backend``.
     """
+    if out_policy is not None:
+        _check_out_policy(out_policy)
     be = backend
     if be is None:
         be = BK.get_backend("float" if pol is None else pol.backend_name)
-    if be.conv is not None and be.conv_supports(pol, w, stride, padding):
-        return be.conv(x, w, pol, stride, padding, key), be
+    fused = be.conv is not None and be.conv_supports(pol, w, stride, padding)
+    if is_prequant(x) and not (fused and _act_ok_conv(be, pol, w, x)):
+        x = dequantize_act(x)
+    if fused:
+        if out_policy is not None and be.out_quant and pol is not None:
+            return be.conv(x, w, pol, stride, padding, key,
+                           out_policy=out_policy), be
+        out = be.conv(x, w, pol, stride, padding, key)
+        if out_policy is not None:
+            out = prequant_act(out, out_policy)
+        return out, be
     # backend given (Plan): reuse its matmul for the im2col GEMM;
     # otherwise select per call (pallas-with-paper-scheme lands emulated).
     return _conv_im2col_exec(x, w, pol, stride, padding, key,
                              backend=backend, strict=strict, path=path,
-                             warned=warned)
+                             warned=warned, out_policy=out_policy)
 
 
 def _conv_im2col_exec(x, w, pol, stride, padding, key=None, backend=None,
-                      strict=False, path=None,
-                      warned=None) -> Tuple[jax.Array, BK.Backend]:
+                      strict=False, path=None, warned=None,
+                      out_policy=None) -> Tuple[Any, BK.Backend]:
+    if is_prequant(x):  # im2col gathers float patches
+        x = dequantize_act(x)
     prequant = is_prequant(w)
     kh, kw, c, oc = (w["m"] if prequant else w).shape
     cols, (b, oh, ow) = im2col(x, kh, kw, stride, padding)
     wmat = ({"m": conv_weight_matrix(w["m"]), "s": w["s"]} if prequant
             else conv_weight_matrix(w))
     out, be = _gemm_exec(cols, wmat, pol, key, backend=backend,
-                         strict=strict, path=path, warned=warned)
+                         strict=strict, path=path, warned=warned,
+                         out_policy=out_policy)
+    if is_prequant(out):
+        bq = out["m"].shape[-1] // out["s"].shape[-1]
+        return {"m": out["m"].reshape(b, oh, ow, oc),
+                "s": out["s"].reshape(b, oh, ow, oc // bq)}, be
     return out.reshape(b, oh, ow, oc), be
 
 
@@ -112,21 +230,25 @@ def _conv_im2col_exec(x, w, pol, stride, padding, key=None, backend=None,
 # ---------------------------------------------------------------------------
 
 def gemm_and_tap(x, w, pol, key=None, backend=None, strict=False,
-                 path=None, warned=None) -> jax.Array:
+                 path=None, warned=None, out_policy=None) -> Any:
     out, be = _gemm_exec(x, w, pol, key, backend=backend, strict=strict,
-                         path=path, warned=warned)
+                         path=path, warned=warned, out_policy=out_policy)
     if TAPS.active():
-        TAPS.emit("gemm", path, pol, be.name, x, w, out,
+        # wire-format outputs are dequantized for observation only (taps
+        # compare against the float reference); the model sees ``out``
+        TAPS.emit("gemm", path, pol, be.name, x, w, _tap_view(out),
                   float_fn=lambda: _gemm_exec(x, w, None, None)[0])
     return out
 
 
 def conv_and_tap(x, w, pol, stride, padding, key=None, backend=None,
-                 strict=False, path=None, warned=None) -> jax.Array:
+                 strict=False, path=None, warned=None,
+                 out_policy=None) -> Any:
     out, be = _conv_exec(x, w, pol, stride, padding, key, backend=backend,
-                         strict=strict, path=path, warned=warned)
+                         strict=strict, path=path, warned=warned,
+                         out_policy=out_policy)
     if TAPS.active():
-        TAPS.emit("conv", path, pol, be.name, x, w, out,
+        TAPS.emit("conv", path, pol, be.name, x, w, _tap_view(out),
                   float_fn=lambda: _conv_im2col_exec(
                       x, w, None, stride, padding)[0],
                   stride=stride, padding=padding)
@@ -150,9 +272,10 @@ def _plan_cls():
     return _PLAN_CLS
 
 
-def gemm(x: jax.Array, w: Any, policy: PolicyLike = None, *,
+def gemm(x: Any, w: Any, policy: PolicyLike = None, *,
          path: Optional[str] = None,
-         key: Optional[jax.Array] = None) -> jax.Array:
+         key: Optional[jax.Array] = None,
+         out_policy: Optional[Any] = None) -> Any:
     """``x[..., K] @ w[K, N]`` through the policy-selected BFP backend.
 
     ``w``: float [K, N] or prequant ``{"m": [K, N], "s": [K//bk, N]}``.
@@ -160,19 +283,28 @@ def gemm(x: jax.Array, w: Any, policy: PolicyLike = None, *,
     ``policy`` may be a bound ``engine.Plan`` — the site entry for
     ``path`` then supplies the resolved policy AND backend with no
     per-call registry/regex work.
+
+    ``x`` may also be the activation wire format ``{"m": int8 [.., K],
+    "s": [.., K//bk]}`` (a previous layer's ``out_policy`` output);
+    ``out_policy=`` (the CONSUMING layer's policy) returns that format
+    instead of dense float — fused into the kernel epilogue on backends
+    that support it, a bit-identical second requantization step
+    elsewhere.
     """
     if isinstance(policy, _plan_cls()):
-        return policy.gemm(x, w, path=path, key=key)
+        return policy.gemm(x, w, path=path, key=key, out_policy=out_policy)
     # policy None goes through the registered "float" backend, so
     # re-registering it (instrumented or accelerated variants) also
     # covers policy-None GEMMs
-    return gemm_and_tap(x, w, resolve_policy(policy, path), key, path=path)
+    return gemm_and_tap(x, w, resolve_policy(policy, path), key, path=path,
+                        out_policy=out_policy)
 
 
-def conv2d(x: jax.Array, w: Any, policy: PolicyLike = None, *,
+def conv2d(x: Any, w: Any, policy: PolicyLike = None, *,
            stride: int = 1, padding: str = "SAME",
            path: Optional[str] = None,
-           key: Optional[jax.Array] = None) -> jax.Array:
+           key: Optional[jax.Array] = None,
+           out_policy: Optional[Any] = None) -> Any:
     """NHWC convolution through the policy-selected BFP backend.
 
     ``x``: [B, H, W, C] float; ``w``: HWIO [kh, kw, C, OC] float or the
@@ -184,16 +316,23 @@ def conv2d(x: jax.Array, w: Any, policy: PolicyLike = None, *,
     route, which preserves exact GEMM-engine semantics per backend.
     ``policy=None`` consults the registered "float" backend's conv slot
     (same extension point as GEMMs) before taking the im2col route.
+
+    ``x`` may be the NHWC activation wire format (blocks per
+    (pixel, channel-chunk)); ``out_policy=`` returns it — see
+    :func:`gemm`.  Chained convs on the pallas backend hand ``{"m","s"}``
+    activations layer to layer with no dequantized f32 tensor in HBM.
     """
     if isinstance(policy, _plan_cls()):
         return policy.conv2d(x, w, path=path, stride=stride,
-                             padding=padding, key=key)
+                             padding=padding, key=key,
+                             out_policy=out_policy)
     return conv_and_tap(x, w, resolve_policy(policy, path), stride,
-                        padding, key, path=path)
+                        padding, key, path=path, out_policy=out_policy)
 
 
-def conv2d_im2col(x: jax.Array, w: Any, pol, stride: int = 1,
-                  padding: str = "SAME", key=None) -> jax.Array:
+def conv2d_im2col(x: Any, w: Any, pol, stride: int = 1,
+                  padding: str = "SAME", key=None,
+                  out_policy=None) -> Any:
     """The materialized-im2col route: paper Fig. 1's matrix form, lowered
     through the GEMM engine (so backend selection, prequant handling, and
     fallbacks behave exactly as for any other GEMM).  :func:`conv2d`'s
@@ -201,7 +340,8 @@ def conv2d_im2col(x: jax.Array, w: Any, pol, stride: int = 1,
     force this route against the fused kernel.  ``pol`` is an
     already-resolved BFPPolicy or None, not a PolicyMap.  Does not emit
     tap events (the :func:`conv2d` entry does, once per conv site)."""
-    return _conv_im2col_exec(x, w, pol, stride, padding, key)[0]
+    return _conv_im2col_exec(x, w, pol, stride, padding, key,
+                             out_policy=out_policy)[0]
 
 
 def prequantize(params: Any, policy: PolicyLike) -> Any:

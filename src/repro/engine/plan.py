@@ -34,12 +34,14 @@ resolution against the original policy — correct, just not pre-bound;
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import types
 from typing import Any, Dict, Iterable, Optional, Tuple, Union
 
 import jax
 
+from repro.core.bfp import Rounding, Scheme
 from repro.core.packed import is_packed, unpack_prequant
 from repro.core.policy import BFPPolicy
 from repro.core.prequant import (_path_keys, cnn_rule_path,
@@ -95,12 +97,17 @@ class Plan:
     """
 
     def __init__(self, sites: Dict[str, Site], params: Any,
-                 policy: PolicyLike, strict: bool = False):
+                 policy: PolicyLike, strict: bool = False,
+                 tune_cache: Any = None):
         self._sites = dict(sites)
         self.sites = types.MappingProxyType(self._sites)
         self.params = params
         self.policy = policy
         self.strict = strict
+        #: TuneCache attached at bind time (``bind(..., tune_cache=)``):
+        #: every bound execution runs with it active, so kernels launch
+        #: with the autotuned tiles for their (shape, L, target) site
+        self.tune_cache = tune_cache
         #: per-plan fallback-warning dedup for unbound-path dispatch, so
         #: one plan's downgrades never mute another's
         self._warned: set = set()
@@ -128,27 +135,54 @@ class Plan:
 
     # -- bound executions (execute + tap shared with the per-call shims) ----
 
-    def gemm(self, x: jax.Array, w: Any, *, path: Optional[str] = None,
-             key: Optional[jax.Array] = None) -> jax.Array:
-        site = self._sites.get(path)
-        if site is not None and site.kind == "gemm":
-            return gemm_and_tap(x, w, site.policy, key,
-                                backend=site.backend, path=path)
-        # unbound path: legacy per-call resolution (strict kept)
-        return gemm_and_tap(x, w, resolve_policy(self.policy, path), key,
-                            strict=self.strict, path=path,
-                            warned=self._warned)
+    def _tuned(self):
+        """Context activating this plan's tune cache (no-op when none)."""
+        if self.tune_cache is None:
+            return contextlib.nullcontext()
+        from repro.tune.cache import use_cache
+        return use_cache(self.tune_cache)
 
-    def conv2d(self, x: jax.Array, w: Any, *, path: Optional[str] = None,
-               stride: int = 1, padding: str = "SAME",
-               key: Optional[jax.Array] = None) -> jax.Array:
+    def out_policy_for(self, path: Optional[str]) -> Optional[BFPPolicy]:
+        """The resolved policy for ``path`` IF its execution would
+        quantize its input to the activation wire format — i.e. the
+        ``out_policy=`` the PRODUCING layer should pass so the handoff
+        skips the dequantized-f32 round-trip.  None when ``path`` is
+        float, doesn't quantize inputs, or its input quantization isn't
+        the wire format (non-TILED, no block, stochastic, L_I > 8)."""
+        pol = self.resolve(path)
+        if pol is None or not pol.quantize_inputs:
+            return None
+        if (pol.scheme is not Scheme.TILED or not pol.block_k
+                or pol.rounding is not Rounding.ROUND or pol.l_i > 8):
+            return None
+        return pol
+
+    def gemm(self, x: Any, w: Any, *, path: Optional[str] = None,
+             key: Optional[jax.Array] = None, out_policy=None) -> Any:
         site = self._sites.get(path)
-        if site is not None and site.kind == "conv":
-            return conv_and_tap(x, w, site.policy, stride, padding, key,
-                                backend=site.backend, path=path)
-        return conv_and_tap(x, w, resolve_policy(self.policy, path),
-                            stride, padding, key, strict=self.strict,
-                            path=path, warned=self._warned)
+        with self._tuned():
+            if site is not None and site.kind == "gemm":
+                return gemm_and_tap(x, w, site.policy, key,
+                                    backend=site.backend, path=path,
+                                    out_policy=out_policy)
+            # unbound path: legacy per-call resolution (strict kept)
+            return gemm_and_tap(x, w, resolve_policy(self.policy, path),
+                                key, strict=self.strict, path=path,
+                                warned=self._warned, out_policy=out_policy)
+
+    def conv2d(self, x: Any, w: Any, *, path: Optional[str] = None,
+               stride: int = 1, padding: str = "SAME",
+               key: Optional[jax.Array] = None, out_policy=None) -> Any:
+        site = self._sites.get(path)
+        with self._tuned():
+            if site is not None and site.kind == "conv":
+                return conv_and_tap(x, w, site.policy, stride, padding,
+                                    key, backend=site.backend, path=path,
+                                    out_policy=out_policy)
+            return conv_and_tap(x, w, resolve_policy(self.policy, path),
+                                stride, padding, key, strict=self.strict,
+                                path=path, warned=self._warned,
+                                out_policy=out_policy)
 
     def jit_forward(self, apply_fn):
         """A jitted ``apply_fn(plan.params, x, plan)``, cached per
@@ -248,7 +282,7 @@ def _discover_sites(params: Any, tree: str):
 def bind(params: Any, policy: PolicyLike,
          model_paths: Optional[Iterable[Union[str, Tuple[str, str]]]] = None,
          *, tree: str = "auto", strict: bool = False,
-         prequantize: bool = True) -> Plan:
+         prequantize: bool = True, tune_cache: Any = None) -> Plan:
     """Bind ``policy`` to a model's parameters: one walk, one Plan.
 
     Args:
@@ -268,12 +302,20 @@ def bind(params: Any, policy: PolicyLike,
       prequantize: convert eligible weight leaves to the ``{"m", "s"}``
         wire format (set False to bind dispatch only, e.g. when the
         caller already pre-quantized under a different policy).
+      tune_cache: a :class:`repro.tune.TuneCache` (or a path string —
+        loaded here, missing file = empty cache) of autotuned tile
+        winners; the plan activates it around every bound execution so
+        kernels launch with tuned tiles (``python -m repro.tune`` fills
+        one for the canonical layers).
 
     Raises KeyError for policies naming unknown backends, and
     :class:`repro.engine.backends.BackendUnsupportedError` under
     ``strict`` when a requested backend cannot honour its policy.
     """
     _validate_policy_backends(policy)
+    if isinstance(tune_cache, str):
+        from repro.tune.cache import TuneCache
+        tune_cache = TuneCache.load(tune_cache)
     # packed serving artifacts (checkpoint restore(packed="keep")) unpack
     # straight into {"m", "s"} sidecars here — never through float
     params = unpack_packed(params)
@@ -332,4 +374,4 @@ def bind(params: Any, policy: PolicyLike,
                 fb = be.name != pol.backend_name
             sites[path] = Site(path, k or "gemm", pol, be, fb)
 
-    return Plan(sites, qparams, policy, strict)
+    return Plan(sites, qparams, policy, strict, tune_cache=tune_cache)

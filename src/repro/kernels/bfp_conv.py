@@ -14,7 +14,27 @@ rows **in VMEM**:
         int8 x int8 -> int32 MXU dot, rescale 2^(e_x-(L_I-2))*2^(e_w-(L_W-2))
         fp32 accumulate (sequential over K-tiles, same order as the GEMM
         kernel -> bit-identical to im2col + bfp_matmul_pallas)
-    fp32 out [1, t_oh, OW, bn] tile --> HBM
+    fp32 out [1, t_oh, OW, bn] tile --> HBM   (or {"m","s"} via epilogue)
+
+Dot modes, software pipelining, prequant activations, and the epilogue
+requantizer all follow :mod:`repro.kernels.bfp_matmul` (one shared
+``resolve_dot_impl`` / ``_block_format`` / ``_tile_dot``):
+
+* ``dot_impl``: int8 (MXU-native), int32 (L>8 / legacy), f32 (bit-exact
+  under the 2^24 bound, the fast interpret path) — all bit-identical.
+* ``pipeline=True`` skews the static K loop: the quantize of tile t+1 is
+  issued before the dot of tile t, so the VPU block-format and the MXU
+  dot have no data dependence and Mosaic can overlap them.  Accumulation
+  order is unchanged — results stay bit-identical.
+* Activation-prequant input (``xm`` int8 NHWC + ``xs`` per-(pixel,
+  C-chunk) steps): requires ``bk | C``, which makes every patch-row
+  K-tile exactly one (input pixel, channel-chunk) block — the patch
+  gather permutes whole blocks, so consuming the producer's epilogue
+  output is bit-identical to quantizing f32 patches inline.
+* Epilogue requantize (``out_bits``/``out_block``): emits int8 mantissas
+  + steps per (output pixel, out_block-channel-chunk) — exactly the
+  activation blocks the NEXT conv (with block_k = out_block) would form,
+  so conv->conv chains skip the f32 HBM round-trip bit-identically.
 
 The K-order is the repo-wide HWIO-major conv GEMM view
 (core.conv_utils): k = (di*kw + dj)*C + c.  Because C is innermost and
@@ -42,7 +62,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.bfp_matmul import _block_format
+from repro.kernels.bfp_matmul import (_block_format, _mantissa_dtype,
+                                      _tile_dot, resolve_dot_impl)
 
 
 def _patch_rows(x_ref, *, kh: int, kw: int, stride: int, t_oh: int,
@@ -70,43 +91,101 @@ def _patch_rows(x_ref, *, kh: int, kw: int, stride: int, t_oh: int,
     return patches
 
 
-def _bfp_conv_kernel(x_ref, w_ref, o_ref, *, kh, kw, stride, t_oh, ow,
-                     bk, n_k, l_i, l_w):
-    """x_ref [1,Hp,Wp,C], w_ref [Kp,bn] float GEMM view -> o_ref
-    [1,t_oh,OW,bn].  Both operands quantized in-kernel per K-tile."""
-    patches = _patch_rows(x_ref, kh=kh, kw=kw, stride=stride, t_oh=t_oh,
-                          ow=ow, kp=n_k * bk)
-    acc = jnp.zeros((t_oh * ow, w_ref.shape[1]), jnp.float32)
-    for t in range(n_k):
-        mx, sx = _block_format(patches[:, t * bk:(t + 1) * bk], l_i, axis=1)
-        mw, sw = _block_format(w_ref[t * bk:(t + 1) * bk, :], l_w, axis=0)
-        part = jax.lax.dot(mx.astype(jnp.int32), mw.astype(jnp.int32),
-                           preferred_element_type=jnp.int32)
-        acc = acc + part.astype(jnp.float32) * (sx * sw)
-    o_ref[...] = acc.reshape(1, t_oh, ow, -1)
+def _make_conv_kernel(*, kh, kw, stride, t_oh, ow, bk, n_k, l_i, l_w,
+                      x_pq: bool, w_pq: bool, mode: str, pipeline: bool,
+                      out_q):
+    """Build the conv kernel body for one static configuration.
 
+    Ref order: x side (1 or 2 refs), w side (1 or 2), out (1 or 2).
+    """
+    x_dt = _mantissa_dtype(mode, l_i, x_pq)
+    w_dt = _mantissa_dtype(mode, l_w, w_pq)
 
-def _bfp_conv_prequant_kernel(x_ref, wm_ref, ws_ref, o_ref, *, kh, kw,
-                              stride, t_oh, ow, bk, n_k, l_i):
-    """Prequant variant: wm_ref [K,bn] int8 mantissas + ws_ref [n_k,bn]
-    power-of-two step rows (the {"m","s"} wire format lowered to the conv
-    GEMM view).  Only the activation side quantizes in-kernel; ws IS the
-    step the inline quantizer would compute, so this path is bit-exact vs
-    the inline kernel."""
-    patches = _patch_rows(x_ref, kh=kh, kw=kw, stride=stride, t_oh=t_oh,
-                          ow=ow, kp=n_k * bk)
-    acc = jnp.zeros((t_oh * ow, wm_ref.shape[1]), jnp.float32)
-    for t in range(n_k):
-        mx, sx = _block_format(patches[:, t * bk:(t + 1) * bk], l_i, axis=1)
-        mw = wm_ref[t * bk:(t + 1) * bk, :].astype(jnp.int32)
-        part = jax.lax.dot(mx.astype(jnp.int32), mw,
-                           preferred_element_type=jnp.int32)
-        acc = acc + part.astype(jnp.float32) * (sx * ws_ref[t:t + 1, :])
-    o_ref[...] = acc.reshape(1, t_oh, ow, -1)
+    def kernel(*refs):
+        it = iter(refs)
+        if x_pq:
+            xm_ref, xs_ref = next(it), next(it)
+        else:
+            x_ref = next(it)
+        if w_pq:
+            wm_ref, ws_ref = next(it), next(it)
+        else:
+            w_ref = next(it)
+        if out_q is not None:
+            om_ref, os_ref = next(it), next(it)
+        else:
+            o_ref = next(it)
+
+        if x_pq:
+            # bk | C (checked): each patch K-tile is exactly one (input
+            # pixel, channel-chunk) block, so the mantissa/step patches
+            # line up tile-for-tile with inline quantization.
+            pm = _patch_rows(xm_ref, kh=kh, kw=kw, stride=stride,
+                             t_oh=t_oh, ow=ow, kp=n_k * bk).astype(x_dt)
+            ps = _patch_rows(xs_ref, kh=kh, kw=kw, stride=stride,
+                             t_oh=t_oh, ow=ow, kp=n_k)
+        else:
+            patches = _patch_rows(x_ref, kh=kh, kw=kw, stride=stride,
+                                  t_oh=t_oh, ow=ow, kp=n_k * bk)
+
+        def x_tile(t):
+            if x_pq:
+                return pm[:, t * bk:(t + 1) * bk], ps[:, t:t + 1]
+            return _block_format(patches[:, t * bk:(t + 1) * bk], l_i,
+                                 axis=1, mdtype=x_dt)
+
+        def w_tile(t):
+            if w_pq:
+                # ws IS the step the inline quantizer would compute, so
+                # the prequant path is bit-exact vs the inline kernel.
+                return (wm_ref[t * bk:(t + 1) * bk, :].astype(w_dt),
+                        ws_ref[t:t + 1, :])
+            return _block_format(w_ref[t * bk:(t + 1) * bk, :], l_w,
+                                 axis=0, mdtype=w_dt)
+
+        bn = (wm_ref if w_pq else w_ref).shape[1]
+        acc = jnp.zeros((t_oh * ow, bn), jnp.float32)
+        if pipeline:
+            # Skewed issue order: quantize tile t+1 BEFORE the dot of
+            # tile t — the block-format (VPU) and the dot (MXU) have no
+            # data dependence, so Mosaic overlaps them.  Accumulation
+            # order is unchanged (0..n_k-1): bit-identical results.
+            cur = (x_tile(0), w_tile(0))
+            for t in range(n_k):
+                nxt = (x_tile(t + 1), w_tile(t + 1)) if t + 1 < n_k \
+                    else None
+                (mx, sx), (mw, sw) = cur
+                acc = acc + _tile_dot(mx, mw, mode) * (sx * sw)
+                cur = nxt
+        else:
+            for t in range(n_k):
+                mx, sx = x_tile(t)
+                mw, sw = w_tile(t)
+                acc = acc + _tile_dot(mx, mw, mode) * (sx * sw)
+
+        if out_q is None:
+            o_ref[...] = acc.reshape(1, t_oh, ow, -1)
+        else:
+            # Epilogue: block-format per (output pixel, out_block
+            # channel chunk) — identical math, identical accumulator
+            # values as the two-step store-f32-then-prequant_act path.
+            ob, bq = out_q
+            ms, ss = [], []
+            for t in range(bn // bq):
+                m, step = _block_format(acc[:, t * bq:(t + 1) * bq], ob,
+                                        axis=1, mdtype=jnp.int8)
+                ms.append(m)
+                ss.append(step)
+            om_ref[...] = jnp.concatenate(ms, axis=1).reshape(
+                1, t_oh, ow, -1)
+            os_ref[...] = jnp.concatenate(ss, axis=1).reshape(
+                1, t_oh, ow, -1)
+
+    return kernel
 
 
 def _check_conv(x_shape, kp, ocp, *, kh, kw, stride, t_oh, ohp, ow, bk,
-                bn, l_sum):
+                bn, l_sum, out_q=None):
     b, hp, wp, c = x_shape
     if ohp % t_oh or ocp % bn or kp % bk:
         raise ValueError(f"tiles (t_oh={t_oh}, bn={bn}, bk={bk}) must "
@@ -121,84 +200,194 @@ def _check_conv(x_shape, kp, ocp, *, kh, kw, stride, t_oh, ohp, ow, bk,
     # Paper Fig. 2 accumulator sizing: int32 must hold bk products.
     if l_sum + math.ceil(math.log2(bk)) > 32:
         raise ValueError(f"bk={bk} overflows int32 for L_I+L_W={l_sum}")
+    if out_q is not None:
+        out_bits, out_block = out_q
+        if not 2 <= out_bits <= 8:
+            raise ValueError(f"epilogue out_bits={out_bits} must be 2..8 "
+                             f"(int8 mantissa wire format)")
+        if bn % out_block:
+            raise ValueError(f"epilogue out_block={out_block} must divide "
+                             f"bn={bn}")
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "kh", "kw", "stride", "t_oh", "ohp", "ow", "bn", "bk", "l_i", "l_w",
-    "interpret"))
+def _out_q(out_bits, out_block, bn):
+    if out_bits is None:
+        return None
+    return (out_bits, out_block if out_block is not None else bn)
+
+
+def _conv_call(x_ops, w_ops, *, kh, kw, stride, t_oh, ohp, ow, bn, bk,
+               l_i, l_w, interpret, dot_impl, pipeline, out_q):
+    """Assemble specs and launch; ``x_ops`` is (x,) or (xm, xs) NHWC,
+    ``w_ops`` is (w2d,) or (wm2d, ws) GEMM view."""
+    x_pq, w_pq = len(x_ops) == 2, len(w_ops) == 2
+    b, hp, wp, c = x_ops[0].shape
+    kp, ocp = w_ops[0].shape
+    n_k = kp // bk
+    _check_conv(x_ops[0].shape, kp, ocp, kh=kh, kw=kw, stride=stride,
+                t_oh=t_oh, ohp=ohp, ow=ow, bk=bk, bn=bn, l_sum=l_i + l_w,
+                out_q=out_q)
+    mode = resolve_dot_impl(dot_impl, l_i=l_i, l_w=l_w, bk=bk,
+                            interpret=interpret, x_pq=x_pq, w_pq=w_pq)
+
+    in_specs = [pl.BlockSpec((1, hp, wp, c),
+                             lambda bb, i, j: (bb, 0, 0, 0))]
+    if x_pq:
+        in_specs.append(pl.BlockSpec((1, hp, wp, c // bk),
+                                     lambda bb, i, j: (bb, 0, 0, 0)))
+    in_specs.append(pl.BlockSpec((kp, bn), lambda bb, i, j: (0, j)))
+    if w_pq:
+        in_specs.append(pl.BlockSpec((n_k, bn), lambda bb, i, j: (0, j)))
+
+    if out_q is None:
+        out_specs = pl.BlockSpec((1, t_oh, ow, bn),
+                                 lambda bb, i, j: (bb, i, 0, j))
+        out_shape = jax.ShapeDtypeStruct((b, ohp, ow, ocp), jnp.float32)
+    else:
+        bq = out_q[1]
+        out_specs = [
+            pl.BlockSpec((1, t_oh, ow, bn), lambda bb, i, j: (bb, i, 0, j)),
+            pl.BlockSpec((1, t_oh, ow, bn // bq),
+                         lambda bb, i, j: (bb, i, 0, j)),
+        ]
+        out_shape = [
+            jax.ShapeDtypeStruct((b, ohp, ow, ocp), jnp.int8),
+            jax.ShapeDtypeStruct((b, ohp, ow, ocp // bq), jnp.float32),
+        ]
+
+    kernel = _make_conv_kernel(kh=kh, kw=kw, stride=stride, t_oh=t_oh,
+                               ow=ow, bk=bk, n_k=n_k, l_i=l_i, l_w=l_w,
+                               x_pq=x_pq, w_pq=w_pq, mode=mode,
+                               pipeline=pipeline, out_q=out_q)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, ohp // t_oh, ocp // bn),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*x_ops, *w_ops)
+
+
+_STATIC = ("kh", "kw", "stride", "t_oh", "ohp", "ow", "bn", "bk", "l_i",
+           "l_w", "interpret", "dot_impl", "pipeline", "out_bits",
+           "out_block")
+
+
+@functools.partial(jax.jit, static_argnames=_STATIC)
 def bfp_conv2d_pallas(x: jax.Array, w2d: jax.Array, *, kh: int, kw: int,
                       stride: int, t_oh: int, ohp: int, ow: int, bn: int,
                       bk: int, l_i: int = 8, l_w: int = 8,
-                      interpret: bool = False) -> jax.Array:
+                      interpret: bool = False, dot_impl: str = "auto",
+                      pipeline: bool = True, out_bits: int | None = None,
+                      out_block: int | None = None):
     """Fused implicit-im2col BFP conv.
 
     x: pre-padded NHWC [B, Hp, Wp, C] (conv padding + alignment, ops.py
     does this); w2d: conv GEMM view [Kp, OCp], K zero-padded to a ``bk``
     multiple and OC to a ``bn`` multiple.  Returns [B, OHp, OW, OCp]
-    fp32 (callers slice OH/OC).  ``bk`` IS the BFP block — Scheme.TILED
-    with block_k = bk, bit-identical to im2col + bfp_matmul_pallas
-    (zero K-padding is inert: it changes no block amax and adds zero
-    products, exactly as in ops.bfp_matmul's padding).
+    fp32 (callers slice OH/OC) — or, with ``out_bits`` set, the epilogue
+    pair (int8 mantissa NHWC, f32 steps [..., OCp/out_block]).  ``bk`` IS
+    the BFP block — Scheme.TILED with block_k = bk, bit-identical to
+    im2col + bfp_matmul_pallas (zero K-padding is inert: it changes no
+    block amax and adds zero products, exactly as in ops.bfp_matmul's
+    padding).
     """
-    b, hp, wp, c = x.shape
-    kp, ocp = w2d.shape
-    n_k = kp // bk
-    _check_conv(x.shape, kp, ocp, kh=kh, kw=kw, stride=stride, t_oh=t_oh,
-                ohp=ohp, ow=ow, bk=bk, bn=bn, l_sum=l_i + l_w)
-    kernel = functools.partial(_bfp_conv_kernel, kh=kh, kw=kw,
-                               stride=stride, t_oh=t_oh, ow=ow, bk=bk,
-                               n_k=n_k, l_i=l_i, l_w=l_w)
-    return pl.pallas_call(
-        kernel,
-        grid=(b, ohp // t_oh, ocp // bn),
-        in_specs=[
-            pl.BlockSpec((1, hp, wp, c), lambda bb, i, j: (bb, 0, 0, 0)),
-            pl.BlockSpec((kp, bn), lambda bb, i, j: (0, j)),
-        ],
-        out_specs=pl.BlockSpec((1, t_oh, ow, bn),
-                               lambda bb, i, j: (bb, i, 0, j)),
-        out_shape=jax.ShapeDtypeStruct((b, ohp, ow, ocp), jnp.float32),
-        interpret=interpret,
-    )(x, w2d)
+    return _conv_call((x,), (w2d,), kh=kh, kw=kw, stride=stride,
+                      t_oh=t_oh, ohp=ohp, ow=ow, bn=bn, bk=bk, l_i=l_i,
+                      l_w=l_w, interpret=interpret, dot_impl=dot_impl,
+                      pipeline=pipeline,
+                      out_q=_out_q(out_bits, out_block, bn))
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "kh", "kw", "stride", "t_oh", "ohp", "ow", "bn", "bk", "l_i", "l_w",
-    "interpret"))
+@functools.partial(jax.jit, static_argnames=_STATIC)
 def bfp_conv2d_prequant_pallas(x: jax.Array, wm2d: jax.Array,
                                ws: jax.Array, *, kh: int, kw: int,
                                stride: int, t_oh: int, ohp: int, ow: int,
                                bn: int, bk: int, l_i: int = 8,
-                               l_w: int = 8,
-                               interpret: bool = False) -> jax.Array:
+                               l_w: int = 8, interpret: bool = False,
+                               dot_impl: str = "auto",
+                               pipeline: bool = True,
+                               out_bits: int | None = None,
+                               out_block: int | None = None):
     """Prequant fused conv: weights arrive as int8 GEMM-view mantissas
     [K, OCp] + power-of-two step sidecar [K//bk, OCp] (K a ``bk``
     multiple by the wire-format contract).  ``l_w`` only sizes the
     overflow check — weight quantization already happened offline."""
-    b, hp, wp, c = x.shape
     kp, ocp = wm2d.shape
     if wm2d.dtype != jnp.int8:
         raise ValueError(f"prequant conv kernel streams int8 mantissas, "
                          f"got {wm2d.dtype}")
-    n_k = kp // bk
-    if ws.shape != (n_k, ocp):
-        raise ValueError(f"scale sidecar {ws.shape} != {(n_k, ocp)} "
+    if ws.shape != (kp // bk, ocp):
+        raise ValueError(f"scale sidecar {ws.shape} != {(kp // bk, ocp)} "
                          f"for bk={bk}")
-    _check_conv(x.shape, kp, ocp, kh=kh, kw=kw, stride=stride, t_oh=t_oh,
-                ohp=ohp, ow=ow, bk=bk, bn=bn, l_sum=l_i + l_w)
-    kernel = functools.partial(_bfp_conv_prequant_kernel, kh=kh, kw=kw,
-                               stride=stride, t_oh=t_oh, ow=ow, bk=bk,
-                               n_k=n_k, l_i=l_i)
-    return pl.pallas_call(
-        kernel,
-        grid=(b, ohp // t_oh, ocp // bn),
-        in_specs=[
-            pl.BlockSpec((1, hp, wp, c), lambda bb, i, j: (bb, 0, 0, 0)),
-            pl.BlockSpec((kp, bn), lambda bb, i, j: (0, j)),
-            pl.BlockSpec((n_k, bn), lambda bb, i, j: (0, j)),
-        ],
-        out_specs=pl.BlockSpec((1, t_oh, ow, bn),
-                               lambda bb, i, j: (bb, i, 0, j)),
-        out_shape=jax.ShapeDtypeStruct((b, ohp, ow, ocp), jnp.float32),
-        interpret=interpret,
-    )(x, wm2d, ws)
+    return _conv_call((x,), (wm2d, ws), kh=kh, kw=kw, stride=stride,
+                      t_oh=t_oh, ohp=ohp, ow=ow, bn=bn, bk=bk, l_i=l_i,
+                      l_w=l_w, interpret=interpret, dot_impl=dot_impl,
+                      pipeline=pipeline,
+                      out_q=_out_q(out_bits, out_block, bn))
+
+
+@functools.partial(jax.jit, static_argnames=_STATIC)
+def bfp_conv2d_xprequant_pallas(xm: jax.Array, xs: jax.Array,
+                                w2d: jax.Array, *, kh: int, kw: int,
+                                stride: int, t_oh: int, ohp: int, ow: int,
+                                bn: int, bk: int, l_i: int = 8,
+                                l_w: int = 8, interpret: bool = False,
+                                dot_impl: str = "auto",
+                                pipeline: bool = True,
+                                out_bits: int | None = None,
+                                out_block: int | None = None):
+    """Prequant ACTIVATIONS: xm int8 NHWC [B,Hp,Wp,C] + xs f32 steps
+    [B,Hp,Wp,C/bk] (per input pixel and channel chunk — the conv
+    epilogue wire format).  Requires ``bk | C`` so patch K-tiles ==
+    activation blocks; ``l_i`` only sizes the overflow check."""
+    c = xm.shape[3]
+    if xm.dtype != jnp.int8:
+        raise ValueError(f"activation-prequant conv kernel streams int8 "
+                         f"mantissas, got {xm.dtype}")
+    if c % bk:
+        raise ValueError(f"activation prequant requires bk | C, got "
+                         f"bk={bk}, C={c}")
+    if xs.shape != (*xm.shape[:3], c // bk):
+        raise ValueError(f"activation sidecar {xs.shape} != "
+                         f"{(*xm.shape[:3], c // bk)} for bk={bk}")
+    return _conv_call((xm, xs), (w2d,), kh=kh, kw=kw, stride=stride,
+                      t_oh=t_oh, ohp=ohp, ow=ow, bn=bn, bk=bk, l_i=l_i,
+                      l_w=l_w, interpret=interpret, dot_impl=dot_impl,
+                      pipeline=pipeline,
+                      out_q=_out_q(out_bits, out_block, bn))
+
+
+@functools.partial(jax.jit, static_argnames=_STATIC)
+def bfp_conv2d_xwprequant_pallas(xm: jax.Array, xs: jax.Array,
+                                 wm2d: jax.Array, ws: jax.Array, *,
+                                 kh: int, kw: int, stride: int, t_oh: int,
+                                 ohp: int, ow: int, bn: int, bk: int,
+                                 l_i: int = 8, l_w: int = 8,
+                                 interpret: bool = False,
+                                 dot_impl: str = "auto",
+                                 pipeline: bool = True,
+                                 out_bits: int | None = None,
+                                 out_block: int | None = None):
+    """Both sides prequantized — the steady state of a conv->conv chain
+    on a bound plan: no in-kernel quantization at all."""
+    c = xm.shape[3]
+    kp, ocp = wm2d.shape
+    if xm.dtype != jnp.int8 or wm2d.dtype != jnp.int8:
+        raise ValueError(f"prequant kernels stream int8 mantissas, got "
+                         f"{xm.dtype} / {wm2d.dtype}")
+    if c % bk:
+        raise ValueError(f"activation prequant requires bk | C, got "
+                         f"bk={bk}, C={c}")
+    if xs.shape != (*xm.shape[:3], c // bk):
+        raise ValueError(f"activation sidecar {xs.shape} != "
+                         f"{(*xm.shape[:3], c // bk)} for bk={bk}")
+    if ws.shape != (kp // bk, ocp):
+        raise ValueError(f"scale sidecar {ws.shape} != {(kp // bk, ocp)} "
+                         f"for bk={bk}")
+    return _conv_call((xm, xs), (wm2d, ws), kh=kh, kw=kw, stride=stride,
+                      t_oh=t_oh, ohp=ohp, ow=ow, bn=bn, bk=bk, l_i=l_i,
+                      l_w=l_w, interpret=interpret, dot_impl=dot_impl,
+                      pipeline=pipeline,
+                      out_q=_out_q(out_bits, out_block, bn))

@@ -2,30 +2,56 @@
 
 Handles shape padding to tile multiples, CPU-interpret dispatch (this
 container has no TPU; ``interpret=True`` runs the kernel body in Python),
-and policy plumbing.  The contract is identical to the emulated path in
-``repro.core.bfp_dot`` with Scheme.TILED and ``block_k == bk`` — tests
-assert all three (kernel, ref oracle, core library) agree.  Model code
-reaches these through ``repro.engine`` (backend "pallas"), never
-directly.
+tile selection (autotune cache -> fallback table), and policy plumbing.
+The contract is identical to the emulated path in ``repro.core.bfp_dot``
+with Scheme.TILED and ``block_k == bk`` — tests assert all three
+(kernel, ref oracle, core library) agree.  Model code reaches these
+through ``repro.engine`` (backend "pallas"), never directly.
+
+ISSUE 6 additions, all bit-preserving:
+
+* Tile selection consults the ACTIVE autotune cache
+  (``repro.tune.set_cache`` / a Plan's bound cache) before the fallback
+  table; explicit ``tiles=`` overrides both (the autotuner's measuring
+  hook).
+* ``x2d``/``x`` may be an activation-prequant dict ``{"m","s"}``
+  (``core.prequant.prequant_act`` wire: int8 mantissa + per-(row,
+  K-chunk) steps) — produced by a previous layer's fused epilogue; the
+  kernel consumes it without dequantizing.
+* ``out_policy=`` requests epilogue requantization: the kernel emits
+  the NEXT layer's activation-prequant input straight from the fp32
+  accumulator when the blocks line up (``out_policy.block_k`` divides
+  both N and the N tile); otherwise the wrapper falls back to the
+  bit-identical two-step (store f32, ``prequant_act``) — callers always
+  get the same dict either way.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Any, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.conv_utils import conv_geometry, conv_weight_matrix
 from repro.core.policy import BFPPolicy
+from repro.core.prequant import act_block, is_prequant, prequant_act
 from repro.kernels.bfp_conv import (bfp_conv2d_pallas,
-                                    bfp_conv2d_prequant_pallas)
+                                    bfp_conv2d_prequant_pallas,
+                                    bfp_conv2d_xprequant_pallas,
+                                    bfp_conv2d_xwprequant_pallas)
 from repro.kernels.bfp_matmul import (bfp_matmul_pallas,
-                                      bfp_matmul_prequant_pallas)
+                                      bfp_matmul_prequant_pallas,
+                                      bfp_matmul_xprequant_pallas,
+                                      bfp_matmul_xwprequant_pallas)
 from repro.kernels.bfp_quantize import bfp_quantize_pallas
+from repro.tune import cache as _tune
+from repro.tune.tables import aligned_tile, conv_row_tile, fallback_tiles
 
 __all__ = ["bfp_matmul", "bfp_matmul_prequant", "bfp_conv2d",
            "bfp_conv2d_prequant", "bfp_quantize", "default_tiles",
            "aligned_tile"]
+
+ActOrArray = Union[jax.Array, dict]
 
 
 def _on_tpu() -> bool:
@@ -40,66 +66,120 @@ def _pad_to(x: jax.Array, mult: Tuple[int, ...],
     return x
 
 
-def _pow2_ge(d: int) -> int:
-    """Smallest power of two >= d (d >= 1)."""
-    return 1 << max(0, d - 1).bit_length()
-
-
-def aligned_tile(d: int, cap: int = 128) -> int:
-    """THE power-of-two-aligned tile floor, shared by every wrapper:
-    next power of two >= d, floored at 8 (sublane minimum) and capped at
-    ``cap`` (the MXU dimension, or a bandwidth-friendly multiple of it).
-    Small/odd problem dims pad to the NEAREST aligned tile, not a full
-    cap."""
-    return min(cap, max(8, _pow2_ge(d)))
-
-
 def default_tiles(b: int, k: int, n: int, block_k: Optional[int],
                   l_sum: int = 16) -> Tuple[int, int, int]:
-    """Pick MXU-aligned tile sizes for a (b, k) x (k, n) problem.
+    """MXU-aligned default tiles — delegates to THE shared fallback
+    table (:func:`repro.tune.tables.fallback_tiles`), the single default
+    path for fused and prequant kernels alike (ISSUE 6)."""
+    return fallback_tiles(b, k, n, block_k, l_sum)
 
-    bm/bn: 128 (the MXU dimension) capped below at 8 and shrunk to the
-    next power of two when the problem dimension is smaller — small or
-    odd shapes pad to the NEAREST aligned tile instead of a full 128.
-    bk: the BFP block size when given (block == K tile by construction);
-    otherwise 512 for deep contractions and 128 for shallow ones, capped
-    by the int32 overflow bound 2**(32 - l_sum) (paper Fig. 2 sizing) so
-    auto-picked tiles are always accumulation-safe for the policy's
-    mantissa widths.
-    """
-    bm = aligned_tile(b)
-    bn = aligned_tile(n)
-    if block_k:
-        bk = block_k
+
+def _gemm_tiles(b: int, k: int, n: int, policy: BFPPolicy,
+                interpret: bool, tiles, bk_pin: Optional[int]):
+    """(bm, bn, bk) for a GEMM site: explicit ``tiles`` > active tune
+    cache > fallback table.  ``bk_pin`` (a prequant sidecar's block)
+    overrides whatever bk the source proposed."""
+    if tiles is not None:
+        bm, bn, bk = tiles
     else:
-        bk = 512 if k >= 512 else aligned_tile(k)
-        bk = min(bk, 1 << max(0, 32 - l_sum))   # always accumulation-safe
+        looked = _tune.lookup_tiles("gemm", b, k, n, policy.l_i,
+                                    policy.l_w, policy.block_k, interpret)
+        bm, bn, bk = looked if looked is not None else fallback_tiles(
+            b, k, n, policy.block_k, policy.l_w + policy.l_i)
+    if bk_pin is not None:
+        if tiles is not None and bk != bk_pin:
+            raise ValueError(f"tiles bk={bk} != prequant block {bk_pin}")
+        bk = bk_pin
     return bm, bn, bk
 
 
-def bfp_matmul(x2d: jax.Array, w: jax.Array, policy: BFPPolicy,
-               interpret: Optional[bool] = None) -> jax.Array:
+def _act_ops(x2d: dict, bm: int, bk: int) -> Tuple[jax.Array, jax.Array]:
+    """Pad an activation-prequant dict's pieces for the kernel.  Mantissa
+    rows pad with 0 (inert), step rows with 1.0 (finite, inert)."""
+    xm = _pad_to(x2d["m"], (bm, bk))
+    xs = _pad_to(x2d["s"].astype(jnp.float32), (bm, 1), values=1.0)
+    return xm, xs
+
+
+def _epilogue_cfg(out_policy: Optional[BFPPolicy], n: int, bn: int):
+    """(out_bits, out_block) when the kernel can emit the consumer's
+    activation blocks directly; None -> two-step fallback in the
+    wrapper (bit-identical either way)."""
+    if out_policy is None:
+        return None
+    bq = out_policy.block_k
+    if bq and out_policy.l_i <= 8 and n % bq == 0 and bn % bq == 0:
+        return (out_policy.l_i, bq)
+    return None
+
+
+def _finish_gemm(out, b: int, n: int, out_policy: Optional[BFPPolicy],
+                 fused_q) -> ActOrArray:
+    """Slice padding off; requantize two-step when the epilogue wasn't
+    fused."""
+    if fused_q is not None:
+        m, s = out
+        return {"m": m[:b, :n], "s": s[:b, :n // fused_q[1]]}
+    out = out[:b, :n]
+    if out_policy is not None:
+        return prequant_act(out, out_policy)
+    return out
+
+
+def bfp_matmul(x2d: ActOrArray, w: jax.Array, policy: BFPPolicy,
+               interpret: Optional[bool] = None, *,
+               out_policy: Optional[BFPPolicy] = None,
+               tiles: Optional[Tuple[int, int, int]] = None,
+               dot_impl: str = "auto", pipeline: bool = True) -> ActOrArray:
     """x2d[B,K] @ w[K,N] via the fused Pallas kernel (Scheme.TILED).
 
     Pads every dim to tile multiples (zero K-padding is exact: zero
     mantissas contribute nothing; padded rows/cols are sliced off).
+    ``x2d`` may be an activation-prequant dict (previous layer's
+    epilogue output); ``out_policy`` requests requantized {"m","s"}
+    output for the NEXT layer.  ``dot_impl``/``pipeline`` pass through
+    to the kernel (benchmarks/tests force the legacy ``"int32"`` +
+    unpipelined datapath; every combination is bit-identical).
     """
     if interpret is None:
         interpret = not _on_tpu()
-    b, k = x2d.shape
+    x_pq = is_prequant(x2d)
+    if x_pq:
+        b, k = x2d["m"].shape
+        bk_pin = act_block(x2d)
+        if policy.block_k not in (None, bk_pin):
+            raise ValueError(f"policy.block_k={policy.block_k} != "
+                             f"activation prequant block {bk_pin}")
+    else:
+        b, k = x2d.shape
+        bk_pin = None
     n = w.shape[1]
-    bm, bn, bk = default_tiles(b, k, n, policy.block_k,
-                               policy.l_w + policy.l_i)
-    xp = _pad_to(x2d.astype(jnp.float32), (bm, bk))
+    bm, bn, bk = _gemm_tiles(b, k, n, policy, interpret, tiles, bk_pin)
+    fused_q = _epilogue_cfg(out_policy, n, bn)
+    ob, obk = fused_q if fused_q is not None else (None, None)
     wp = _pad_to(w.astype(jnp.float32), (bk, bn))
-    out = bfp_matmul_pallas(xp, wp, l_i=policy.l_i, l_w=policy.l_w,
-                            bm=bm, bn=bn, bk=bk, interpret=interpret)
-    return out[:b, :n]
+    if x_pq:
+        xm, xs = _act_ops(x2d, bm, bk)
+        out = bfp_matmul_xprequant_pallas(
+            xm, xs, wp, l_i=policy.l_i, l_w=policy.l_w, bm=bm, bn=bn,
+            bk=bk, interpret=interpret, dot_impl=dot_impl,
+            pipeline=pipeline, out_bits=ob, out_block=obk)
+    else:
+        xp = _pad_to(x2d.astype(jnp.float32), (bm, bk))
+        out = bfp_matmul_pallas(
+            xp, wp, l_i=policy.l_i, l_w=policy.l_w, bm=bm, bn=bn, bk=bk,
+            interpret=interpret, dot_impl=dot_impl, pipeline=pipeline,
+            out_bits=ob, out_block=obk)
+    return _finish_gemm(out, b, n, out_policy, fused_q)
 
 
-def bfp_matmul_prequant(x2d: jax.Array, wm: jax.Array, ws: jax.Array,
+def bfp_matmul_prequant(x2d: ActOrArray, wm: jax.Array, ws: jax.Array,
                         policy: BFPPolicy,
-                        interpret: Optional[bool] = None) -> jax.Array:
+                        interpret: Optional[bool] = None, *,
+                        out_policy: Optional[BFPPolicy] = None,
+                        tiles: Optional[Tuple[int, int, int]] = None,
+                        dot_impl: str = "auto",
+                        pipeline: bool = True) -> ActOrArray:
     """x2d[B,K] @ prequant weight via the sidecar-consuming kernel.
 
     ``wm``: int8 mantissa [K, N]; ``ws``: f32 power-of-two steps
@@ -107,100 +187,196 @@ def bfp_matmul_prequant(x2d: jax.Array, wm: jax.Array, ws: jax.Array,
     the kernel K tile, so K needs no padding (it is a bk multiple by
     construction); B and N pad to tile multiples.  Scale padding uses 1.0
     — padded mantissas are zero, so the value is inert but stays finite.
+    ``x2d`` may be an activation-prequant dict with the SAME block size.
     """
     if interpret is None:
         interpret = not _on_tpu()
-    b, k = x2d.shape
+    x_pq = is_prequant(x2d)
+    b, k = (x2d["m"] if x_pq else x2d).shape
     n = wm.shape[1]
     t = ws.shape[0]
     if t == 0 or k % t:
         raise ValueError(f"sidecar {ws.shape} incompatible with K={k}")
-    bk = k // t
-    if policy.block_k not in (None, bk):
+    bk_pin = k // t
+    if policy.block_k not in (None, bk_pin):
         # same contract as the emulated path: a sidecar blocked at bk
         # cannot honour a policy asking for different blocks
         raise ValueError(f"policy.block_k={policy.block_k} != prequant "
-                         f"block {bk}")
-    bm, bn, _ = default_tiles(b, k, n, bk, policy.l_w + policy.l_i)
-    xp = _pad_to(x2d.astype(jnp.float32), (bm, bk))
+                         f"block {bk_pin}")
+    if x_pq and act_block(x2d) != bk_pin:
+        raise ValueError(f"activation prequant block {act_block(x2d)} != "
+                         f"weight prequant block {bk_pin}")
+    bm, bn, bk = _gemm_tiles(b, k, n, policy, interpret, tiles, bk_pin)
+    fused_q = _epilogue_cfg(out_policy, n, bn)
+    ob, obk = fused_q if fused_q is not None else (None, None)
     wmp = _pad_to(wm, (bk, bn))
     wsp = _pad_to(ws.astype(jnp.float32), (1, bn), values=1.0)
-    out = bfp_matmul_prequant_pallas(xp, wmp, wsp, l_i=policy.l_i,
-                                     l_w=policy.l_w, bm=bm, bn=bn, bk=bk,
-                                     interpret=interpret)
-    return out[:b, :n]
+    if x_pq:
+        xm, xs = _act_ops(x2d, bm, bk)
+        out = bfp_matmul_xwprequant_pallas(
+            xm, xs, wmp, wsp, l_i=policy.l_i, l_w=policy.l_w, bm=bm,
+            bn=bn, bk=bk, interpret=interpret, dot_impl=dot_impl,
+            pipeline=pipeline, out_bits=ob, out_block=obk)
+    else:
+        xp = _pad_to(x2d.astype(jnp.float32), (bm, bk))
+        out = bfp_matmul_prequant_pallas(
+            xp, wmp, wsp, l_i=policy.l_i, l_w=policy.l_w, bm=bm, bn=bn,
+            bk=bk, interpret=interpret, dot_impl=dot_impl,
+            pipeline=pipeline, out_bits=ob, out_block=obk)
+    return _finish_gemm(out, b, n, out_policy, fused_q)
 
 
 def _conv_plan(b: int, h: int, w_in: int, c: int, kh: int, kw: int,
-               oc: int, stride: int, padding: str, bk: int):
+               oc: int, stride: int, padding: str, bk: int,
+               t_oh: Optional[int] = None, bn: Optional[int] = None):
     """Static geometry + tiling for the fused conv kernels.
 
     Returns (pads for x, (oh, ow, ohp, t_oh, bn, kp)).  The padded input
     covers conv padding PLUS the kernel's alignment contract
     (Hp >= s*OHp + kh - 1, Wp >= s*OW + kw - 1); extra zero rows/cols are
-    only read by padded output rows, which callers slice off.
+    only read by padded output rows, which callers slice off.  ``t_oh``
+    and ``bn`` override the defaults (autotuned or explicit tiles).
     """
     oh, ow, (pt, pb), (plf, pr) = conv_geometry(h, w_in, kh, kw, stride,
                                                 padding)
-    # enough output rows per program to feed the MXU a >=128-row M tile
-    # when OW is small; one row when OW alone is wide enough
-    t_oh = max(1, min(oh, 128 // max(1, ow)))
+    if t_oh is None:
+        t_oh = conv_row_tile(oh, ow)
+    t_oh = min(t_oh, oh)
     ohp = -(-oh // t_oh) * t_oh
     hp = max(stride * ohp + kh - 1, pt + h + pb)
     wp = max(stride * ow + kw - 1, plf + w_in + pr)
-    bn = aligned_tile(oc)
+    if bn is None:
+        bn = aligned_tile(oc)
     kp = -(-(kh * kw * c) // bk) * bk
     pads = ((0, 0), (pt, hp - h - pt), (plf, wp - w_in - plf), (0, 0))
     return pads, (oh, ow, ohp, t_oh, bn, kp)
 
 
-def bfp_conv2d(x: jax.Array, w_hwio: jax.Array, policy: BFPPolicy,
+def _conv_tiles(rows: int, k: int, oc: int, policy: BFPPolicy,
+                interpret: bool, tiles):
+    """(t_oh, bn) overrides for a conv site: explicit ``tiles`` > active
+    tune cache > None (plan defaults).  Keys on the im2col GEMM view."""
+    if tiles is not None:
+        return tiles
+    looked = _tune.lookup_tiles("conv", rows, k, oc, policy.l_i,
+                                policy.l_w, policy.block_k, interpret)
+    return looked if looked is not None else (None, None)
+
+
+def _conv_epilogue_cfg(out_policy: Optional[BFPPolicy], oc: int, bn: int):
+    if out_policy is None:
+        return None
+    bq = out_policy.block_k
+    if bq and out_policy.l_i <= 8 and oc % bq == 0 and bn % bq == 0:
+        return (out_policy.l_i, bq)
+    return None
+
+
+def _finish_conv(out, oh: int, oc: int,
+                 out_policy: Optional[BFPPolicy], fused_q) -> ActOrArray:
+    if fused_q is not None:
+        m, s = out
+        return {"m": m[:, :oh, :, :oc],
+                "s": s[:, :oh, :, :oc // fused_q[1]]}
+    out = out[:, :oh, :, :oc]
+    if out_policy is not None:
+        return prequant_act(out, out_policy)
+    return out
+
+
+def _conv_x_prequant_check(x: dict, c: int, bk: int, policy: BFPPolicy):
+    bk_act = act_block(x)
+    if policy.block_k not in (None, bk_act):
+        raise ValueError(f"policy.block_k={policy.block_k} != activation "
+                         f"prequant block {bk_act}")
+    if bk_act != bk or c % bk:
+        raise ValueError(f"conv activation prequant needs block_k | C "
+                         f"(block {bk_act}, C={c})")
+
+
+def _pad_act_nhwc(x: dict, pads) -> Tuple[jax.Array, jax.Array]:
+    """Spatial-pad an NHWC activation-prequant dict: mantissa pads 0
+    (inert), steps pad 1.0 (finite, inert — padded pixels' mantissas are
+    all zero)."""
+    xm = jnp.pad(x["m"], pads)
+    xs = jnp.pad(x["s"].astype(jnp.float32), pads, constant_values=1.0)
+    return xm, xs
+
+
+def bfp_conv2d(x: ActOrArray, w_hwio: jax.Array, policy: BFPPolicy,
                stride: int = 1, padding: str = "SAME",
-               interpret: Optional[bool] = None) -> jax.Array:
+               interpret: Optional[bool] = None, *,
+               out_policy: Optional[BFPPolicy] = None,
+               tiles: Optional[Tuple[int, int]] = None,
+               dot_impl: str = "auto", pipeline: bool = True) -> ActOrArray:
     """NHWC conv through the fused implicit-im2col kernel (Scheme.TILED).
 
-    x: [B, H, W, C] float; w_hwio: [kh, kw, C, OC] float.  The K tile
-    ``policy.block_k`` IS the BFP block (whole-K when None); K zero-pads
-    to a tile multiple exactly like ops.bfp_matmul, so the result is
-    bit-identical to im2col + the fused GEMM kernel.
+    x: [B, H, W, C] float — or an activation-prequant dict (int8 NHWC
+    mantissa + per-(pixel, C-chunk) steps, the conv epilogue wire
+    format; requires ``block_k | C``); w_hwio: [kh, kw, C, OC] float.
+    The K tile ``policy.block_k`` IS the BFP block (whole-K when None);
+    K zero-pads to a tile multiple exactly like ops.bfp_matmul, so the
+    result is bit-identical to im2col + the fused GEMM kernel.
+    ``out_policy`` requests the epilogue-requantized {"m","s"} output.
     """
     if interpret is None:
         interpret = not _on_tpu()
-    b, h, w_in, c = x.shape
+    x_pq = is_prequant(x)
+    b, h, w_in, c = (x["m"] if x_pq else x).shape
     kh, kw, c2, oc = w_hwio.shape
     if c != c2:
-        raise ValueError(f"channel mismatch: x {x.shape} vs w "
+        raise ValueError(f"channel mismatch: x "
+                         f"{(x['m'] if x_pq else x).shape} vs w "
                          f"{w_hwio.shape}")
-    bk = policy.block_k or kh * kw * c
+    bk = policy.block_k or (act_block(x) if x_pq else kh * kw * c)
+    if x_pq:
+        _conv_x_prequant_check(x, c, bk, policy)
+    t_oh, bn = _conv_tiles(b * h * w_in, kh * kw * c, oc, policy,
+                           interpret, tiles)
     pads, (oh, ow, ohp, t_oh, bn, kp) = _conv_plan(
-        b, h, w_in, c, kh, kw, oc, stride, padding, bk)
-    xp = jnp.pad(x.astype(jnp.float32), pads)
+        b, h, w_in, c, kh, kw, oc, stride, padding, bk, t_oh, bn)
+    fused_q = _conv_epilogue_cfg(out_policy, oc, bn)
+    ob, obk = fused_q if fused_q is not None else (None, None)
     w2d = conv_weight_matrix(w_hwio.astype(jnp.float32))
     w2d = _pad_to(w2d, (kp, bn))
-    out = bfp_conv2d_pallas(xp, w2d, kh=kh, kw=kw, stride=stride,
-                            t_oh=t_oh, ohp=ohp, ow=ow, bn=bn, bk=bk,
-                            l_i=policy.l_i, l_w=policy.l_w,
-                            interpret=interpret)
-    return out[:, :oh, :, :oc]
+    kwargs = dict(kh=kh, kw=kw, stride=stride, t_oh=t_oh, ohp=ohp, ow=ow,
+                  bn=bn, bk=bk, l_i=policy.l_i, l_w=policy.l_w,
+                  interpret=interpret, dot_impl=dot_impl,
+                  pipeline=pipeline, out_bits=ob, out_block=obk)
+    if x_pq:
+        xm, xs = _pad_act_nhwc(x, pads)
+        out = bfp_conv2d_xprequant_pallas(xm, xs, w2d, **kwargs)
+    else:
+        xp = jnp.pad(x.astype(jnp.float32), pads)
+        out = bfp_conv2d_pallas(xp, w2d, **kwargs)
+    return _finish_conv(out, oh, oc, out_policy, fused_q)
 
 
-def bfp_conv2d_prequant(x: jax.Array, wm_hwio: jax.Array, ws: jax.Array,
+def bfp_conv2d_prequant(x: ActOrArray, wm_hwio: jax.Array, ws: jax.Array,
                         policy: BFPPolicy, stride: int = 1,
                         padding: str = "SAME",
-                        interpret: Optional[bool] = None) -> jax.Array:
+                        interpret: Optional[bool] = None, *,
+                        out_policy: Optional[BFPPolicy] = None,
+                        tiles: Optional[Tuple[int, int]] = None,
+                        dot_impl: str = "auto",
+                        pipeline: bool = True) -> ActOrArray:
     """NHWC conv with pre-quantized weights (int8 HWIO mantissa + GEMM-view
     step sidecar [K//bk, OC], core.prequant wire format).
 
     The sidecar block IS the kernel K tile (K is a ``bk`` multiple by the
     wire-format contract), so prequant execution is bit-exact vs
-    :func:`bfp_conv2d` with the same policy.
+    :func:`bfp_conv2d` with the same policy.  ``x`` may additionally be
+    an activation-prequant dict with the SAME block size (requires
+    ``bk | C``) — the fully-prequantized conv->conv chain.
     """
     if interpret is None:
         interpret = not _on_tpu()
-    b, h, w_in, c = x.shape
+    x_pq = is_prequant(x)
+    b, h, w_in, c = (x["m"] if x_pq else x).shape
     kh, kw, c2, oc = wm_hwio.shape
     if c != c2:
-        raise ValueError(f"channel mismatch: x {x.shape} vs w "
+        raise ValueError(f"channel mismatch: x "
+                         f"{(x['m'] if x_pq else x).shape} vs w "
                          f"{wm_hwio.shape}")
     k = kh * kw * c
     t = ws.shape[0]
@@ -210,17 +386,27 @@ def bfp_conv2d_prequant(x: jax.Array, wm_hwio: jax.Array, ws: jax.Array,
     if policy.block_k not in (None, bk):
         raise ValueError(f"policy.block_k={policy.block_k} != prequant "
                          f"block {bk}")
+    if x_pq:
+        _conv_x_prequant_check(x, c, bk, policy)
+    t_oh, bn = _conv_tiles(b * h * w_in, k, oc, policy, interpret, tiles)
     pads, (oh, ow, ohp, t_oh, bn, kp) = _conv_plan(
-        b, h, w_in, c, kh, kw, oc, stride, padding, bk)
+        b, h, w_in, c, kh, kw, oc, stride, padding, bk, t_oh, bn)
     assert kp == k, "wire-format K is a bk multiple by construction"
-    xp = jnp.pad(x.astype(jnp.float32), pads)
+    fused_q = _conv_epilogue_cfg(out_policy, oc, bn)
+    ob, obk = fused_q if fused_q is not None else (None, None)
     wm2d = _pad_to(conv_weight_matrix(wm_hwio), (bk, bn))
     wsp = _pad_to(ws.astype(jnp.float32), (1, bn), values=1.0)
-    out = bfp_conv2d_prequant_pallas(xp, wm2d, wsp, kh=kh, kw=kw,
-                                     stride=stride, t_oh=t_oh, ohp=ohp,
-                                     ow=ow, bn=bn, bk=bk, l_i=policy.l_i,
-                                     l_w=policy.l_w, interpret=interpret)
-    return out[:, :oh, :, :oc]
+    kwargs = dict(kh=kh, kw=kw, stride=stride, t_oh=t_oh, ohp=ohp, ow=ow,
+                  bn=bn, bk=bk, l_i=policy.l_i, l_w=policy.l_w,
+                  interpret=interpret, dot_impl=dot_impl,
+                  pipeline=pipeline, out_bits=ob, out_block=obk)
+    if x_pq:
+        xm, xs = _pad_act_nhwc(x, pads)
+        out = bfp_conv2d_xwprequant_pallas(xm, xs, wm2d, wsp, **kwargs)
+    else:
+        xp = jnp.pad(x.astype(jnp.float32), pads)
+        out = bfp_conv2d_prequant_pallas(xp, wm2d, wsp, **kwargs)
+    return _finish_conv(out, oh, oc, out_policy, fused_q)
 
 
 def bfp_quantize(x: jax.Array, bits: int, block_k: int,

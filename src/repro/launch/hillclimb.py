@@ -1,5 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 """§Perf hillclimbing driver — named variations over the 3 chosen cells.
 
 Each variation re-lowers the cell (roofline methodology: 1- and 2-unit
@@ -16,6 +14,13 @@ Cells (picked per the assignment):
 Usage: PYTHONPATH=src python -m repro.launch.hillclimb [--cell A B C]
 Writes results/hillclimb/<cell>__<variant>.json
 """
+import os
+
+# The 512-fake-device host platform must be requested before jax
+# initializes — but never clobber flags the user already set.
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
 import argparse
 import json
 import time

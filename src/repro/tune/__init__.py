@@ -1,0 +1,25 @@
+"""repro.tune — tile autotuning for the BFP Pallas kernels (ISSUE 6).
+
+Three pieces:
+
+* :mod:`repro.tune.tables` — THE fallback tile table (the single
+  default path both fused and prequant kernels share).
+* :mod:`repro.tune.cache` — persistent JSON cache of tuned winners,
+  keyed by (shape, mantissa widths, block, execution target), plus the
+  process-wide active cache ``kernels.ops`` consults at dispatch.
+* :mod:`repro.tune.autotune` — the hillclimber that fills the cache
+  (``python -m repro.tune`` tunes the canonical benchmark layers).
+
+Wiring: ``engine.bind(..., tune_cache=cache)`` attaches a cache to a
+Plan; every GEMM/conv the plan executes then launches with tuned tiles.
+"""
+from repro.tune.autotune import time_us, tune_conv, tune_gemm
+from repro.tune.cache import (SCHEMA, TuneCache, get_cache, lookup_tiles,
+                              set_cache, use_cache)
+from repro.tune.tables import (aligned_tile, conv_row_tile, fallback_tiles,
+                               overflow_cap)
+
+__all__ = ["TuneCache", "SCHEMA", "set_cache", "get_cache", "use_cache",
+           "lookup_tiles", "tune_gemm", "tune_conv", "time_us",
+           "aligned_tile", "fallback_tiles", "overflow_cap",
+           "conv_row_tile"]

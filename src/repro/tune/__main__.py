@@ -1,0 +1,61 @@
+"""CLI: tune the canonical VGG-16 / ResNet-18 benchmark layers.
+
+    PYTHONPATH=src python -m repro.tune [--out tune_cache.json]
+        [--smoke] [--hw 32] [--block-k 128] [--max-steps 12]
+
+Skips sites already in the cache (delete the file to retune), saves
+after every site so interrupts lose at most one measurement.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core.policy import BFPPolicy, Scheme
+from repro.tune.autotune import tune_conv, tune_gemm
+from repro.tune.cache import TuneCache
+from repro.tune.shapes import CONV_LAYERS, GEMM_LAYERS
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(prog="repro.tune")
+    ap.add_argument("--out", default="tune_cache.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny spatial extent + fewer steps (CI)")
+    ap.add_argument("--hw", type=int, default=None,
+                    help="conv spatial extent (default 32, smoke 8)")
+    ap.add_argument("--block-k", type=int, default=128)
+    ap.add_argument("--max-steps", type=int, default=None)
+    args = ap.parse_args()
+
+    hw = args.hw or (8 if args.smoke else 32)
+    steps = args.max_steps or (4 if args.smoke else 12)
+    pol = BFPPolicy(scheme=Scheme.TILED, block_k=args.block_k,
+                    straight_through=False)
+    cache = TuneCache.load(args.out)
+    print(f"[tune] cache {args.out}: {len(cache)} entries", flush=True)
+
+    for name, b, k, n in GEMM_LAYERS:
+        # block_k must divide K for the pinned-block policy; free it
+        # (None) where it doesn't so bk is tuned instead.
+        p = pol if k % args.block_k == 0 else pol.with_(block_k=None)
+        ent = tune_gemm(b, k, n, p, cache=cache, max_steps=steps)
+        cache.save()
+        print(f"[tune] gemm {name:24s} ({b},{k},{n}) -> "
+              f"bm={ent['bm']} bn={ent['bn']} bk={ent['bk']} "
+              f"{ent['us']:.0f}us", flush=True)
+
+    for name, c, oc, kk, stride in CONV_LAYERS:
+        p = pol if (kk * kk * c) % args.block_k == 0 \
+            else pol.with_(block_k=c if c <= args.block_k else None)
+        ent = tune_conv(1, hw, hw, c, kk, oc, p, stride=stride,
+                        cache=cache, max_steps=steps)
+        cache.save()
+        print(f"[tune] conv {name:24s} (hw={hw},C={c},OC={oc},k={kk},"
+              f"s={stride}) -> t_oh={ent['t_oh']} bn={ent['bn']} "
+              f"{ent['us']:.0f}us", flush=True)
+
+    print(f"[tune] done: {cache!r}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

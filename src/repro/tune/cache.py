@@ -1,0 +1,188 @@
+"""Persistent autotune cache — tuned tile configs keyed by (shape, L, target).
+
+Schema (docs/autotune.md documents this normatively):
+
+    {
+      "schema": 1,
+      "entries": {
+        "<key>": {"bm": 128, "bn": 128, "bk": 512, "t_oh": 4,
+                  "us": 812.5, "steps": 9}
+      }
+    }
+
+Key string (one entry per tuning site):
+
+    <kind>:b<B>k<K>n<N>:L<L_I>.<L_W>:bk<block_k|0>:<target>
+
+* ``kind``   — "gemm" or "conv" (conv keys use the im2col GEMM view:
+  B = B*OH*OW rows, K = kh*kw*C, N = OC, plus the conv kind carries
+  spatial geometry in ``t_oh``).
+* ``B/K/N``  — the UNPADDED problem shape (wrappers pad identically for
+  every candidate, so the unpadded shape is the stable identity).
+* ``L``      — both mantissa widths; they bound bk via int32 overflow.
+* ``bk``     — the policy's block_k (0 = None = tile free to tune).
+  When block_k is pinned, the BFP block IS the K tile — semantics, not
+  a tuning knob — so only (bm, bn) (or (t_oh, bn) for conv) hillclimb.
+* ``target`` — "interpret" or the jax backend ("cpu"/"tpu"/"gpu"):
+  timings never transfer across execution targets.
+
+Entry fields: the winning tiles, the measured median microseconds
+(``us``), and how many hillclimb evaluations it took (``steps``).
+
+Invalidation: entries are immortal within a schema version — the key
+carries every input that changes the optimum (shape, widths, block, and
+target), so there is nothing date-like to expire.  Kernel rewrites that
+shift the cost model bump ``SCHEMA`` below; ``load`` drops entries from
+other schema versions on read.  Delete the JSON file to retune from
+scratch.
+
+Runtime plumbing: ``kernels.ops`` consults the process-wide ACTIVE cache
+(``set_cache`` / ``use_cache``) at trace time; ``engine.bind(...,
+tune_cache=)`` installs a cache on a Plan so every site the plan
+launches uses tuned tiles with no call-site changes.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+__all__ = ["TuneCache", "set_cache", "get_cache", "use_cache",
+           "lookup_tiles", "SCHEMA"]
+
+SCHEMA = 1
+
+
+class TuneCache:
+    """A dict of tuned tile entries with JSON persistence.
+
+    Thread-safe for the store path (benchmarks may tune from worker
+    threads); lookups are plain dict reads.
+    """
+
+    def __init__(self, path: Optional[str] = None,
+                 entries: Optional[Dict[str, Dict[str, Any]]] = None):
+        self.path = path
+        self.entries: Dict[str, Dict[str, Any]] = dict(entries or {})
+        self.hits = 0
+        self.misses = 0
+        self._lock = threading.Lock()
+
+    # -- persistence ----------------------------------------------------
+    @classmethod
+    def load(cls, path: str) -> "TuneCache":
+        """Load from ``path``; a missing file is an empty cache (so the
+        first tuning run can create it)."""
+        if not os.path.exists(path):
+            return cls(path=path)
+        with open(path) as f:
+            doc = json.load(f)
+        if doc.get("schema") != SCHEMA:
+            # schema bump = cost model changed: old winners are stale
+            return cls(path=path)
+        return cls(path=path, entries=doc.get("entries", {}))
+
+    def save(self, path: Optional[str] = None) -> str:
+        path = path or self.path
+        if path is None:
+            raise ValueError("TuneCache has no path to save to")
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"schema": SCHEMA,
+                       "entries": dict(sorted(self.entries.items()))},
+                      f, indent=1, sort_keys=False)
+            f.write("\n")
+        os.replace(tmp, path)
+        self.path = path
+        return path
+
+    # -- keying ---------------------------------------------------------
+    @staticmethod
+    def key(kind: str, b: int, k: int, n: int, l_i: int, l_w: int,
+            block_k: Optional[int], target: str) -> str:
+        return (f"{kind}:b{b}k{k}n{n}:L{l_i}.{l_w}:"
+                f"bk{block_k or 0}:{target}")
+
+    @staticmethod
+    def target(interpret: bool) -> str:
+        if interpret:
+            return "interpret"
+        import jax
+        return jax.default_backend()
+
+    # -- access ---------------------------------------------------------
+    def lookup(self, kind: str, b: int, k: int, n: int, l_i: int,
+               l_w: int, block_k: Optional[int],
+               target: str) -> Optional[Dict[str, Any]]:
+        ent = self.entries.get(
+            self.key(kind, b, k, n, l_i, l_w, block_k, target))
+        if ent is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return ent
+
+    def store(self, kind: str, b: int, k: int, n: int, l_i: int,
+              l_w: int, block_k: Optional[int], target: str,
+              entry: Dict[str, Any]) -> None:
+        with self._lock:
+            self.entries[self.key(kind, b, k, n, l_i, l_w, block_k,
+                                  target)] = dict(entry)
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def __repr__(self) -> str:
+        return (f"TuneCache({len(self.entries)} entries, "
+                f"hits={self.hits}, misses={self.misses}, "
+                f"path={self.path!r})")
+
+
+# -- process-wide active cache ------------------------------------------
+_ACTIVE: Optional[TuneCache] = None
+
+
+def set_cache(cache: Optional[TuneCache]) -> Optional[TuneCache]:
+    """Install ``cache`` as the process-wide active cache (None clears);
+    returns the previous one."""
+    global _ACTIVE
+    prev, _ACTIVE = _ACTIVE, cache
+    return prev
+
+
+def get_cache() -> Optional[TuneCache]:
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def use_cache(cache: Optional[TuneCache]):
+    """Scoped ``set_cache`` — how Plans activate their bound cache around
+    each execution."""
+    prev = set_cache(cache)
+    try:
+        yield cache
+    finally:
+        set_cache(prev)
+
+
+def lookup_tiles(kind: str, b: int, k: int, n: int, l_i: int, l_w: int,
+                 block_k: Optional[int],
+                 interpret: bool) -> Optional[Tuple[int, ...]]:
+    """Consult the active cache for a tuned tile config.
+
+    Returns (bm, bn, bk) for "gemm", (t_oh, bn) for "conv", or None when
+    no cache is active / it has no entry — callers then fall back to
+    :func:`repro.tune.tables.fallback_tiles`.
+    """
+    cache = get_cache()
+    if cache is None:
+        return None
+    ent = cache.lookup(kind, b, k, n, l_i, l_w, block_k,
+                       TuneCache.target(interpret))
+    if ent is None:
+        return None
+    if kind == "conv":
+        return (ent["t_oh"], ent["bn"])
+    return (ent["bm"], ent["bn"], ent["bk"])

@@ -1,0 +1,208 @@
+"""Fused requantize epilogue through the engine (ISSUE 6).
+
+``out_policy=`` asks a layer to emit its output already in the
+activation wire format (int8 mantissas + power-of-two steps), so chained
+BFP layers hand off quantized activations without a dequantized-f32
+round-trip through HBM.  Contracts:
+
+  * on every backend, ``out_policy=`` output == run the layer, then
+    ``prequant_act`` — bit for bit (pallas fuses it into the kernel
+    epilogue; float/emulated requantize in two steps);
+  * a chain running on the wire format == the float-activation chain
+    with inline input quantization (quantization idempotence);
+  * ``out_policy`` rejects anything that isn't the wire format;
+  * ``Plan.out_policy_for`` derives the correct handoff policy from the
+    consuming site, and ``bind(tune_cache=)`` scopes tuned tiles to plan
+    executions.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine as EG
+from repro.core import BFPPolicy, Scheme
+from repro.core.bfp import Rounding
+from repro.engine import dequantize_act, is_prequant, prequant_act
+from repro.tune.cache import TuneCache
+
+KEY = jax.random.PRNGKey(0)
+TILED16 = BFPPolicy(scheme=Scheme.TILED, block_k=16,
+                    straight_through=False)
+
+
+def _xw(b=8, k=32, n=16, seed=0):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (b, k)) * 2.0
+    w = jax.random.normal(kw, (k, n)) * 0.1
+    return x, w
+
+
+# ---------------------------------------------------------------------------
+# out_policy == two-step requantization, every backend
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["pallas", "emulated", "float"])
+def test_gemm_out_policy_equals_two_step(backend):
+    x, w = _xw()
+    pol = TILED16.with_(backend=backend)
+    y = EG.gemm(x, w, pol, out_policy=TILED16)
+    ref_y = prequant_act(EG.gemm(x, w, pol), TILED16)
+    assert is_prequant(y) and y["m"].dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(y["m"]), np.asarray(ref_y["m"]))
+    np.testing.assert_array_equal(np.asarray(y["s"]), np.asarray(ref_y["s"]))
+
+
+@pytest.mark.parametrize("backend", ["pallas", "emulated"])
+def test_conv_out_policy_equals_two_step(backend):
+    x = jax.random.normal(KEY, (2, 8, 8, 8)) * 2.0
+    wk = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 8, 16)) * 0.1
+    pol = BFPPolicy(scheme=Scheme.TILED, block_k=24,
+                    straight_through=False, backend=backend)
+    y = EG.conv2d(x, wk, pol, out_policy=TILED16)
+    ref_y = prequant_act(EG.conv2d(x, wk, pol), TILED16)
+    assert is_prequant(y) and y["m"].shape == (2, 8, 8, 16)
+    np.testing.assert_array_equal(np.asarray(y["m"]), np.asarray(ref_y["m"]))
+    np.testing.assert_array_equal(np.asarray(y["s"]), np.asarray(ref_y["s"]))
+
+
+def test_gemm_leading_dims_restored_on_wire_format():
+    """x with extra leading dims: the dict output carries them too."""
+    x = jax.random.normal(KEY, (2, 3, 32)) * 2.0
+    _, w = _xw()
+    y = EG.gemm(x, w, TILED16.with_(backend="pallas"), out_policy=TILED16)
+    assert y["m"].shape == (2, 3, 16) and y["s"].shape == (2, 3, 1)
+    flat = EG.gemm(x.reshape(6, 32), w, TILED16.with_(backend="pallas"),
+                   out_policy=TILED16)
+    np.testing.assert_array_equal(np.asarray(y["m"]),
+                                  np.asarray(flat["m"].reshape(2, 3, 16)))
+
+
+# ---------------------------------------------------------------------------
+# chains on the wire format
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["pallas", "emulated", "float"])
+def test_gemm_chain_bit_identical(backend):
+    """Wire-format handoff == dequantize-then-consume on every backend
+    (non-consuming backends dequantize internally; pallas streams the
+    int8 dict straight into the kernel)."""
+    x, w1 = _xw(8, 32, 32, seed=1)
+    _, w2 = _xw(8, 32, 16, seed=2)
+    pol = TILED16.with_(backend=backend)
+    y1 = EG.gemm(x, w1, pol, out_policy=TILED16)
+    out = EG.gemm(y1, w2, pol)
+    out_ref = EG.gemm(dequantize_act(y1), w2, pol)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out_ref))
+
+
+def test_gemm_chain_equals_float_activation_chain():
+    """The stronger idempotence claim: consuming the producer's wire
+    output == consuming its FLOAT output (the consumer's inline input
+    quantization lands on the identical BFP grid)."""
+    x, w1 = _xw(8, 32, 32, seed=3)
+    _, w2 = _xw(8, 32, 16, seed=4)
+    pol = TILED16.with_(backend="pallas")
+    y1 = EG.gemm(x, w1, pol, out_policy=TILED16)
+    out = EG.gemm(y1, w2, pol)
+    out_ref = EG.gemm(EG.gemm(x, w1, pol), w2, pol)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out_ref))
+
+
+def test_conv_chain_bit_identical():
+    x = jax.random.normal(KEY, (2, 8, 8, 8)) * 2.0
+    w1 = jax.random.normal(jax.random.PRNGKey(5), (3, 3, 8, 16)) * 0.1
+    w2 = jax.random.normal(jax.random.PRNGKey(6), (3, 3, 16, 12)) * 0.1
+    pol1 = BFPPolicy(scheme=Scheme.TILED, block_k=24,
+                     straight_through=False, backend="pallas")
+    pol2 = TILED16.with_(backend="pallas")
+    y1 = EG.conv2d(x, w1, pol1, out_policy=TILED16)
+    out = EG.conv2d(y1, w2, pol2)
+    out_ref = EG.conv2d(EG.conv2d(x, w1, pol1), w2, pol2)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out_ref))
+
+
+def test_im2col_route_accepts_wire_format():
+    """conv2d_im2col (the fallback route) dequantizes dict inputs and
+    honours out_policy — fallback never changes semantics."""
+    x = jax.random.normal(KEY, (2, 6, 6, 8)) * 2.0
+    wk = jax.random.normal(jax.random.PRNGKey(7), (3, 3, 8, 16)) * 0.1
+    pol = BFPPolicy(scheme=Scheme.TILED, block_k=24,
+                    straight_through=False)
+    xq = prequant_act(x, TILED16.with_(block_k=8))
+    y = EG.conv2d_im2col(xq, wk, pol, out_policy=TILED16)
+    ref_y = prequant_act(EG.conv2d_im2col(dequantize_act(xq), wk, pol),
+                         TILED16)
+    assert y["m"].shape == (2, 6, 6, 16)
+    np.testing.assert_array_equal(np.asarray(y["m"]), np.asarray(ref_y["m"]))
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+def test_out_policy_rejects_non_wire_format():
+    x, w = _xw()
+    with pytest.raises(ValueError, match="TILED"):
+        EG.gemm(x, w, TILED16,
+                out_policy=BFPPolicy(straight_through=False))   # no blocks
+    with pytest.raises(ValueError, match="round-to-nearest"):
+        EG.gemm(x, w, TILED16,
+                out_policy=TILED16.with_(rounding=Rounding.STOCHASTIC))
+
+
+# ---------------------------------------------------------------------------
+# plans: out_policy_for + bound tune caches
+# ---------------------------------------------------------------------------
+
+def _toy_plan(policy, **kw):
+    x, w1 = _xw(8, 32, 32, seed=9)      # fc1: 32 -> 32
+    _, w2 = _xw(8, 32, 16, seed=10)     # fc2: 32 -> 16
+    params = {"fc1": {"w": w1}, "fc2": {"w": w2}}
+    plan = EG.bind(params, policy, [("fc1", "gemm"), ("fc2", "gemm")], **kw)
+    return plan, x, (w1, w2)
+
+
+def test_plan_out_policy_for():
+    plan, _, _ = _toy_plan(TILED16)
+    assert plan.out_policy_for("fc2") == TILED16
+    plan_f, _, _ = _toy_plan(None)
+    assert plan_f.out_policy_for("fc2") is None
+    plan_w, _, _ = _toy_plan(TILED16.with_(l_i=10))   # not int8 on the wire
+    assert plan_w.out_policy_for("fc2") is None
+    plan_s, _, _ = _toy_plan(
+        TILED16.with_(rounding=Rounding.STOCHASTIC), prequantize=False)
+    assert plan_s.out_policy_for("fc2") is None
+
+
+def test_plan_chain_on_wire_format():
+    plan, x, (w1, w2) = _toy_plan(TILED16.with_(backend="pallas"))
+    y1 = plan.gemm(x, w1, path="fc1",
+                   out_policy=plan.out_policy_for("fc2"))
+    assert is_prequant(y1)
+    out = plan.gemm(y1, w2, path="fc2")
+    out_ref = plan.gemm(plan.gemm(x, w1, path="fc1"), w2, path="fc2")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out_ref))
+
+
+def test_bind_tune_cache_scoped_to_plan():
+    cache = TuneCache()
+    cache.store("gemm", 8, 32, 32, 8, 8, 16, "interpret",
+                {"bm": 8, "bn": 8, "bk": 16, "us": 1.0, "steps": 1})
+    plan, x, (w1, _) = _toy_plan(TILED16.with_(backend="pallas"),
+                                 tune_cache=cache)
+    out = plan.gemm(x, w1, path="fc1")
+    assert cache.hits >= 1          # the plan activated its cache
+    np.testing.assert_array_equal(
+        np.asarray(out),
+        np.asarray(EG.gemm(x, w1, TILED16.with_(backend="pallas"))))
+
+
+def test_bind_tune_cache_accepts_path(tmp_path):
+    p = str(tmp_path / "cache.json")
+    TuneCache(path=p).save()
+    plan, x, (w1, _) = _toy_plan(TILED16, tune_cache=p)
+    assert isinstance(plan.tune_cache, TuneCache)
+    out = plan.gemm(x, w1, path="fc1")
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(EG.gemm(x, w1, TILED16)))

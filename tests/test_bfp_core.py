@@ -159,6 +159,7 @@ def test_ste_gradients():
     assert cos > 0.99
 
 
+@pytest.mark.slow
 @settings(max_examples=40, deadline=None)
 @given(bits=st.integers(3, 12), scale_pow=st.integers(-10, 10),
        seed=st.integers(0, 2 ** 31 - 1))
@@ -173,6 +174,7 @@ def test_quantize_dequantize_property(bits, scale_pow, seed):
     assert rel.max() <= 2.0 ** -(bits - 2)
 
 
+@pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(seed=st.integers(0, 2 ** 31 - 1))
 def test_scale_invariance_property(seed):

@@ -19,6 +19,7 @@ Invariants pinned here are exactly what the CNN serving stack relies on:
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -28,6 +29,10 @@ except ImportError:  # minimal container: deterministic fallback sampler
 from repro.core import bfp, nsr, packed, prequant
 from repro.core.bfp import Rounding, Scheme
 from repro.core.bfp_dot import bfp_matmul_2d
+
+# every test here is a generated-example sweep: the whole module is
+# the slow profile (deselect with -m 'not slow' for quick iteration)
+pytestmark = pytest.mark.slow
 from repro.core.policy import BFPPolicy
 
 #: ISSUE 4 acceptance: 200+ generated cases per property

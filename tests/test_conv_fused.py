@@ -204,3 +204,74 @@ def test_aligned_tile_shared_floor():
     m, e = ops.bfp_quantize(jax.random.normal(KEY, (100, 256)), 8, 128,
                             interpret=True)
     assert m.shape == (100, 256) and e.shape == (100, 2)
+
+# ---------------------------------------------------------------------------
+# ISSUE 6 — dot modes, pipelining, fused requantize epilogue (conv)
+# ---------------------------------------------------------------------------
+
+from repro.core.prequant import dequantize_act, prequant_act  # noqa: E402
+
+
+@pytest.mark.parametrize("dot_impl", ["int8", "int32", "f32"])
+@pytest.mark.parametrize("pipeline", [False, True])
+def test_conv_dot_modes_bit_identical(dot_impl, pipeline):
+    """Every conv dot datapath x pipelining == the legacy
+    int32/unpipelined kernel bit for bit, and == the oracle."""
+    x, wk = _case(8, 8, 8, 10, 3, 3, seed=21)
+    pol = _tiled(24)
+    out = ops.bfp_conv2d(x, wk, pol, 1, "SAME", True,
+                         dot_impl=dot_impl, pipeline=pipeline)
+    base = ops.bfp_conv2d(x, wk, pol, 1, "SAME", True,
+                          dot_impl="int32", pipeline=False)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(base))
+    out_r = ref.bfp_conv2d_ref(x, wk, 8, 8, 24, 1, "SAME")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_r),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("pipeline", [False, True])
+@pytest.mark.parametrize("stride", [1, 2])
+def test_conv_epilogue_requant_bit_identical(pipeline, stride):
+    """Fused conv epilogue == conv-then-prequant_act, bit for bit,
+    including the NHWC sidecar shape (blocks along OC per pixel)."""
+    x, wk = _case(8, 8, 8, 16, 3, 3, seed=22)
+    pol = _tiled(24)
+    out_pol = _tiled(8)
+    fused = ops.bfp_conv2d(x, wk, pol, stride, "SAME", True,
+                           out_policy=out_pol, pipeline=pipeline)
+    two = prequant_act(
+        ops.bfp_conv2d(x, wk, pol, stride, "SAME", True,
+                       pipeline=pipeline), out_pol)
+    oh = 8 // stride
+    assert EG.is_prequant(fused) and fused["m"].dtype == jnp.int8
+    assert fused["m"].shape == (2, oh, oh, 16)
+    assert fused["s"].shape == (2, oh, oh, 2)
+    np.testing.assert_array_equal(np.asarray(fused["m"]),
+                                  np.asarray(two["m"]))
+    np.testing.assert_array_equal(np.asarray(fused["s"]),
+                                  np.asarray(two["s"]))
+
+
+def test_conv_act_dict_input_bit_identical():
+    """int8 wire-format NHWC activations consumed natively == dequantize
+    + inline re-quantization (C blocks align with patch K blocks)."""
+    x, wk = _case(8, 8, 16, 12, 3, 3, seed=23)
+    pol = _tiled(16)
+    xq = prequant_act(x, pol)
+    assert EG.is_prequant(xq) and xq["m"].shape == x.shape
+    out_d = ops.bfp_conv2d(xq, wk, pol, 1, "SAME", True)
+    out_f = ops.bfp_conv2d(dequantize_act(xq), wk, pol, 1, "SAME", True)
+    np.testing.assert_array_equal(np.asarray(out_d), np.asarray(out_f))
+
+
+def test_conv_epilogue_then_consume_chain():
+    """conv -> conv entirely on the wire format == the all-float-
+    activation chain with inline quantization, bit for bit."""
+    x, w1 = _case(8, 8, 8, 16, 3, 3, seed=24)
+    w2 = jax.random.normal(jax.random.PRNGKey(25), (3, 3, 16, 12)) * 0.1
+    pol1, pol2 = _tiled(24), _tiled(16)
+    y1 = ops.bfp_conv2d(x, w1, pol1, 1, "SAME", True, out_policy=pol2)
+    out = ops.bfp_conv2d(y1, w2, pol2, 1, "SAME", True)
+    y1_f = ops.bfp_conv2d(x, w1, pol1, 1, "SAME", True)
+    out_ref = ops.bfp_conv2d(y1_f, w2, pol2, 1, "SAME", True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out_ref))

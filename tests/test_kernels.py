@@ -165,6 +165,7 @@ def test_prequant_kernel_matches_fused(b, n):
                                rtol=1e-6, atol=1e-6)
 
 
+@pytest.mark.slow
 @settings(max_examples=25, deadline=None)
 @given(
     b=st.sampled_from([8, 16, 64]),
@@ -186,3 +187,139 @@ def test_matmul_kernel_property(b, kt, n, bits, scale_pow, seed):
     out_r = ref.bfp_matmul_ref(x, w, bits, bits, bk)
     np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
                                rtol=1e-6, atol=1e-30)
+
+# ---------------------------------------------------------------------------
+# ISSUE 6 — dot-mode datapaths, pipelining, fused requantize epilogue
+# ---------------------------------------------------------------------------
+
+from repro.core.prequant import dequantize_act, is_prequant, prequant_act  # noqa: E402
+from repro.kernels.bfp_matmul import f32_dot_exact, resolve_dot_impl  # noqa: E402
+
+
+@pytest.mark.parametrize("dot_impl", ["int8", "int32", "f32"])
+@pytest.mark.parametrize("pipeline", [False, True])
+def test_matmul_dot_modes_bit_identical(dot_impl, pipeline):
+    """Every dot datapath x pipelining matches the oracle AND the legacy
+    int32/unpipelined kernel bit for bit (f32 is exact at bk=128, L=8:
+    128 * 127 * 127 < 2^24; int8 products widen to int32 in the MXU)."""
+    x = _rand(jax.random.PRNGKey(30), (64, 384), jnp.float32, 2.0)
+    w = _rand(jax.random.PRNGKey(31), (384, 48), jnp.float32, 0.1)
+    pol = BFPPolicy(scheme=Scheme.TILED, block_k=128,
+                    straight_through=False)
+    out = ops.bfp_matmul(x, w, pol, True, dot_impl=dot_impl,
+                         pipeline=pipeline)
+    base = ops.bfp_matmul(x, w, pol, True, dot_impl="int32",
+                          pipeline=False)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(base))
+    out_r = ref.bfp_matmul_ref(x, w, 8, 8, 128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_r),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("li,lw", [(4, 4), (6, 8), (8, 6), (10, 10),
+                                   (12, 12)])
+def test_matmul_auto_dot_bitwidth_sweep(li, lw):
+    """auto mode stays exact across L=4..12 (L > 8 forces the widened
+    int32 path; the overflow cap 2^(32-L_I-L_W) still admits bk=128)."""
+    x = _rand(jax.random.PRNGKey(32), (32, 256), jnp.float32, 2.0)
+    w = _rand(jax.random.PRNGKey(33), (256, 24), jnp.float32, 0.1)
+    pol = BFPPolicy(l_i=li, l_w=lw, scheme=Scheme.TILED, block_k=128,
+                    straight_through=False)
+    out = ops.bfp_matmul(x, w, pol, True)
+    out_r = ref.bfp_matmul_ref(x, w, li, lw, 128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_r),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_resolve_dot_impl_rules():
+    """Mode resolution: auto picks the exact-f32 BLAS path on interpret
+    within the 2^24 bound, int32 past it or for wide mantissas, int8 on
+    a compiled target; explicit modes validate their preconditions."""
+    assert f32_dot_exact(8, 8, 128) and f32_dot_exact(8, 8, 1024)
+    assert not f32_dot_exact(8, 8, 2048)
+    assert resolve_dot_impl("auto", l_i=8, l_w=8, bk=128,
+                            interpret=True) == "f32"
+    assert resolve_dot_impl("auto", l_i=8, l_w=8, bk=2048,
+                            interpret=True) == "int32"
+    assert resolve_dot_impl("auto", l_i=10, l_w=8, bk=128,
+                            interpret=True) == "int32"
+    assert resolve_dot_impl("auto", l_i=8, l_w=8, bk=128,
+                            interpret=False) == "int8"
+    # prequant operands are int8 on the wire whatever the stated L
+    assert resolve_dot_impl("auto", l_i=12, l_w=12, bk=128,
+                            interpret=False, x_pq=True, w_pq=True) == "int8"
+    with pytest.raises(ValueError, match="int8"):
+        resolve_dot_impl("int8", l_i=10, l_w=8, bk=128, interpret=True)
+    with pytest.raises(ValueError, match="not exact"):
+        resolve_dot_impl("f32", l_i=12, l_w=12, bk=128, interpret=True)
+    with pytest.raises(ValueError, match="unknown"):
+        resolve_dot_impl("fp8", l_i=8, l_w=8, bk=128, interpret=True)
+
+
+@pytest.mark.parametrize("tiles", [(8, 8, 128), (32, 64, 128),
+                                   (128, 128, 128)])
+def test_matmul_tiles_are_performance_only(tiles):
+    """With block_k pinned, (bm, bn) tiling must never change a bit —
+    the invariant that makes the autotuner safe to trust blindly."""
+    x = _rand(jax.random.PRNGKey(34), (96, 256), jnp.float32, 2.0)
+    w = _rand(jax.random.PRNGKey(35), (256, 80), jnp.float32, 0.1)
+    pol = BFPPolicy(scheme=Scheme.TILED, block_k=128,
+                    straight_through=False)
+    base = ops.bfp_matmul(x, w, pol, True)
+    out = ops.bfp_matmul(x, w, pol, True, tiles=tiles)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(base))
+
+
+@pytest.mark.parametrize("pipeline", [False, True])
+@pytest.mark.parametrize("bq,n", [(8, 64), (16, 48), (8, 72)])
+def test_matmul_epilogue_requant_bit_identical(pipeline, bq, n):
+    """Fused epilogue requantization == dequantize-then-prequant_act,
+    bit for bit, across out-block sizes and an N the default bn does
+    not divide (which exercises the two-step fallback inside ops)."""
+    x = _rand(jax.random.PRNGKey(36), (64, 256), jnp.float32, 2.0)
+    w = _rand(jax.random.PRNGKey(37), (256, n), jnp.float32, 0.1)
+    pol = BFPPolicy(scheme=Scheme.TILED, block_k=128,
+                    straight_through=False)
+    out_pol = pol.with_(block_k=bq)
+    fused = ops.bfp_matmul(x, w, pol, True, out_policy=out_pol,
+                           pipeline=pipeline)
+    two = prequant_act(ops.bfp_matmul(x, w, pol, True, pipeline=pipeline),
+                       out_pol)
+    assert is_prequant(fused) and fused["m"].dtype == jnp.int8
+    assert fused["m"].shape == (64, n)
+    assert fused["s"].shape == (64, n // bq)
+    np.testing.assert_array_equal(np.asarray(fused["m"]),
+                                  np.asarray(two["m"]))
+    np.testing.assert_array_equal(np.asarray(fused["s"]),
+                                  np.asarray(two["s"]))
+
+
+def test_matmul_act_dict_input_bit_identical():
+    """int8 wire-format activations consumed natively == dequantize +
+    inline re-quantization (idempotence on matching blocks) — the
+    layer-to-layer handoff contract."""
+    x = _rand(jax.random.PRNGKey(38), (48, 256), jnp.float32, 2.0)
+    w = _rand(jax.random.PRNGKey(39), (256, 32), jnp.float32, 0.1)
+    pol = BFPPolicy(scheme=Scheme.TILED, block_k=128,
+                    straight_through=False)
+    xq = prequant_act(x, pol)
+    assert is_prequant(xq) and xq["m"].dtype == jnp.int8
+    out_d = ops.bfp_matmul(xq, w, pol, True)
+    out_f = ops.bfp_matmul(dequantize_act(xq), w, pol, True)
+    np.testing.assert_array_equal(np.asarray(out_d), np.asarray(out_f))
+
+
+def test_matmul_epilogue_then_consume_chain():
+    """gemm -> gemm entirely on the wire format: the fused-epilogue
+    output feeds the next kernel directly and lands bit-identical to
+    the all-float-activation chain with inline quantization."""
+    x = _rand(jax.random.PRNGKey(40), (32, 256), jnp.float32, 2.0)
+    w1 = _rand(jax.random.PRNGKey(41), (256, 128), jnp.float32, 0.1)
+    w2 = _rand(jax.random.PRNGKey(42), (128, 16), jnp.float32, 0.1)
+    pol = BFPPolicy(scheme=Scheme.TILED, block_k=128,
+                    straight_through=False)
+    y1 = ops.bfp_matmul(x, w1, pol, True, out_policy=pol)
+    out = ops.bfp_matmul(y1, w2, pol, True)
+    y1_f = ops.bfp_matmul(x, w1, pol, True)
+    out_ref = ops.bfp_matmul(y1_f, w2, pol, True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out_ref))

@@ -6,6 +6,7 @@ assert much tighter bounds on synthetic data.
 """
 import jax
 import jax.numpy as jnp
+import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -102,6 +103,7 @@ def test_nsr_snr_roundtrip():
         < 1e-4
 
 
+@pytest.mark.slow
 @settings(max_examples=15, deadline=None)
 @given(bits=st.integers(5, 10), seed=st.integers(0, 2 ** 31 - 1))
 def test_eta_additivity_property(bits, seed):
