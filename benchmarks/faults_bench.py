@@ -1,0 +1,62 @@
+"""E15: fault-endurance curves — NSR / top-1 agreement vs bit-error rate.
+
+Runs the seeded fault campaign (``repro.faults.campaign``) over the CNN
+registry and emits one CSV row per (model, L, target, BER) cell::
+
+    faults/<model>/L<l>/<target>/ber<ber>, <us_per_call>,
+        n_flips=..;agree=..;snr_db=..;nsr=..
+
+``us_per_call`` is the wall time of the faulty forward (injection +
+bind + apply) — the campaign's cost, not a kernel number.  The derived
+fields are the science: exponent flips collapse the logits (NSR -> inf
+at BERs where mantissa LSB flips are still invisible), pinning the
+exponent >> mantissa-MSB >> mantissa-LSB severity hierarchy that
+DESIGN.md §11.1 documents and tests/test_faults.py asserts.
+
+Smoke mode (CI): lenet only, L=8, one BER per target — the rot check
+that the campaign drives end-to-end, plus the severity-ordering sanity
+assert at the one BER where all three targets land flips.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+from repro.faults import campaign as C
+
+#: full-run grid; smoke collapses to the first entry of each axis
+MODELS_FULL = ("lenet", "cifarnet", "vgg16", "resnet18")
+L_FULL = (8, 6, 4)
+BERS_FULL = (1e-4, 1e-3, 1e-2)
+TARGETS = ("exponent", "mantissa_msb", "mantissa_lsb", "activation")
+
+
+def run() -> None:
+    models = MODELS_FULL[:1] if common.SMOKE else MODELS_FULL
+    l_values = L_FULL[:1] if common.SMOKE else L_FULL
+    bers = (1e-2,) if common.SMOKE else BERS_FULL
+    rows = []
+    for model in models:
+        for l in l_values:
+            for target in TARGETS:
+                for ber in bers:
+                    t0 = time.perf_counter()
+                    r = C.run_point(model, l, target, ber, seed=0,
+                                    n_images=2 if common.SMOKE else 8)
+                    us = (time.perf_counter() - t0) * 1e6
+                    rows.append(r)
+                    common.emit(
+                        f"faults/{model}/L{l}/{target}/ber{ber:g}", us,
+                        f"n_flips={r['n_flips']};"
+                        f"agree={r['top1_agree']:.3f};"
+                        f"snr_db={r['snr_db']:.2f};nsr={r['nsr']:.4g}")
+    # severity hierarchy holds wherever every target landed flips —
+    # the campaign's headline result, asserted so the bench rots loudly
+    ber = max(bers)
+    e = C.mean_nsr(rows, target="exponent", ber=ber)
+    msb = C.mean_nsr(rows, target="mantissa_msb", ber=ber)
+    lsb = C.mean_nsr(rows, target="mantissa_lsb", ber=ber)
+    assert e > msb > lsb, \
+        f"severity hierarchy violated: exp={e} msb={msb} lsb={lsb}"
+    common.emit(f"faults/hierarchy/ber{ber:g}", 0.0,
+                f"exp_nsr={e:.4g};msb_nsr={msb:.4g};lsb_nsr={lsb:.4g}")

@@ -17,6 +17,8 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
                        eager steady state; ISSUE 3 acceptance)
   cnn_serve_bench      E14 CNN serving: requests/sec vs batch bucket
                        size + prequant on/off (ISSUE 4 acceptance)
+  faults_bench         E15 fault endurance: NSR / top-1 agreement vs
+                       bit-error rate x L x target (ISSUE 7 acceptance)
 
 Flags:
   --smoke       tiny shapes, 1 rep — CI rot-check mode (the numbers are
@@ -43,8 +45,8 @@ import traceback
 
 from benchmarks import (blocksize_ablation, cnn_serve_bench, common,
                         conv_bench, dispatch_bench, engine_bench,
-                        kernel_bench, table1_storage, table2_scheme,
-                        table3_sweep, table4_nsr)
+                        faults_bench, kernel_bench, table1_storage,
+                        table2_scheme, table3_sweep, table4_nsr)
 
 _ALL = {
     "table1": table1_storage.run,
@@ -57,6 +59,7 @@ _ALL = {
     "conv": conv_bench.run,
     "dispatch": dispatch_bench.run,
     "cnn_serve": cnn_serve_bench.run,
+    "faults": faults_bench.run,
 }
 
 

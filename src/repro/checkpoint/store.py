@@ -34,6 +34,7 @@ import json
 import os
 import shutil
 import threading
+import warnings
 import zlib
 from typing import Any, Callable, List, Optional, Tuple
 
@@ -41,10 +42,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.packed import (PackedBFP, is_packed, pack_param_tree,
-                               unpack_dequant, unpack_prequant)
+from repro.core.packed import (IntegrityError, PackedBFP, is_packed,
+                               pack_param_tree, unpack_dequant,
+                               unpack_prequant)
 
-__all__ = ["save", "save_async", "restore", "latest_step", "Checkpointer"]
+__all__ = ["save", "save_async", "restore", "latest_step", "Checkpointer",
+           "CheckpointCorruptionWarning"]
+
+
+class CheckpointCorruptionWarning(UserWarning):
+    """A present-but-invalid step (torn write, corrupted bytes, failed
+    checksum) was skipped; restore fell back to an older valid step."""
 
 
 def _flatten(tree, is_leaf=None) -> Tuple[List[Any], Any]:
@@ -161,10 +169,21 @@ def _valid(base: str, step: int) -> bool:
 
 
 def latest_step(base: str) -> Optional[int]:
-    """Most recent VALID step (checksum-verified) — torn writes skipped."""
+    """Most recent VALID step (checksum-verified).
+
+    A step directory that exists but fails validation (missing files,
+    incomplete status, payload-CRC mismatch — i.e. a torn write or
+    corrupted bytes) is skipped with a
+    :class:`CheckpointCorruptionWarning` and the next older step is
+    tried: corruption costs one checkpoint interval, never a crash.
+    """
     for s in sorted(_list_steps(base), reverse=True):
         if _valid(base, s):
             return s
+        warnings.warn(
+            f"checkpoint step {s} at {_step_dir(base, s)} is corrupt or "
+            f"incomplete — skipping it and falling back to the next "
+            f"valid step", CheckpointCorruptionWarning, stacklevel=2)
     return None
 
 
@@ -198,9 +217,19 @@ def restore(base: str, tree_like, step: Optional[int] = None,
     if packed not in ("prequant", "dequant", "keep"):
         raise ValueError(f"packed must be 'prequant', 'dequant', or "
                          f"'keep'; got {packed!r}")
-    step = latest_step(base) if step is None else step
     if step is None:
-        return None, None
+        step = latest_step(base)
+        if step is None:
+            return None, None
+    elif not _valid(base, step):
+        # an EXPLICITLY requested step must not silently restore corrupt
+        # bytes — the caller asked for this step, so failing loudly (with
+        # the typed integrity error) beats both a crash deeper in np.load
+        # and a silent wrong-weights restore
+        raise IntegrityError(
+            f"checkpoint step {step} at {_step_dir(base, step)} is "
+            f"corrupt, incomplete, or missing (payload checksum / "
+            f"manifest validation failed)")
     d = _step_dir(base, step)
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)

@@ -29,6 +29,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import struct
+import zlib
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -39,16 +40,29 @@ from repro.core import bfp
 from repro.core.bfp import BFPBlock, Rounding, Scheme
 
 __all__ = [
-    "PackedBFP", "pack_block", "unpack_block", "pack_prequant",
-    "unpack_prequant", "unpack_dequant", "pack_matrix", "pack_param_tree",
-    "is_packed", "packed_nbytes",
+    "PackedBFP", "IntegrityError", "pack_block", "unpack_block",
+    "pack_prequant", "unpack_prequant", "unpack_dequant", "pack_matrix",
+    "pack_param_tree", "is_packed", "packed_nbytes",
 ]
 
 _MAGIC = b"BFPK"
-_VERSION = 1
-#: fixed part of the serialized header (magic, version, bits, ndims,
-#: meta length) — see ``to_bytes``
-_FIXED_HEADER = 4 + 1 + 1 + 1 + 1 + 4
+#: container version written by ``to_bytes``.  v2 adds a CRC32 of the
+#: exponent plane + mantissa bitstream to the fixed header; v1 (no
+#: checksum) containers remain readable.
+_VERSION = 2
+_READ_VERSIONS = (1, 2)
+#: fixed part of the v2 serialized header (magic, version, bits, ndims,
+#: meta length, crc32) — see ``to_bytes``
+_FIXED_HEADER = 4 + 1 + 1 + 1 + 1 + 4 + 4
+#: v1 fixed header (no crc32 field)
+_FIXED_HEADER_V1 = 4 + 1 + 1 + 1 + 1 + 4
+
+
+class IntegrityError(ValueError):
+    """A container's stored CRC32 does not match its data — the payload
+    or exponent plane was corrupted after serialization (bit rot, torn
+    write, wire fault).  Raised by :meth:`PackedBFP.verify` and, by
+    default, by :meth:`PackedBFP.from_bytes` on v2 containers."""
 
 
 def _mantissa_dtype(bits: int):
@@ -136,6 +150,13 @@ class PackedBFP:
     exponents: np.ndarray            #: int8, C-order, ``exp_shape``
     payload: bytes                   #: ceil(prod(shape) * bits / 8) bytes
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    #: CRC32 the container was DESERIALIZED with (v2 headers); None for
+    #: freshly built or v1 containers.  ``verify()`` checks data against
+    #: it, so corruption introduced after parsing is still detectable
+    #: in-memory.  Excluded from equality: two containers with the same
+    #: data are the same container.
+    stored_crc: Optional[int] = dataclasses.field(default=None,
+                                                  compare=False)
 
     def __post_init__(self):
         if not 2 <= self.bits <= 24:
@@ -155,34 +176,68 @@ class PackedBFP:
 
     @property
     def nbytes(self) -> int:
-        """Exact serialized size (header + exponent plane + bitstream)."""
+        """Exact serialized size (v2 header + exponent plane + bitstream)."""
         meta_len = len(json.dumps(self.meta).encode())
         return (_FIXED_HEADER + 4 * (len(self.shape) + len(self.exp_shape))
                 + meta_len + self.exponents.size + len(self.payload))
 
+    # -- integrity ----------------------------------------------------------
+
+    def crc32(self) -> int:
+        """CRC32 over the exponent plane + mantissa bitstream — exactly
+        the bytes a bit-flip in storage or on the wire would corrupt.
+        The header (shape/meta) is covered by its own structural
+        validation in :meth:`from_bytes`."""
+        crc = zlib.crc32(self.exponents.astype(np.int8).tobytes(order="C"))
+        return zlib.crc32(self.payload, crc) & 0xFFFFFFFF
+
+    def verify(self) -> "PackedBFP":
+        """Check data against the deserialized CRC (v2 containers).
+
+        Returns ``self`` on success (or when no stored CRC exists — v1
+        containers and freshly built ones have nothing to check
+        against); raises :class:`IntegrityError` on mismatch.  The
+        checkpoint restore path and the wire unpack path both call this,
+        so a flipped payload byte is caught before it reaches a model.
+        """
+        if self.stored_crc is not None:
+            actual = self.crc32()
+            if actual != self.stored_crc:
+                raise IntegrityError(
+                    f"PackedBFP checksum mismatch: stored crc32 "
+                    f"{self.stored_crc:#010x} != computed {actual:#010x} "
+                    f"(shape {self.shape}, L={self.bits}, "
+                    f"kind={self.meta.get('kind')!r}) — payload or "
+                    f"exponent plane corrupted after serialization")
+        return self
+
     # -- serialization ------------------------------------------------------
 
     def to_bytes(self) -> bytes:
-        """Serialize (docs/formats.md layout):
+        """Serialize (docs/formats.md layout, container version 2):
 
         ========  =========================================================
         bytes     field
         ========  =========================================================
         0:4       magic ``b"BFPK"``
-        4         version (1)
+        4         version (2)
         5         mantissa width L, sign included
         6, 7      ndim(shape), ndim(exp_shape)
         8:12      meta JSON length (u32 LE)
+        12:16     crc32 of exponent plane + bitstream (u32 LE; v2 only)
         ..        shape dims, then exp_shape dims (u32 LE each)
         ..        meta JSON (utf-8)
         ..        exponent plane (int8, C-order, one per block)
         ..        mantissa bitstream (offset-binary, MSB first)
         ========  =========================================================
+
+        The CRC is recomputed from the CURRENT data at every
+        serialization (checksums certify bytes, not history).
         """
         meta_b = json.dumps(self.meta).encode()
         out = [_MAGIC,
-               struct.pack("<BBBBI", _VERSION, self.bits, len(self.shape),
-                           len(self.exp_shape), len(meta_b))]
+               struct.pack("<BBBBII", _VERSION, self.bits, len(self.shape),
+                           len(self.exp_shape), len(meta_b), self.crc32())]
         for d in (*self.shape, *self.exp_shape):
             out.append(struct.pack("<I", d))
         out.append(meta_b)
@@ -191,23 +246,58 @@ class PackedBFP:
         return b"".join(out)
 
     @classmethod
-    def from_bytes(cls, buf: bytes) -> "PackedBFP":
+    def from_bytes(cls, buf: bytes, verify: bool = True) -> "PackedBFP":
+        """Parse a serialized container (v1 or v2).
+
+        Every declared length is validated against the actual buffer
+        BEFORE slicing, so a truncated or clipped buffer raises a clear
+        ``ValueError`` naming the offending offset instead of slicing
+        short silently or surfacing a bare ``struct.error``.  v2
+        containers additionally verify the stored CRC32 (raise
+        :class:`IntegrityError` on mismatch) unless ``verify=False`` —
+        fault-injection campaigns parse corrupted containers on purpose.
+        """
         buf = bytes(buf)
+        if len(buf) < _FIXED_HEADER_V1:
+            raise ValueError(
+                f"truncated container: {len(buf)} bytes, need at least "
+                f"{_FIXED_HEADER_V1} for the fixed header")
         if buf[:4] != _MAGIC:
             raise ValueError(f"not a PackedBFP container (magic "
                              f"{buf[:4]!r} != {_MAGIC!r})")
-        ver, bits, nd, ne, meta_len = struct.unpack("<BBBBI",
-                                                    buf[4:_FIXED_HEADER])
-        if ver != _VERSION:
+        ver, bits, nd, ne, meta_len = struct.unpack(
+            "<BBBBI", buf[4:_FIXED_HEADER_V1])
+        if ver not in _READ_VERSIONS:
             raise ValueError(f"unsupported PackedBFP version {ver}")
-        off = _FIXED_HEADER
+        stored_crc = None
+        off = _FIXED_HEADER_V1
+        if ver >= 2:
+            if len(buf) < _FIXED_HEADER:
+                raise ValueError(
+                    f"truncated container: {len(buf)} bytes, need "
+                    f"{_FIXED_HEADER} for the v2 fixed header")
+            (stored_crc,) = struct.unpack("<I", buf[off:off + 4])
+            off += 4
+        if len(buf) < off + 4 * (nd + ne):
+            raise ValueError(
+                f"truncated container: dims region needs "
+                f"{4 * (nd + ne)} bytes at offset {off}, buffer has "
+                f"{len(buf) - off}")
         dims = struct.unpack(f"<{nd + ne}I", buf[off:off + 4 * (nd + ne)])
         off += 4 * (nd + ne)
         shape, exp_shape = dims[:nd], dims[nd:]
+        if len(buf) < off + meta_len:
+            raise ValueError(
+                f"truncated container: meta region declares {meta_len} "
+                f"bytes at offset {off}, buffer has {len(buf) - off}")
         meta = json.loads(buf[off:off + meta_len].decode()) if meta_len \
             else {}
         off += meta_len
         n_exp = int(np.prod(exp_shape, dtype=np.int64)) if ne else 1
+        if len(buf) < off + n_exp:
+            raise ValueError(
+                f"truncated container: exponent plane needs {n_exp} "
+                f"bytes at offset {off}, buffer has {len(buf) - off}")
         exps = np.frombuffer(buf[off:off + n_exp],
                              np.int8).reshape(exp_shape)
         off += n_exp
@@ -216,9 +306,11 @@ class PackedBFP:
         payload = buf[off:off + need]
         if len(payload) != need:
             raise ValueError(f"truncated container: {len(payload)} payload "
-                             f"bytes, need {need}")
-        return cls(bits=bits, shape=tuple(shape), exp_shape=tuple(exp_shape),
-                   exponents=exps, payload=payload, meta=meta)
+                             f"bytes at offset {off}, need {need}")
+        p = cls(bits=bits, shape=tuple(shape), exp_shape=tuple(exp_shape),
+                exponents=exps, payload=payload, meta=meta,
+                stored_crc=stored_crc)
+        return p.verify() if verify else p
 
 
 def is_packed(x: Any) -> bool:

@@ -119,8 +119,20 @@ def pack_leaf(g: jax.Array, bits: int, block: int = WIRE_BLOCK,
                          orig_size=n, block=block)
 
 
-def unpack_leaf(p: PK.PackedBFP) -> jax.Array:
-    """Wire container -> dequantized float32 leaf in its original shape."""
+def unpack_leaf(p) -> jax.Array:
+    """Wire container -> dequantized float32 leaf in its original shape.
+
+    Accepts a :class:`PackedBFP` or the raw serialized ``bytes`` exactly
+    as they arrived off the wire.  Either way the container's CRC32 is
+    verified first: a corrupted wire block raises the typed
+    :class:`repro.core.packed.IntegrityError` instead of dequantizing
+    garbage into a gradient all-reduce (the receiver can then re-request
+    the block or drop the contribution).
+    """
+    if isinstance(p, (bytes, bytearray, memoryview)):
+        p = PK.PackedBFP.from_bytes(p)        # verifies CRC (v2 wire)
+    else:
+        p.verify()
     if p.meta.get("kind") != "wire":
         raise ValueError(f"not a wire container (kind="
                          f"{p.meta.get('kind')!r})")

@@ -229,6 +229,21 @@ def _conv_im2col_exec(x, w, pol, stride, padding, key=None, backend=None,
 # the bound Plan entries, so tap events cannot diverge between the two)
 # ---------------------------------------------------------------------------
 
+def _adopt_transform(out, view, new, out_policy):
+    """Fold a transforming tap's replacement back into the datapath.
+
+    Taps observe the dense float view; when the execution produced the
+    activation wire format, the replacement is re-quantized under the
+    same ``out_policy`` — i.e. the fault lands on the f32 accumulator
+    BEFORE the epilogue requantization, which is where an SEU in an
+    accumulator register would physically sit."""
+    if new is view:
+        return out
+    if is_prequant(out):
+        return prequant_act(new, out_policy)
+    return new
+
+
 def gemm_and_tap(x, w, pol, key=None, backend=None, strict=False,
                  path=None, warned=None, out_policy=None) -> Any:
     out, be = _gemm_exec(x, w, pol, key, backend=backend, strict=strict,
@@ -236,8 +251,11 @@ def gemm_and_tap(x, w, pol, key=None, backend=None, strict=False,
     if TAPS.active():
         # wire-format outputs are dequantized for observation only (taps
         # compare against the float reference); the model sees ``out``
-        TAPS.emit("gemm", path, pol, be.name, x, w, _tap_view(out),
-                  float_fn=lambda: _gemm_exec(x, w, None, None)[0])
+        # unless a transforming tap replaced the observed view
+        view = _tap_view(out)
+        new = TAPS.emit("gemm", path, pol, be.name, x, w, view,
+                        float_fn=lambda: _gemm_exec(x, w, None, None)[0])
+        out = _adopt_transform(out, view, new, out_policy)
     return out
 
 
@@ -248,10 +266,12 @@ def conv_and_tap(x, w, pol, stride, padding, key=None, backend=None,
                          strict=strict, path=path, warned=warned,
                          out_policy=out_policy)
     if TAPS.active():
-        TAPS.emit("conv", path, pol, be.name, x, w, _tap_view(out),
-                  float_fn=lambda: _conv_im2col_exec(
-                      x, w, None, stride, padding)[0],
-                  stride=stride, padding=padding)
+        view = _tap_view(out)
+        new = TAPS.emit("conv", path, pol, be.name, x, w, view,
+                        float_fn=lambda: _conv_im2col_exec(
+                            x, w, None, stride, padding)[0],
+                        stride=stride, padding=padding)
+        out = _adopt_transform(out, view, new, out_policy)
     return out
 
 

@@ -69,6 +69,7 @@ class TapEvent:
 class _Tap:
     fn: Callable[[TapEvent], None]
     want_float: bool
+    transform: bool = False
 
 
 _ACTIVE: List[_Tap] = []
@@ -80,15 +81,25 @@ def active() -> bool:
 
 
 @contextlib.contextmanager
-def taps(fn: Callable[[TapEvent], None], *, want_float: bool = False):
+def taps(fn: Callable[[TapEvent], None], *, want_float: bool = False,
+         transform: bool = False):
     """Register ``fn`` as a datapath observer for the dynamic extent.
 
     ``want_float=True`` asks the engine to also execute the float
     reference for every observed site and attach it as ``ev.y_float``
     (costs one extra float execution per event — single-run SNR
     monitoring; the dual-run analysis driver leaves it off).
+
+    ``transform=True`` promotes the tap from observer to INTERVENER: a
+    non-None return value from ``fn`` REPLACES the site's output on the
+    live datapath (the fault-injection hook — ``repro.faults`` perturbs
+    activations this way).  Returning None leaves the output untouched,
+    so a transforming tap can target a subset of sites.  Like all taps,
+    transforms see only concrete eager execution — under jit tracing no
+    event fires and the datapath is unchanged, so fault campaigns run
+    the model un-jitted.
     """
-    t = _Tap(fn, want_float)
+    t = _Tap(fn, want_float, transform)
     _ACTIVE.append(t)
     try:
         yield t
@@ -98,22 +109,32 @@ def taps(fn: Callable[[TapEvent], None], *, want_float: bool = False):
 
 def emit(kind: str, path, policy, backend: str, x, w, y,
          float_fn: Optional[Callable[[], jax.Array]] = None,
-         stride=None, padding=None) -> None:
+         stride=None, padding=None):
     """Deliver one event to every registered tap (engine-internal).
 
     ``float_fn`` lazily produces the float reference output; it runs at
     most once, and only if some tap requested ``want_float``.  Tracer
     operands (jit tracing) suppress the event entirely.
+
+    Returns the (possibly transformed) output: identical to ``y`` unless
+    some ``transform=True`` tap returned a replacement, in which case
+    later taps observe the replaced value and the engine call site
+    adopts it (``gemm_and_tap`` / ``conv_and_tap``).
     """
     if not _ACTIVE:
-        return
+        return y
     if isinstance(x, jax.core.Tracer) or isinstance(y, jax.core.Tracer):
-        return  # taps observe concrete values; jit traces pass through
+        return y  # taps observe concrete values; jit traces pass through
     y_float = None
     if float_fn is not None and any(t.want_float for t in _ACTIVE):
         y_float = float_fn()
     ev = TapEvent(path=path, kind=kind, policy=policy, backend=backend,
                   x=x, w=w, y=y, y_float=y_float, stride=stride,
                   padding=padding)
+    out = y
     for t in list(_ACTIVE):
-        t.fn(ev)
+        r = t.fn(ev)
+        if t.transform and r is not None:
+            out = r
+            ev = dataclasses.replace(ev, y=out)
+    return out

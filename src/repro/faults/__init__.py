@@ -1,0 +1,23 @@
+"""Fault injection and endurance campaigns for the BFP datapath.
+
+``repro.faults.inject`` holds the seeded injectors (packed-container
+mantissa/exponent bit flips, wire-byte corruption, taps-driven
+activation perturbation); ``repro.faults.campaign`` sweeps them over
+bit-error rate x mantissa width x target across the CNN registry and
+reads out top-1 agreement + logit SNR.  DESIGN.md §11 has the fault
+model and the measured hierarchy (exponent >> mantissa MSB >> LSB).
+"""
+from repro.faults.campaign import (TARGETS, endurance_campaign,
+                                   inject_tree, mean_nsr, run_point)
+from repro.faults.inject import (FaultStats, activation_faults,
+                                 corrupt_container_bytes, derive_rng,
+                                 flip_exponent_bits, flip_payload_bits,
+                                 perturb_activations)
+
+__all__ = [
+    "FaultStats", "activation_faults", "corrupt_container_bytes",
+    "derive_rng", "flip_exponent_bits", "flip_payload_bits",
+    "perturb_activations",
+    "TARGETS", "endurance_campaign", "inject_tree", "mean_nsr",
+    "run_point",
+]

@@ -1,0 +1,209 @@
+"""Fault-endurance sweep: accuracy + SNR vs bit-error rate x L x target.
+
+The paper's Table 3/4 measured how much DESIGNED error (BFP
+quantization at mantissa width L) the networks absorb; this campaign
+measures the UNDESIGNED kind: seeded bit flips injected into the packed
+weight containers (``repro.faults.inject``) or the live activation
+datapath, swept over bit-error rate, mantissa width, and fault target,
+for every model in the CNN registry.
+
+The campaign's top-line finding mirrors the shared-exponent structure:
+
+  * ``exponent`` flips are CATASTROPHIC — one flipped int8 bit rescales
+    an entire block by up to 2^128;
+  * ``mantissa_msb`` flips (bit L-1) hurt in proportion to the block
+    scale — each one moves an element by half the block's range;
+  * ``mantissa_lsb`` flips (bit 0) are nearly free — one quantization
+    step each, indistinguishable from the rounding error the design
+    already absorbs.
+
+so the measured NSR obeys  exponent >> mantissa_msb >> mantissa_lsb  at
+equal BER (pinned in tests/test_faults.py and plotted by
+``benchmarks/faults_bench.py``).
+
+No labeled dataset ships with the repo, so "accuracy" is the standard
+fault-tolerance proxy: top-1 AGREEMENT between the faulty model and its
+own clean-BFP predictions on seeded inputs (1.0 = faults changed no
+decisions), alongside ``core.nsr`` logit SNR — the same two-axis
+readout the serving degradation layer keys off.  Everything is keyed by
+one explicit seed; ``mode="exact"`` (the default) flips exactly
+``round(ber * n_bits)`` bits, so a campaign row is a pure function of
+its arguments: same seed -> same flips -> same logits, bit-for-bit.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import engine as EG
+from repro.core import nsr as NSR
+from repro.core import packed as PK
+from repro.core.policy import TPU_TILED
+from repro.faults import inject as INJ
+from repro.models.cnn import MODELS
+
+__all__ = ["TARGETS", "inject_tree", "run_point", "endurance_campaign",
+           "mean_nsr"]
+
+#: Fault targets the campaign understands.  "mantissa" flips anywhere in
+#: the L-bit field; the _msb/_lsb variants isolate one bit position.
+TARGETS = ("exponent", "mantissa", "mantissa_msb", "mantissa_lsb",
+           "activation")
+
+
+def _policy(l: int):
+    """Serving-mode policy at mantissa width ``l`` (whole-K tiles so
+    every reduced-model K packs; inference numerics)."""
+    return TPU_TILED.with_(block_k=None, straight_through=False,
+                           l_w=l, l_i=l)
+
+
+def inject_tree(tree: Any, target: str, ber: float, seed: int, *,
+                mode: str = "exact") -> Tuple[Any, int]:
+    """Inject ``target`` faults into every packed leaf of a param tree.
+
+    ``tree`` is a ``pack_param_tree`` output (PackedBFP weight leaves,
+    everything else untouched).  Each leaf gets its own sub-generator
+    derived from ``(seed, crc32(leaf path))``, so the flip pattern is
+    independent of tree iteration order and stable across runs.
+    Returns ``(faulty tree, total flips)``.
+    """
+    if target not in TARGETS or target == "activation":
+        raise ValueError(f"inject_tree target must be one of "
+                         f"{[t for t in TARGETS if t != 'activation']}, "
+                         f"got {target!r}")
+    total = [0]
+
+    def one(path, leaf):
+        if not PK.is_packed(leaf):
+            return leaf
+        pstr = jax.tree_util.keystr(path)
+        rng = INJ.derive_rng(seed, zlib.crc32(pstr.encode()))
+        if target == "exponent":
+            leaf2, k = INJ.flip_exponent_bits(leaf, ber, rng, mode=mode)
+        else:
+            bit = {"mantissa": None, "mantissa_msb": leaf.bits - 1,
+                   "mantissa_lsb": 0}[target]
+            leaf2, k = INJ.flip_payload_bits(leaf, ber, rng, bit=bit,
+                                             mode=mode)
+        total[0] += k
+        return leaf2
+
+    out = jax.tree_util.tree_map_with_path(one, tree,
+                                           is_leaf=PK.is_packed)
+    return out, total[0]
+
+
+def _head0(y):
+    return y[0] if isinstance(y, tuple) else y
+
+
+def _logits(spec, tree, policy, imgs) -> np.ndarray:
+    """Eagerly run a (possibly packed, possibly corrupted) tree."""
+    plan = EG.bind(tree, policy, tree="cnn")
+    return np.asarray(_head0(spec.apply(plan.params, imgs, plan)),
+                      np.float32)
+
+
+def run_point(model: str, l: int, target: str, ber: float, seed: int, *,
+              n_images: int = 4, reduced: bool = True,
+              mode: str = "exact",
+              _ctx: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """One campaign point: inject, run, compare against the clean-BFP
+    baseline.  Returns a flat record (CSV-friendly)::
+
+        {"model", "l", "target", "ber", "n_flips",
+         "top1_agree", "snr_db", "nsr"}
+
+    ``_ctx`` lets :func:`endurance_campaign` reuse the packed tree /
+    clean logits across the BER sweep; standalone calls rebuild them.
+    """
+    spec = MODELS[model]
+    policy = _policy(l)
+    if _ctx is None:
+        key = jax.random.PRNGKey(seed)
+        params = spec.init(key, reduced=reduced)
+        imgs = jax.random.normal(jax.random.fold_in(key, 1),
+                                 (n_images, *spec.input_shape(
+                                     reduced=reduced)))
+        packed_tree = PK.pack_param_tree(params, policy, kind="cnn")
+        clean = _logits(spec, packed_tree, policy, imgs)
+    else:
+        imgs, packed_tree, clean = (_ctx["imgs"], _ctx["packed"],
+                                    _ctx["clean"])
+
+    if target == "activation":
+        with INJ.activation_faults(ber, seed, bits=l, mode=mode) as stats:
+            faulty = _logits(spec, packed_tree, policy, imgs)
+        n_flips = stats.flips
+    else:
+        tree_f, n_flips = inject_tree(packed_tree, target, ber, seed,
+                                      mode=mode)
+        faulty = _logits(spec, tree_f, policy, imgs)
+
+    agree = float(np.mean(np.argmax(faulty, -1) == np.argmax(clean, -1)))
+    finite = bool(np.all(np.isfinite(faulty)))
+    snr = (float(NSR.snr_db(jnp.asarray(clean), jnp.asarray(faulty)))
+           if finite else float("-inf"))
+    return {"model": model, "l": l, "target": target, "ber": ber,
+            "n_flips": int(n_flips), "top1_agree": agree,
+            "snr_db": snr, "nsr": float(NSR.nsr_from_snr_db(snr)),
+            "finite": finite}
+
+
+def endurance_campaign(models: Iterable[str] = ("lenet",),
+                       l_values: Sequence[int] = (8,),
+                       bers: Sequence[float] = (1e-3, 1e-2),
+                       targets: Sequence[str] = ("exponent",
+                                                 "mantissa_msb",
+                                                 "mantissa_lsb"),
+                       *, seed: int = 0, n_images: int = 4,
+                       reduced: bool = True,
+                       mode: str = "exact") -> List[Dict[str, Any]]:
+    """Sweep BER x L x target across ``models`` (registry names).
+
+    For each (model, L) the packed tree and clean-baseline logits are
+    built ONCE and shared by every (target, ber) cell, so every row of
+    a given (model, L) slice is measured against the identical baseline.
+    Returns the flat list of :func:`run_point` records, in deterministic
+    sweep order.
+    """
+    for t in targets:
+        if t not in TARGETS:
+            raise ValueError(f"unknown fault target {t!r}; "
+                             f"choose from {TARGETS}")
+    rows: List[Dict[str, Any]] = []
+    for model in models:
+        spec = MODELS[model]
+        key = jax.random.PRNGKey(seed)
+        params = spec.init(key, reduced=reduced)
+        imgs = jax.random.normal(jax.random.fold_in(key, 1),
+                                 (n_images, *spec.input_shape(
+                                     reduced=reduced)))
+        for l in l_values:
+            policy = _policy(l)
+            packed_tree = PK.pack_param_tree(params, policy, kind="cnn")
+            ctx = {"imgs": imgs, "packed": packed_tree,
+                   "clean": _logits(spec, packed_tree, policy, imgs)}
+            for target in targets:
+                for ber in bers:
+                    rows.append(run_point(model, l, target, ber, seed,
+                                          n_images=n_images,
+                                          reduced=reduced, mode=mode,
+                                          _ctx=ctx))
+    return rows
+
+
+def mean_nsr(rows: Iterable[Dict[str, Any]], **match: Any) -> float:
+    """Mean NSR over the rows whose fields equal ``match`` (non-finite
+    rows count as NSR=inf — a crashed network is maximally noisy)."""
+    vals = [float("inf") if not r.get("finite", True) else r["nsr"]
+            for r in rows
+            if all(r.get(k) == v for k, v in match.items())]
+    if not vals:
+        raise ValueError(f"no campaign rows match {match!r}")
+    return float(np.mean(vals))

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -44,6 +45,9 @@ from repro.dist import sharding as DS
 from repro.engine import PolicyLike
 from repro.engine.backends import BackendUnsupportedError
 from repro.engine.plan import Plan
+from repro.serve.degrade import (DeadlineExceeded, DegradeConfig,
+                                 DegradeController, QueueOverloaded,
+                                 float_params)
 from repro.serve.slots import SlotTable
 
 __all__ = ["ImageRequest", "CnnServeEngine", "default_buckets"]
@@ -55,13 +59,24 @@ _BATCH_AXES = ("batch", None, None, None)
 
 @dataclasses.dataclass
 class ImageRequest:
-    """One classification request: an [H, W, C] image in, logits out."""
+    """One classification request: an [H, W, C] image in, logits out.
+
+    ``deadline`` is an absolute value of the engine's monotonic clock;
+    a request that has not produced logits by then completes
+    exceptionally (``error`` = :class:`DeadlineExceeded`).  ``error``
+    is set (and ``logits`` stays None) whenever the request failed —
+    deadline expiry or a forward that raised.  ``degraded`` reports
+    which plan served it (True = the lower-L fallback plan).
+    """
 
     rid: int
     image: jax.Array
     logits: Optional[np.ndarray] = None
     label: Optional[int] = None
     done: bool = False
+    deadline: Optional[float] = None
+    error: Optional[BaseException] = None
+    degraded: bool = False
 
 
 def default_buckets(slots: int) -> Tuple[int, ...]:
@@ -111,6 +126,22 @@ class CnnServeEngine:
         but ``engine.taps`` observers see every GEMM/conv site (taps
         are suppressed under jit tracing), which is how the
         bit-exactness regression pins this engine to the direct path.
+      max_queue: queue depth limit; ``submit`` beyond it raises the
+        typed :class:`~repro.serve.degrade.QueueOverloaded` (the request
+        is never enqueued).  None = unbounded (the historical behavior).
+      fallback_policy: a lower-L policy (or pre-bound Plan) to serve new
+        admissions with while overloaded — bound ONCE here, so the
+        degraded path never binds mid-traffic.  Requires ``params``
+        unless a Plan is passed.  None disables degraded mode.
+      degrade: watermarks/hysteresis for the overload state machine
+        (default ``DegradeConfig(queue_high=slots)`` when
+        ``fallback_policy`` is set).
+      float_retry: when a group's logits come back non-finite, re-run
+        that group ONCE on the float reference (the serving plan's
+        weights dequantized, ``policy=None``) before reporting — a
+        blown-up BFP datapath (exponent SEU, corrupted container)
+        degrades to float numerics instead of returning NaNs.
+      clock: monotonic clock for deadlines (injectable for tests).
     """
 
     def __init__(self, params: Any, apply_fn: Callable[..., Any],
@@ -118,7 +149,11 @@ class CnnServeEngine:
                  buckets: Optional[Sequence[int]] = None,
                  prequant: bool = True, strict_backend: bool = False,
                  mesh=None, rules: Optional[Dict[str, Any]] = None,
-                 jit: bool = True):
+                 jit: bool = True, max_queue: Optional[int] = None,
+                 fallback_policy: PolicyLike = None,
+                 degrade: Optional[DegradeConfig] = None,
+                 float_retry: bool = True,
+                 clock: Callable[[], float] = time.monotonic):
         if isinstance(policy, Plan):
             # bind-once reuse across engines: the plan's params serve,
             # and its backend selection is already fixed — enforce the
@@ -147,11 +182,47 @@ class CnnServeEngine:
         self.mesh = mesh
         self.rules = dict(rules) if rules is not None \
             else dict(DS.DEFAULT_RULES)
-        self._fwd = (self.plan.jit_forward(apply_fn) if jit
-                     else lambda x: apply_fn(self.plan.params, x,
-                                             self.plan))
+        self._jit = jit
+        self._fwd = self._make_fwd(self.plan)
         self._shape: Optional[Tuple[int, ...]] = None
         self._next_rid = 0
+        # -- graceful degradation state ---------------------------------
+        self.max_queue = max_queue
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        self._clock = clock
+        self._float_retry = float_retry
+        self._float_fwds: Dict[bool, Callable[..., Any]] = {}
+        if fallback_policy is not None:
+            if isinstance(fallback_policy, Plan):
+                self.fallback_plan: Optional[Plan] = fallback_policy
+            else:
+                if params is None:
+                    raise ValueError(
+                        "fallback_policy needs params to bind against; "
+                        "pass a pre-bound Plan when reusing policy=Plan")
+                self.fallback_plan = EG.bind(params, fallback_policy,
+                                             tree="cnn",
+                                             strict=strict_backend,
+                                             prequantize=prequant)
+            self._fb_fwd = self._make_fwd(self.fallback_plan)
+            self.controller: Optional[DegradeController] = \
+                DegradeController(degrade or DegradeConfig(
+                    queue_high=slots))
+        else:
+            self.fallback_plan = None
+            self._fb_fwd = None
+            self.controller = (DegradeController(degrade)
+                               if degrade is not None else None)
+        #: serving counters: shed/expired/failed/float_retries/degraded
+        self.stats: Dict[str, int] = {"shed": 0, "expired": 0,
+                                      "failed": 0, "float_retries": 0,
+                                      "degraded_served": 0}
+
+    def _make_fwd(self, plan: Plan) -> Callable[..., Any]:
+        if self._jit:
+            return plan.jit_forward(self.apply_fn)
+        return lambda x: self.apply_fn(plan.params, x, plan)
 
     # -- admission ----------------------------------------------------------
 
@@ -160,12 +231,21 @@ class CnnServeEngine:
         """Queue a request (or wrap a bare ``image=`` into one).
 
         All images must share one [H, W, C] shape — the slot table is
-        shape-stable by construction.
+        shape-stable by construction.  With ``max_queue`` set, a full
+        queue sheds the submission with the typed
+        :class:`~repro.serve.degrade.QueueOverloaded` instead of
+        queueing unboundedly.
         """
         if req is None:
             if image is None:
                 raise ValueError("pass a request or image=")
             req = ImageRequest(rid=self._next_rid, image=image)
+        if self.max_queue is not None and \
+                len(self.table.queue) >= self.max_queue:
+            self.stats["shed"] += 1
+            raise QueueOverloaded(
+                f"queue depth {len(self.table.queue)} at limit "
+                f"{self.max_queue}; request {req.rid} shed", rid=req.rid)
         self._next_rid = max(self._next_rid, req.rid) + 1
         img = req.image
         if getattr(img, "ndim", 0) != 3:
@@ -192,7 +272,57 @@ class CnnServeEngine:
         return (DS.axis_rules(self.rules, self.mesh)
                 if self.mesh is not None else contextlib.nullcontext())
 
-    def _run_group(self, group: List[int]) -> None:
+    def _float_fwd(self, degraded: bool) -> Callable[..., Any]:
+        """Lazily built float-reference forward of the serving plan's
+        own (quantized) weights — the non-finite-logits retry path."""
+        fwd = self._float_fwds.get(degraded)
+        if fwd is None:
+            plan = self.fallback_plan if degraded else self.plan
+            tree = float_params(plan.params)
+            fn = self.apply_fn
+
+            def eager(x, _t=tree):
+                return fn(_t, x, None)
+
+            fwd = jax.jit(eager) if self._jit else eager
+            self._float_fwds[degraded] = fwd
+        return fwd
+
+    def _fail_group(self, group: List[int], reqs: List[ImageRequest],
+                    exc: BaseException) -> None:
+        """Complete every request of a failed group exceptionally and
+        free its slot — a raising forward must never leak slots (the
+        table would otherwise fill with zombies and admission would
+        stall forever)."""
+        for s, r in zip(group, reqs):
+            r.error = exc
+            r.done = True
+            self.stats["failed"] += 1
+            self.table.free(s)
+
+    def _expire(self) -> None:
+        """Fail every queued or admitted request whose deadline passed."""
+        now = self._clock()
+
+        def dead(r):
+            return r.deadline is not None and now > r.deadline
+
+        expired_q = [r for r in self.table.queue if dead(r)]
+        if expired_q:
+            self.table.queue[:] = [r for r in self.table.queue
+                                   if not dead(r)]
+        for s in self.table.active():
+            r = self.table.req[s]
+            if dead(r):
+                expired_q.append(r)
+                self.table.free(s)
+        for r in expired_q:
+            r.error = DeadlineExceeded(
+                f"request {r.rid} missed deadline {r.deadline}", rid=r.rid)
+            r.done = True
+            self.stats["expired"] += 1
+
+    def _run_group(self, group: List[int], degraded: bool = False) -> None:
         reqs = [self.table.req[s] for s in group]
         bucket = self._bucket_for(len(reqs))
         imgs = [r.image for r in reqs]
@@ -206,28 +336,58 @@ class CnnServeEngine:
             # shifts; a trained model's bias pattern could otherwise own
             # an EQ2/EQ4 whole-matrix exponent from layer 2 on.)
             imgs = imgs + [imgs[0]] * (bucket - len(imgs))
-        x = jnp.stack(imgs)
-        with self._sharding_ctx():
-            x = DS.shard(x, *_BATCH_AXES)
-            out = self._fwd(x)
-        logits = out[0] if isinstance(out, (tuple, list)) else out
-        logits = np.asarray(logits)
+        try:
+            x = jnp.stack(imgs)
+            with self._sharding_ctx():
+                x = DS.shard(x, *_BATCH_AXES)
+                out = (self._fb_fwd if degraded else self._fwd)(x)
+            logits = out[0] if isinstance(out, (tuple, list)) else out
+            logits = np.asarray(logits)
+            if self._float_retry and \
+                    not np.all(np.isfinite(logits[:len(reqs)])):
+                # one retry on the float reference of the SAME weights:
+                # isolates a blown-up BFP datapath (exponent SEU, bad
+                # container) from a genuinely divergent model
+                self.stats["float_retries"] += 1
+                with self._sharding_ctx():
+                    out = self._float_fwd(degraded)(x)
+                logits = out[0] if isinstance(out, (tuple, list)) else out
+                logits = np.asarray(logits)
+        except Exception as e:                    # noqa: BLE001 — slots
+            self._fail_group(group, reqs, e)      # must never leak
+            return
         for i, (s, r) in enumerate(zip(group, reqs)):
             r.logits = logits[i]
             r.label = int(np.argmax(logits[i]))
             r.done = True
+            r.degraded = degraded
+            if degraded:
+                self.stats["degraded_served"] += 1
             self.table.free(s)
 
     def step(self) -> int:
         """Admit, coalesce, run one bucketed forward per chunk of active
-        slots; returns the number of requests completed this step."""
+        slots; returns the number of requests completed this step.
+
+        Overload handling happens here: the controller observes the
+        pre-admission queue depth, and while DEGRADED every admission of
+        this step is tagged for (and served by) the pre-bound lower-L
+        fallback plan.  Expired requests complete exceptionally before
+        any forward runs.
+        """
+        degraded = False
+        if self.controller is not None:
+            state = self.controller.observe(len(self.table.queue))
+            degraded = (state == DegradeController.DEGRADED and
+                        self._fb_fwd is not None)
         self.table.admit()
+        self._expire()
         active = self.table.active()
         if not active:
             return 0
         cap = self.buckets[-1]
         for i in range(0, len(active), cap):
-            self._run_group(active[i:i + cap])
+            self._run_group(active[i:i + cap], degraded=degraded)
         return len(active)
 
     def run(self) -> List[Any]:

@@ -1,0 +1,166 @@
+"""Graceful degradation for the serve engines (DESIGN.md §11.3).
+
+A BFP serving deployment has a failure axis float serving does not: the
+mantissa width L is a QUALITY dial (paper Table 3), so under overload the
+engine can keep answering by answering slightly worse — re-admit new
+requests onto a pre-bound lower-L fallback :class:`~repro.engine.plan.Plan`
+instead of queueing unboundedly, then return to the primary plan when
+the queue drains.  This module holds the pieces both engines
+(``serve.cnn.CnnServeEngine``, ``serve.engine.ServeEngine``) share:
+
+  * typed rejections / request errors (:class:`ServeRejected` tree) —
+    shedding and expiry are API results, not stack traces;
+  * the :class:`DegradeController` state machine —
+    PRIMARY -> (queue depth >= high watermark for ``trip_steps``
+    consecutive steps) -> DEGRADED -> (depth <= low watermark for
+    ``recover_steps`` steps) -> PRIMARY.  Hysteresis on both edges so a
+    queue hovering at the watermark doesn't flap plans (and recompile
+    jitted forwards) every step;
+  * :func:`float_params` — the float-retry weight tree: prequant
+    ``{"m", "s"}`` sidecars and packed containers dequantize to dense
+    float32, so a group whose BFP logits come back non-finite (a faulty
+    container, an exponent SEU — see ``repro.faults``) can re-run once
+    on the float reference datapath.
+
+Deadlines use an injectable monotonic ``clock`` (default
+``time.monotonic``); tests drive a fake clock for determinism.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax.numpy as jnp
+
+from repro.core import packed as PK
+from repro.core import prequant as PQ
+
+__all__ = ["ServeRejected", "QueueOverloaded", "DeadlineExceeded",
+           "DegradeConfig", "DegradeController", "float_params"]
+
+
+class ServeRejected(RuntimeError):
+    """Base of every typed serving rejection.
+
+    Carries the request id (``rid``) so a caller multiplexing many
+    requests can attribute the rejection without parsing the message.
+    """
+
+    def __init__(self, msg: str, rid: Optional[int] = None):
+        super().__init__(msg)
+        self.rid = rid
+
+
+class QueueOverloaded(ServeRejected):
+    """Submission shed: the engine queue is at its depth limit.
+
+    Raised by ``submit`` — the request was never enqueued; the client
+    owns retry/backoff.  Shedding at the door keeps the queue (and the
+    deadline miss rate of ALREADY-accepted requests) bounded.
+    """
+
+
+class DeadlineExceeded(ServeRejected):
+    """The request's deadline passed before its logits were produced.
+
+    Delivered as ``req.error`` (the request completes exceptionally,
+    freeing its slot) — never raised through the engine's step loop.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradeConfig:
+    """Watermarks and hysteresis for :class:`DegradeController`.
+
+    Defaults trip after 2 consecutive overloaded steps and recover after
+    2 consecutive drained steps; ``queue_high`` must be set per engine
+    (a sensible choice is a small multiple of the slot count).
+    """
+
+    queue_high: int = 8       #: depth >= this counts as an overloaded step
+    queue_low: int = 0        #: depth <= this counts as a drained step
+    trip_steps: int = 2       #: consecutive overloaded steps to degrade
+    recover_steps: int = 2    #: consecutive drained steps to recover
+
+    def __post_init__(self):
+        if self.queue_high < 1:
+            raise ValueError(f"queue_high must be >= 1, got "
+                             f"{self.queue_high}")
+        if not 0 <= self.queue_low < self.queue_high:
+            raise ValueError(f"need 0 <= queue_low < queue_high, got "
+                             f"{self.queue_low} / {self.queue_high}")
+        if self.trip_steps < 1 or self.recover_steps < 1:
+            raise ValueError("trip_steps and recover_steps must be >= 1")
+
+
+class DegradeController:
+    """Hysteretic two-state (PRIMARY / DEGRADED) admission controller.
+
+    ``observe(queue_depth)`` is called once per engine step with the
+    depth BEFORE admission; it returns the state new admissions should
+    use.  Transitions are counted (``trips`` / ``recoveries``) for the
+    serving report.
+    """
+
+    PRIMARY = "primary"
+    DEGRADED = "degraded"
+
+    def __init__(self, cfg: DegradeConfig):
+        self.cfg = cfg
+        self.state = self.PRIMARY
+        self.trips = 0
+        self.recoveries = 0
+        self._over = 0     # consecutive steps at/above the high watermark
+        self._under = 0    # consecutive steps at/below the low watermark
+
+    @property
+    def degraded(self) -> bool:
+        return self.state == self.DEGRADED
+
+    def observe(self, queue_depth: int) -> str:
+        if self.state == self.PRIMARY:
+            self._over = self._over + 1 if queue_depth >= \
+                self.cfg.queue_high else 0
+            if self._over >= self.cfg.trip_steps:
+                self.state = self.DEGRADED
+                self.trips += 1
+                self._over = 0
+        else:
+            self._under = self._under + 1 if queue_depth <= \
+                self.cfg.queue_low else 0
+            if self._under >= self.cfg.recover_steps:
+                self.state = self.PRIMARY
+                self.recoveries += 1
+                self._under = 0
+        return self.state
+
+
+def float_params(params: Any) -> Any:
+    """Materialize a serving param tree back to dense float weights.
+
+    Prequant ``{"m", "s"}`` sidecars (including conv HWIO mantissas with
+    GEMM-view scales) and :class:`~repro.core.packed.PackedBFP` leaves
+    dequantize; float leaves pass through.  This is the weight tree the
+    non-finite-logits retry runs with ``policy=None`` — the float
+    reference of EXACTLY the weights the BFP path was serving (the
+    quantized values, not the original checkpoint: the retry isolates
+    datapath blow-ups, it does not un-round the weights).
+    """
+    import jax
+
+    def one(leaf):
+        if PK.is_packed(leaf):
+            return PK.unpack_dequant(leaf)
+        if PQ.is_prequant(leaf):
+            m, s = leaf["m"], leaf["s"]
+            if m.ndim == 4 and s.ndim == 2:      # conv HWIO mantissa
+                kh, kw, c, n = m.shape
+                d = PQ.dequantize_prequant({"m": m.reshape(kh * kw * c, n),
+                                            "s": s})
+                return d.reshape(kh, kw, c, n).astype(jnp.float32)
+            return PQ.dequantize_prequant(leaf)
+        return leaf
+
+    return jax.tree_util.tree_map(
+        one, params,
+        is_leaf=lambda x: PK.is_packed(x) or PQ.is_prequant(x))

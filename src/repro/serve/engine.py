@@ -18,7 +18,8 @@ backend cannot honour the policy (DESIGN.md §7.1).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import time
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +28,9 @@ from repro import engine as EG
 from repro.configs.base import LMConfig
 from repro.engine import PolicyLike
 from repro.models.lm import model as Mdl
+from repro.serve.degrade import (DeadlineExceeded, DegradeConfig,
+                                 DegradeController, QueueOverloaded,
+                                 float_params)
 from repro.serve.slots import SlotTable
 
 __all__ = ["prefill", "generate", "ServeEngine", "Request"]
@@ -99,6 +103,12 @@ class Request:
     max_new: int
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    #: absolute engine-clock deadline; missing it completes the request
+    #: exceptionally (``error`` = DeadlineExceeded) with partial ``out``
+    deadline: Optional[float] = None
+    error: Optional[BaseException] = None
+    #: True when the request was admitted onto the lower-L fallback plan
+    degraded: bool = False
 
 
 class ServeEngine:
@@ -113,7 +123,12 @@ class ServeEngine:
                  max_len: int = 512,
                  policy: PolicyLike = None,
                  prequant: PolicyLike = None,
-                 strict_backend: bool = False):
+                 strict_backend: bool = False,
+                 max_queue: Optional[int] = None,
+                 fallback_policy: PolicyLike = None,
+                 degrade: Optional[DegradeConfig] = None,
+                 float_retry: bool = True,
+                 clock: Callable[[], float] = time.monotonic):
         if cfg.is_encdec:
             # decode-only slot engine: no encoder prefill path, and the
             # enc_out cache leaf ([B, S, D]) breaks the slot-axis-at-dim-1
@@ -161,11 +176,50 @@ class ServeEngine:
 
         self._step = jax.jit(_step)
 
+        # -- graceful degradation state ---------------------------------
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        self.max_queue = max_queue
+        self._clock = clock
+        self._float_retry = float_retry
+        self._float_step = None
+        #: per-slot plan tag: True = this slot decodes on the fallback
+        #: plan for its whole lifetime (a request never switches plans
+        #: mid-sequence — its numerics stay internally consistent)
+        self.slot_deg: List[bool] = [False] * slots
+        if fallback_policy is not None:
+            fb_plan = EG.bind(params, fallback_policy, tree="lm",
+                              strict=strict_backend, prequantize=False)
+            self.fallback_plan = fb_plan
+
+            def _step_fb(cache, tok, pos):
+                return Mdl.decode_step(params, cfg, cache, tok, pos,
+                                       fb_plan)
+
+            self._step_fb = jax.jit(_step_fb)
+            self.controller: Optional[DegradeController] = \
+                DegradeController(degrade or DegradeConfig(
+                    queue_high=slots))
+        else:
+            self.fallback_plan = None
+            self._step_fb = None
+            self.controller = (DegradeController(degrade)
+                               if degrade is not None else None)
+        self.stats: Dict[str, int] = {"shed": 0, "expired": 0,
+                                      "failed": 0, "float_retries": 0,
+                                      "degraded_served": 0}
+
     def submit(self, req: Request):
         if not req.prompt:
             # an empty prompt would leave _admit's prefill loop with no
             # logits to seed the first decode from, wedging the slot
             raise ValueError("request prompt must be non-empty")
+        if self.max_queue is not None and \
+                len(self.table.queue) >= self.max_queue:
+            self.stats["shed"] += 1
+            raise QueueOverloaded(
+                f"queue depth {len(self.table.queue)} at limit "
+                f"{self.max_queue}; request {req.rid} shed", rid=req.rid)
         self.table.submit(req)
 
     def _merge_rows(self, old, new, rows):
@@ -190,9 +244,67 @@ class ServeEngine:
 
         return jax.tree_util.tree_map(one, old, new)
 
-    def _admit(self):
+    def _slot_step(self, s: int):
+        """The jitted step serving slot ``s`` (primary or fallback)."""
+        return self._step_fb if self.slot_deg[s] else self._step
+
+    def _float_step_fn(self):
+        """Lazily built float-reference decode step (retry path)."""
+        if self._float_step is None:
+            ftree = float_params(self.params)
+            cfg = self.cfg
+
+            def _fstep(cache, tok, pos):
+                return Mdl.decode_step(ftree, cfg, cache, tok, pos, None)
+
+            self._float_step = jax.jit(_fstep)
+        return self._float_step
+
+    def _fail_slots(self, slots: List[int], exc: BaseException) -> None:
+        """Complete the requests in ``slots`` exceptionally and free them
+        — a raising step must never leak slots."""
+        for s in slots:
+            req = self.slot_req[s]
+            if req is None:
+                continue
+            req.error = exc
+            req.done = True
+            self.stats["failed"] += 1
+            self.table.free(s)
+
+    def _expire(self) -> None:
+        """Fail queued or decoding requests whose deadline passed (their
+        partial ``out`` stays — the client sees how far decode got)."""
+        now = self._clock()
+
+        def dead(r):
+            return r.deadline is not None and now > r.deadline
+
+        expired = [r for r in self.queue if dead(r)]
+        if expired:
+            self.queue[:] = [r for r in self.queue if not dead(r)]
+        for s in self.table.active():
+            r = self.slot_req[s]
+            if dead(r):
+                expired.append(r)
+                self.table.free(s)
+        for r in expired:
+            r.error = DeadlineExceeded(
+                f"request {r.rid} missed deadline {r.deadline}", rid=r.rid)
+            r.done = True
+            self.stats["expired"] += 1
+
+    def _admit(self, degraded: bool = False):
         while (adm := self.table.admit_one()) is not None:
             s, req = adm
+            # plan choice is an ADMISSION decision: the slot keeps it for
+            # the request's whole decode (prefill included), so degraded
+            # requests are end-to-end lower-L — bit-exact vs a direct
+            # lower-L bind — rather than a mid-sequence numeric splice
+            self.slot_deg[s] = degraded and self._step_fb is not None
+            req.degraded = self.slot_deg[s]
+            if req.degraded:
+                self.stats["degraded_served"] += 1
             # reset slot s to pristine state: recurrent families
             # (ssm/hybrid) READ-modify-write their states h' = f(h, x),
             # so a reused slot must not prefill from the previous
@@ -211,18 +323,35 @@ class ServeEngine:
             # loop is bit-identical and len(prompt)x cheaper; with no
             # other slot active the merge is skipped entirely.
             cache = self.cache
-            for t, tok in enumerate(req.prompt):
-                toks = self._tok.at[s, 0].set(tok)
-                logits, cache = self._step(
-                    cache, toks, jnp.asarray(t, jnp.int32))
+            step_fn = self._slot_step(s)
+            try:
+                for t, tok in enumerate(req.prompt):
+                    toks = self._tok.at[s, 0].set(tok)
+                    logits, cache = step_fn(
+                        cache, toks, jnp.asarray(t, jnp.int32))
+            except Exception as e:               # noqa: BLE001 — a
+                self._fail_slots([s], e)         # raising prefill must
+                continue                         # not wedge the slot
             self.cache = (self._merge_rows(self.cache, cache, [s])
                           if others else cache)
             self.slot_pos[s] = len(req.prompt)
             req._next = int(jnp.argmax(logits[s, -1]))
 
     def step(self) -> int:
-        """One decode step over all active slots; returns #active."""
-        self._admit()
+        """One decode step over all active slots; returns #active.
+
+        Overload handling mirrors ``CnnServeEngine.step``: the
+        controller observes the pre-admission queue depth, admissions
+        made while DEGRADED decode on the pre-bound lower-L fallback
+        plan for their whole lifetime, and expired requests complete
+        exceptionally before any jitted step runs.
+        """
+        degraded = False
+        if self.controller is not None:
+            state = self.controller.observe(len(self.queue))
+            degraded = state == DegradeController.DEGRADED
+        self._admit(degraded)
+        self._expire()
         active = self.table.active()
         if not active:
             return 0
@@ -232,27 +361,45 @@ class ServeEngine:
             toks = toks.at[s, 0].set(req._next if not req.out
                                      else req.out[-1])
         # decode_step takes a scalar position, but staggered admissions
-        # leave slots at DIFFERENT positions.  Step each position group
-        # separately, keeping only that group's rows — one jitted call
-        # per distinct position (usually 1; bounded by #slots).  The old
-        # max(slot_pos) stepping wrote every slot's KV at the most
+        # leave slots at DIFFERENT positions — and mixed admission states
+        # leave slots on DIFFERENT plans.  Step each (plan, position)
+        # group separately, keeping only that group's rows — one jitted
+        # call per distinct group (usually 1; bounded by #slots).  The
+        # old max(slot_pos) stepping wrote every slot's KV at the most
         # advanced slot's position.
-        by_pos: Dict[int, List[int]] = {}
+        by_grp: Dict[Tuple[bool, int], List[int]] = {}
         for s in active:
-            by_pos.setdefault(self.slot_pos[s], []).append(s)
+            by_grp.setdefault((self.slot_deg[s], self.slot_pos[s]),
+                              []).append(s)
         next_tok: Dict[int, int] = {}
-        for pos, group in sorted(by_pos.items()):
-            logits, stepped = self._step(self.cache, toks,
-                                         jnp.asarray(pos, jnp.int32))
+        for (deg, pos), group in sorted(by_grp.items()):
+            step_fn = self._step_fb if deg else self._step
+            try:
+                logits, stepped = step_fn(self.cache, toks,
+                                          jnp.asarray(pos, jnp.int32))
+                if self._float_retry and not bool(jnp.all(jnp.isfinite(
+                        logits[jnp.asarray(group)]))):
+                    # one retry on the float reference of the same
+                    # weights: a blown-up BFP step (faulty container,
+                    # exponent SEU) degrades to float numerics instead
+                    # of feeding NaN logits into sampling
+                    self.stats["float_retries"] += 1
+                    logits, stepped = self._float_step_fn()(
+                        self.cache, toks, jnp.asarray(pos, jnp.int32))
+            except Exception as e:               # noqa: BLE001 — slots
+                self._fail_slots(group, e)       # must never leak
+                continue
             # single group (steady state): every active slot is at this
             # position and inactive rows are rewritten before any read,
             # so the masked merge copy would protect nothing — skip it.
-            self.cache = (stepped if len(by_pos) == 1 else
+            self.cache = (stepped if len(by_grp) == 1 else
                           self._merge_rows(self.cache, stepped, group))
             for s in group:
                 next_tok[s] = int(jnp.argmax(logits[s, -1]))
         for s in active:
             req = self.slot_req[s]
+            if s not in next_tok:
+                continue                  # group failed; slot already freed
             req.out.append(next_tok[s])
             self.slot_pos[s] += 1
             if len(req.out) >= req.max_new:

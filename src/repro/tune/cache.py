@@ -47,6 +47,7 @@ import contextlib
 import json
 import os
 import threading
+import warnings
 from typing import Any, Dict, Optional, Tuple
 
 __all__ = ["TuneCache", "set_cache", "get_cache", "use_cache",
@@ -74,15 +75,42 @@ class TuneCache:
     @classmethod
     def load(cls, path: str) -> "TuneCache":
         """Load from ``path``; a missing file is an empty cache (so the
-        first tuning run can create it)."""
+        first tuning run can create it).
+
+        A corrupt or unreadable file is ALSO an empty cache — warned
+        once per path, not raised: the tune cache is a performance
+        artifact, and a truncated write or stray edit must degrade to
+        "retune from scratch" rather than take serving down.  The next
+        ``save`` atomically replaces the bad file.
+        """
         if not os.path.exists(path):
             return cls(path=path)
-        with open(path) as f:
-            doc = json.load(f)
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+            if not isinstance(doc, dict) or \
+                    not isinstance(doc.get("entries", {}), dict):
+                raise ValueError(f"unexpected document shape: "
+                                 f"{type(doc).__name__}")
+        except (OSError, ValueError) as e:   # json errors are ValueError
+            cls._warn_corrupt(path, e)
+            return cls(path=path)
         if doc.get("schema") != SCHEMA:
             # schema bump = cost model changed: old winners are stale
             return cls(path=path)
         return cls(path=path, entries=doc.get("entries", {}))
+
+    _warned_paths: set = set()
+
+    @classmethod
+    def _warn_corrupt(cls, path: str, err: Exception) -> None:
+        key = os.path.abspath(path)
+        if key in cls._warned_paths:
+            return
+        cls._warned_paths.add(key)
+        warnings.warn(f"tune cache {path} is corrupt or unreadable "
+                      f"({err}); treating as empty — delete or re-save "
+                      f"to silence", UserWarning, stacklevel=3)
 
     def save(self, path: Optional[str] = None) -> str:
         path = path or self.path

@@ -1,0 +1,303 @@
+"""Fault injection + end-to-end data integrity (ISSUE 7).
+
+Covers: seeded injector determinism and bit targeting; the campaign's
+bit-reproducibility and its exponent >> mantissa-MSB >> mantissa-LSB
+severity hierarchy; container CRC detection at the wire
+(``dist.compress.unpack_leaf``) and at checkpoint restore (corrupt
+latest step -> warn + fall back to the newest valid step,
+bit-identically); v1 (pre-checksum) container compatibility; and the
+``PackedBFP.from_bytes`` truncation hardening.
+"""
+import os
+import struct
+import tempfile
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro import engine as EG
+from repro.checkpoint import store
+from repro.core import bfp, packed
+from repro.core.packed import IntegrityError
+from repro.core.policy import TPU_TILED
+from repro.dist import compress
+from repro.faults import (activation_faults, corrupt_container_bytes,
+                          endurance_campaign, flip_exponent_bits,
+                          flip_payload_bits, inject_tree, mean_nsr,
+                          perturb_activations)
+from repro.models.cnn import MODELS
+
+KEY = jax.random.PRNGKey(0)
+POL = TPU_TILED.with_(block_k=None, straight_through=False)
+
+
+def _container(bits=8, shape=(4, 64)):
+    blk = bfp.quantize(jax.random.normal(KEY, shape), bits, (1,))
+    return packed.pack_block(blk)
+
+
+# ---------------------------------------------------------------------------
+# Injectors
+# ---------------------------------------------------------------------------
+
+def test_payload_flips_are_seeded_and_counted():
+    p = _container()
+    a1, k1 = flip_payload_bits(p, 0.01, seed=7)
+    a2, k2 = flip_payload_bits(p, 0.01, seed=7)
+    b, k3 = flip_payload_bits(p, 0.01, seed=8)
+    assert a1.payload == a2.payload and k1 == k2
+    assert b.payload != a1.payload
+    # exact mode: deterministic flip count
+    e, ke = flip_payload_bits(p, 0.01, seed=7, mode="exact")
+    assert ke == round(0.01 * p.n_elements * p.bits)
+    # original untouched
+    assert p.payload != a1.payload
+
+
+def test_payload_bit_targeting_hits_only_that_bit():
+    p = _container(bits=6)
+    # flip EVERY element's LSB: dequantized values move by exactly one
+    # step of their block
+    lsb, k = flip_payload_bits(p, 1.0, seed=0, bit=0, mode="exact")
+    assert k == p.n_elements
+    m0 = np.asarray(packed.unpack_block(p).mantissa)
+    m1 = np.asarray(packed.unpack_block(lsb).mantissa)
+    assert np.all(np.abs(m1 - m0) == 1)
+    # MSB flips move by half the field's range
+    msb, _ = flip_payload_bits(p, 1.0, seed=0, bit=p.bits - 1,
+                               mode="exact")
+    m2 = np.asarray(packed.unpack_block(msb).mantissa)
+    assert np.all(np.abs(m2 - m0) == 2 ** (p.bits - 1))
+
+
+def test_exponent_flips_rescale_blocks():
+    p = _container()
+    f, k = flip_exponent_bits(p, 1.0, seed=0, bit=0, mode="exact")
+    assert k == p.exponents.size
+    e0 = np.asarray(p.exponents, np.int64)
+    e1 = np.asarray(f.exponents, np.int64)
+    assert np.all(np.abs(e1 - e0) == 1)   # bit 0 of the int8 toggles +-1
+    assert f.payload == p.payload          # mantissas untouched
+
+
+def test_flip_rejects_bad_args():
+    p = _container()
+    with pytest.raises(ValueError, match="bit-error rate"):
+        flip_payload_bits(p, 1.5, seed=0)
+    with pytest.raises(ValueError, match="bit must be"):
+        flip_payload_bits(p, 0.1, seed=0, bit=p.bits)
+    with pytest.raises(ValueError, match="mode"):
+        flip_exponent_bits(p, 0.1, seed=0, mode="gauss")
+
+
+def test_flipped_container_fails_verify_but_parses_unverified():
+    p = packed.PackedBFP.from_bytes(_container().to_bytes())
+    assert p.stored_crc is not None
+    f, k = flip_payload_bits(p, 0.02, seed=1)
+    assert k > 0
+    with pytest.raises(IntegrityError):
+        f.verify()
+    # the unverified parse is the campaign's escape hatch
+    raw = corrupt_container_bytes(p, seed=2, n_flips=3)
+    q = packed.PackedBFP.from_bytes(raw, verify=False)
+    assert q.shape == p.shape
+
+
+def test_activation_perturbation_is_seeded():
+    y = jax.random.normal(KEY, (2, 8, 8, 4))
+    a, ka = perturb_activations(y, 0.01, seed=3)
+    b, kb = perturb_activations(y, 0.01, seed=3)
+    c, _ = perturb_activations(y, 0.01, seed=4)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ka == kb
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_activation_faults_ride_the_taps_transform_hook():
+    spec = MODELS["lenet"]
+    params = spec.init(KEY)
+    imgs = jax.random.normal(jax.random.PRNGKey(1),
+                             (2, *spec.input_shape()))
+    plan = EG.bind(params, POL, tree="cnn")
+    clean = np.asarray(spec.apply(plan.params, imgs, plan))
+    with activation_faults(0.01, seed=0) as stats:
+        noisy1 = np.asarray(spec.apply(plan.params, imgs, plan))
+    with activation_faults(0.01, seed=0) as stats2:
+        noisy2 = np.asarray(spec.apply(plan.params, imgs, plan))
+    assert stats.events > 0 and stats.flips > 0
+    assert stats2.flips == stats.flips
+    np.testing.assert_array_equal(noisy1, noisy2)   # same seed, same run
+    assert not np.array_equal(noisy1, clean)
+    # outside the context the datapath is untouched again
+    after = np.asarray(spec.apply(plan.params, imgs, plan))
+    np.testing.assert_array_equal(after, clean)
+
+
+# ---------------------------------------------------------------------------
+# Campaign
+# ---------------------------------------------------------------------------
+
+def test_campaign_is_bit_reproducible_and_ordered():
+    kw = dict(models=("lenet",), l_values=(8,), bers=(1e-2,),
+              targets=("exponent", "mantissa_msb", "mantissa_lsb"),
+              seed=0, n_images=2)
+    rows1 = endurance_campaign(**kw)
+    rows2 = endurance_campaign(**kw)
+    assert rows1 == rows2                      # same seed -> same logits
+    e = mean_nsr(rows1, target="exponent")
+    msb = mean_nsr(rows1, target="mantissa_msb")
+    lsb = mean_nsr(rows1, target="mantissa_lsb")
+    assert e > msb > lsb                       # the severity hierarchy
+    for r in rows1:
+        assert r["n_flips"] > 0
+
+
+def test_inject_tree_is_path_keyed():
+    spec = MODELS["lenet"]
+    params = spec.init(KEY)
+    tree = packed.pack_param_tree(params, POL, kind="cnn")
+    t1, k1 = inject_tree(tree, "mantissa", 1e-3, seed=5)
+    t2, k2 = inject_tree(tree, "mantissa", 1e-3, seed=5)
+    assert k1 == k2 > 0
+    l1 = [l.payload for l in jax.tree_util.tree_leaves(
+        t1, is_leaf=packed.is_packed) if packed.is_packed(l)]
+    l2 = [l.payload for l in jax.tree_util.tree_leaves(
+        t2, is_leaf=packed.is_packed) if packed.is_packed(l)]
+    assert l1 == l2
+    with pytest.raises(ValueError, match="target"):
+        inject_tree(tree, "activation", 1e-3, seed=5)
+
+
+# ---------------------------------------------------------------------------
+# Wire + container integrity
+# ---------------------------------------------------------------------------
+
+def test_wire_unpack_rejects_corrupted_block():
+    g = jax.random.normal(KEY, (40, 17))
+    p = compress.pack_leaf(g, 8, block=64)
+    # clean round trip still pinned against the in-graph model
+    np.testing.assert_array_equal(
+        np.asarray(compress.unpack_leaf(p.to_bytes())),
+        np.asarray(compress.quantize_leaf(g, 8, block=64)))
+    # one flipped payload byte -> typed rejection, from bytes or object
+    bad = corrupt_container_bytes(p, seed=0, n_flips=1)
+    with pytest.raises(IntegrityError):
+        compress.unpack_leaf(bad)
+    with pytest.raises(IntegrityError):
+        compress.unpack_leaf(packed.PackedBFP.from_bytes(bad,
+                                                         verify=False))
+
+
+def test_container_crc_roundtrip_and_v1_compat():
+    p = _container()
+    buf = p.to_bytes()
+    q = packed.PackedBFP.from_bytes(buf)
+    assert q.stored_crc == q.crc32() == p.crc32()
+    assert q.to_bytes() == buf                      # bit-identical cycle
+    # fabricate the v1 (pre-checksum) serialization of the same payload:
+    # 12-byte fixed header, no CRC field — must still parse, with
+    # integrity checking disabled (stored_crc None)
+    import json
+    meta_b = json.dumps(p.meta, separators=(",", ":"),
+                        sort_keys=True).encode()
+    v1 = b"".join([
+        b"BFPK", struct.pack("<BBBB", 1, p.bits, len(p.shape),
+                                  len(p.exp_shape)),
+        struct.pack("<I", len(meta_b)),
+        struct.pack(f"<{len(p.shape)}I", *p.shape),
+        struct.pack(f"<{len(p.exp_shape)}I", *p.exp_shape),
+        meta_b, p.exponents.astype(np.int8).tobytes(order="C"),
+        p.payload,
+    ])
+    old = packed.PackedBFP.from_bytes(v1)
+    assert old.stored_crc is None
+    old.verify()                                    # no-op, not a raise
+    np.testing.assert_array_equal(old.exponents, p.exponents)
+    assert old.payload == p.payload
+
+
+def test_from_bytes_names_offset_on_truncation():
+    buf = _container().to_bytes()
+    # every truncation point raises a ValueError naming an offset, never
+    # IndexError/struct.error garbage
+    for cut in (3, 10, 14, 20, len(buf) // 2, len(buf) - 1):
+        with pytest.raises(ValueError,
+                           match=r"(offset|magic|fixed header)"):
+            packed.PackedBFP.from_bytes(buf[:cut])
+    # declared meta length beyond the buffer is caught, not sliced short
+    hacked = bytearray(buf)
+    struct.pack_into("<I", hacked, 8, 2 ** 20)
+    with pytest.raises(ValueError, match="offset"):
+        packed.PackedBFP.from_bytes(bytes(hacked))
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint fallback
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_falls_back_to_newest_valid_step():
+    spec = MODELS["lenet"]
+    params0 = spec.init(KEY)
+    params1 = spec.init(jax.random.PRNGKey(1))
+    params2 = spec.init(jax.random.PRNGKey(2))
+    with tempfile.TemporaryDirectory() as d:
+        for s, p in ((0, params0), (1, params1), (2, params2)):
+            store.save(d, s, p, keep=5)
+        ref, s_ref = store.restore(d, params0, step=1)
+        assert s_ref == 1
+        # corrupt the LATEST step's array bytes (flip one payload byte)
+        apath = os.path.join(store._step_dir(d, 2), "arrays.npz")
+        raw = bytearray(open(apath, "rb").read())
+        raw[len(raw) // 2] ^= 0x40
+        with open(apath, "wb") as f:
+            f.write(raw)
+        with pytest.warns(store.CheckpointCorruptionWarning):
+            assert store.latest_step(d) == 1
+        with pytest.warns(store.CheckpointCorruptionWarning):
+            tree, s = store.restore(d, params0)
+        assert s == 1                     # fell back past the bad step
+        for a, b in zip(jax.tree_util.tree_leaves(tree),
+                        jax.tree_util.tree_leaves(ref)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # explicitly asking for the corrupt step is a typed error
+        with pytest.raises(IntegrityError):
+            store.restore(d, params0, step=2)
+
+
+def test_checkpoint_packed_leaf_crc_detected_at_restore():
+    spec = MODELS["lenet"]
+    params = spec.init(KEY)
+    with tempfile.TemporaryDirectory() as d:
+        store.save(d, 0, params, format="bfp_packed", policy=POL)
+        # flip one byte INSIDE a packed container in arrays.npz would be
+        # caught by the npz-level CRC first; instead corrupt a container
+        # serialized independently, as dist/checkpoint consumers see it
+        tree, _ = store.restore(d, params, packed="keep")
+        leaf = next(l for l in jax.tree_util.tree_leaves(
+            tree, is_leaf=packed.is_packed) if packed.is_packed(l))
+        bad = corrupt_container_bytes(leaf.to_bytes(), seed=0, n_flips=1)
+        with pytest.raises(IntegrityError):
+            packed.PackedBFP.from_bytes(bad)
+
+
+def test_tune_cache_corrupt_json_degrades_to_empty():
+    from repro.tune.cache import TuneCache
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "tune_cache.json")
+        with open(path, "w") as f:
+            f.write('{"schema": 1, "entries": {"x": ')   # garbage JSON
+        with pytest.warns(UserWarning, match="corrupt or unreadable"):
+            c = TuneCache.load(path)
+        assert len(c) == 0 and c.path == path
+        # warn-once: the second load of the same path is silent
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            c2 = TuneCache.load(path)
+        assert len(c2) == 0
+        # a save repairs the file and load works again
+        c2.store("gemm", 1, 2, 3, 8, 8, None, "interpret",
+                 {"bm": 8, "bn": 8, "bk": 8, "us": 1.0, "steps": 1})
+        c2.save()
+        assert len(TuneCache.load(path)) == 1

@@ -1,0 +1,276 @@
+"""Graceful degradation in both serve engines (ISSUE 7).
+
+Deadlines, queue shedding with typed rejections, the non-finite-logits
+float retry, the lower-L degraded admission mode (bit-exact against a
+direct lower-L bind) with drain-recovery, and the slot-leak regression:
+a raising forward/prefill completes its requests exceptionally and
+frees their slots, so the engine keeps serving.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import reduced
+from repro.configs.registry import ARCHS
+from repro.core.policy import TPU_TILED
+from repro.models.cnn import MODELS
+from repro.serve.cnn import CnnServeEngine, ImageRequest
+from repro.serve.degrade import (DeadlineExceeded, DegradeConfig,
+                                 DegradeController, QueueOverloaded,
+                                 ServeRejected, float_params)
+from repro.serve.engine import Request, ServeEngine
+from repro.train.step import init_state
+
+KEY = jax.random.PRNGKey(0)
+POL = TPU_TILED.with_(block_k=None, straight_through=False)
+POL4 = POL.with_(l_w=4, l_i=4)
+
+#: trip after one overloaded step, recover after one drained step —
+#: the fastest state machine, so tests drive transitions in few steps
+FAST = DegradeConfig(queue_high=4, queue_low=0, trip_steps=1,
+                     recover_steps=1)
+
+
+@pytest.fixture(scope="module")
+def lenet():
+    spec = MODELS["lenet"]
+    params = spec.init(KEY)
+    imgs = jax.random.normal(jax.random.PRNGKey(1),
+                             (12, *spec.input_shape()))
+    return spec, params, imgs
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = reduced(ARCHS["tinyllama-1.1b"], n_layers=2, d_model=64,
+                  d_ff=128, vocab=256)
+    params = init_state(cfg, KEY).params
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# Controller
+# ---------------------------------------------------------------------------
+
+def test_controller_hysteresis():
+    c = DegradeController(DegradeConfig(queue_high=4, queue_low=1,
+                                        trip_steps=2, recover_steps=2))
+    assert c.observe(5) == "primary"        # 1 of 2 overloaded steps
+    assert c.observe(2) == "primary"        # streak broken
+    c.observe(5)
+    assert c.observe(5) == "degraded" and c.trips == 1
+    assert c.observe(1) == "degraded"       # 1 of 2 drained steps
+    assert c.observe(3) == "degraded"       # streak broken
+    c.observe(0)
+    assert c.observe(1) == "primary" and c.recoveries == 1
+
+
+def test_degrade_config_validation():
+    with pytest.raises(ValueError, match="queue_high"):
+        DegradeConfig(queue_high=0)
+    with pytest.raises(ValueError, match="queue_low"):
+        DegradeConfig(queue_high=2, queue_low=2)
+    with pytest.raises(ValueError, match="trip_steps"):
+        DegradeConfig(trip_steps=0)
+
+
+# ---------------------------------------------------------------------------
+# CNN engine
+# ---------------------------------------------------------------------------
+
+def test_cnn_shed_typed_rejection(lenet):
+    spec, params, imgs = lenet
+    eng = CnnServeEngine(params, spec.apply, POL, slots=2, jit=False,
+                         max_queue=2)
+    eng.submit(image=imgs[0])
+    eng.submit(image=imgs[1])
+    with pytest.raises(QueueOverloaded) as ei:
+        eng.submit(image=imgs[2])
+    assert isinstance(ei.value, ServeRejected)
+    assert ei.value.rid is not None
+    assert eng.stats["shed"] == 1
+    assert len(eng.table.queue) == 2        # the shed request never queued
+    done = eng.run()
+    assert all(r.error is None for r in done)
+
+
+def test_cnn_deadline_expiry(lenet):
+    spec, params, imgs = lenet
+    t = [0.0]
+    eng = CnnServeEngine(params, spec.apply, POL, slots=2, jit=False,
+                         clock=lambda: t[0])
+    late = eng.submit(ImageRequest(rid=0, image=imgs[0], deadline=5.0))
+    ok = eng.submit(ImageRequest(rid=1, image=imgs[1], deadline=50.0))
+    t[0] = 10.0
+    eng.run()
+    assert late.done and isinstance(late.error, DeadlineExceeded)
+    assert late.logits is None and late.error.rid == 0
+    assert ok.error is None and ok.logits is not None
+    assert eng.stats["expired"] == 1
+    assert not eng.table.pending()
+
+
+def test_cnn_degraded_mode_bit_exact_and_recovers(lenet):
+    spec, params, imgs = lenet
+    eng = CnnServeEngine(params, spec.apply, POL, slots=2, jit=False,
+                         fallback_policy=POL4, degrade=FAST)
+    # light load serves on the primary plan
+    first = [eng.submit(image=imgs[i]) for i in range(2)]
+    eng.step()
+    assert all(r.done and not r.degraded for r in first)
+    # flood: queue depth >= high watermark trips admission to fallback
+    flood = [eng.submit(image=imgs[2 + i]) for i in range(8)]
+    eng.run()
+    assert all(r.done and r.error is None for r in flood)
+    deg = [r for r in flood if r.degraded]
+    assert deg and eng.stats["degraded_served"] == len(deg)
+    # degraded logits are BIT-EXACT vs a direct lower-L bind (same
+    # engine padding: batch of one request -> bucket 1)
+    fb = eng.fallback_plan
+    for r in deg[:3]:
+        direct = np.asarray(spec.apply(fb.params,
+                                       jnp.stack([r.image]), fb))
+        np.testing.assert_array_equal(r.logits, direct[0])
+    # an idle step observes the drained queue -> recovery
+    eng.step()
+    assert eng.controller.state == DegradeController.PRIMARY
+    assert eng.controller.recoveries == 1
+    post = eng.submit(image=imgs[0])
+    eng.run()
+    assert not post.degraded
+
+
+def test_cnn_float_retry_on_nonfinite(lenet):
+    spec, params, imgs = lenet
+
+    def flaky_apply(p, x, pol):
+        y = spec.apply(p, x, pol)
+        return y * jnp.nan if pol is not None else y
+
+    eng = CnnServeEngine(params, flaky_apply, POL, slots=2, jit=False)
+    r = eng.submit(image=imgs[0])
+    eng.run()
+    assert eng.stats["float_retries"] == 1
+    assert r.error is None and np.all(np.isfinite(r.logits))
+    # the retry served the float reference of the plan's own
+    # (quantized) weights — bit-exact at the same batch shape
+    ft = float_params(eng.plan.params)
+    want = np.asarray(spec.apply(ft, jnp.stack([r.image]), None))
+    np.testing.assert_array_equal(r.logits, want[0])
+    # retry is opt-out
+    eng2 = CnnServeEngine(params, flaky_apply, POL, slots=2, jit=False,
+                          float_retry=False)
+    r2 = eng2.submit(image=imgs[0])
+    eng2.run()
+    assert eng2.stats["float_retries"] == 0
+    assert not np.any(np.isfinite(r2.logits))
+
+
+def test_cnn_slot_leak_regression(lenet):
+    spec, params, imgs = lenet
+    calls = [0]
+
+    def bad_apply(p, x, pol):
+        calls[0] += 1
+        if calls[0] == 1:
+            raise RuntimeError("boom")
+        return spec.apply(p, x, pol)
+
+    eng = CnnServeEngine(params, bad_apply, POL, slots=2, jit=False,
+                         float_retry=False)
+    ra = eng.submit(image=imgs[0])
+    rb = eng.submit(image=imgs[1])
+    eng.run()
+    # both requests of the failed group complete exceptionally...
+    assert ra.done and isinstance(ra.error, RuntimeError)
+    assert rb.done and isinstance(rb.error, RuntimeError)
+    assert eng.stats["failed"] == 2
+    # ...and their slots were freed, so the engine keeps serving
+    assert eng.table.active() == [] and not eng.table.pending()
+    rc = eng.submit(image=imgs[2])
+    eng.run()
+    assert rc.error is None and rc.logits is not None
+
+
+# ---------------------------------------------------------------------------
+# LM engine
+# ---------------------------------------------------------------------------
+
+def test_lm_shed_and_deadline(lm):
+    cfg, params = lm
+    eng = ServeEngine(params, cfg, slots=1, max_len=32, policy=POL,
+                      max_queue=1)
+    eng.submit(Request(rid=0, prompt=[1], max_new=2))
+    with pytest.raises(QueueOverloaded):
+        eng.submit(Request(rid=1, prompt=[1], max_new=2))
+    assert eng.stats["shed"] == 1
+
+    t = [0.0]
+    eng2 = ServeEngine(params, cfg, slots=1, max_len=32, policy=POL,
+                       clock=lambda: t[0])
+    rd = Request(rid=0, prompt=[1, 2], max_new=10, deadline=5.0)
+    eng2.submit(rd)
+    eng2.step()                       # decodes while within deadline
+    t[0] = 10.0
+    eng2.step()                       # expiry: partial output kept
+    assert rd.done and isinstance(rd.error, DeadlineExceeded)
+    assert len(rd.out) >= 1
+    assert not eng2.table.pending()
+
+
+def test_lm_degraded_mode_bit_exact_and_recovers(lm):
+    cfg, params = lm
+    eng = ServeEngine(params, cfg, slots=2, max_len=32, policy=POL,
+                      fallback_policy=POL4,
+                      degrade=DegradeConfig(queue_high=3, queue_low=0,
+                                            trip_steps=1,
+                                            recover_steps=1))
+    rs = [Request(rid=i, prompt=[1, 2, 3], max_new=4) for i in range(6)]
+    for r in rs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.done and r.error is None for r in rs)
+    deg = [r for r in rs if r.degraded]
+    assert deg
+    # degraded decode is bit-exact vs an engine bound directly at the
+    # lower L: plan choice at admission covers the WHOLE sequence
+    eng_fb = ServeEngine(params, cfg, slots=2, max_len=32, policy=POL4)
+    for r in deg[:2]:
+        r2 = Request(rid=90 + r.rid, prompt=list(r.prompt),
+                     max_new=r.max_new)
+        eng_fb.submit(r2)
+        eng_fb.run()
+        assert r2.out == r.out
+    eng.step()                        # drained queue -> recovery
+    assert eng.controller.state == DegradeController.PRIMARY
+    post = Request(rid=50, prompt=[1, 2], max_new=2)
+    eng.submit(post)
+    eng.run()
+    assert post.done and not post.degraded
+
+
+def test_lm_slot_leak_regression(lm):
+    cfg, params = lm
+    eng = ServeEngine(params, cfg, slots=2, max_len=32, policy=POL)
+    boom = [True]
+    orig = eng._step
+
+    def flaky_step(cache, tok, pos):
+        if boom[0]:
+            boom[0] = False
+            raise RuntimeError("step boom")
+        return orig(cache, tok, pos)
+
+    ra = Request(rid=0, prompt=[1, 2], max_new=3)
+    eng.submit(ra)
+    eng._step = flaky_step            # prefill of ra raises once
+    eng.run()
+    assert ra.done and isinstance(ra.error, RuntimeError)
+    assert eng.stats["failed"] == 1
+    assert eng.table.active() == [] and not eng.table.pending()
+    # the slot is reusable: the next request decodes normally
+    rb = Request(rid=1, prompt=[1, 2], max_new=3)
+    eng.submit(rb)
+    eng.run()
+    assert rb.done and rb.error is None and len(rb.out) == 3
