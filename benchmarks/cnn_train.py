@@ -1,8 +1,24 @@
-"""Shared CNN training on the synthetic image tasks (benchmarks E2/E3).
+"""CNN training benchmarks: float-baseline helper + BFP train-to-accuracy.
 
-Trains LeNet ('mnist' column) / CifarNet ('cifar10' column) in float32,
-then the paper's experiments evaluate the SAME trained weights under BFP
-at various mantissa widths — no retraining, exactly the paper's protocol.
+Two layers:
+
+  * :func:`train_model` / :func:`accuracy` — the original E2/E3 helper:
+    trains LeNet ('mnist') / CifarNet ('cifar10') in float32, then the
+    paper's experiments evaluate the SAME trained weights under BFP at
+    various mantissa widths — no retraining, exactly the paper's
+    protocol.  table2_scheme / table3_sweep import these; keep them.
+
+  * :func:`run` — E16 (ISSUE 8): train-to-accuracy ON the BFP datapath.
+    Forward AND backward GEMMs run block-formatted (``repro.grad``
+    custom VJPs, ``straight_through=False``) at L = 4..12, gradients are
+    exchanged data-parallel over the compressed packed wire with error
+    feedback (``repro.train.cnn``), and each run reports its loss curve,
+    final accuracy vs the float baseline, measured wire bytes (one step
+    over the REAL packed containers), and the worst measured backward
+    gradient NSR against the ``core.nsr`` bound.  In smoke mode the grid
+    shrinks to L in {4, 8} and a few steps, and the suite ASSERTS that
+    loss decreases and that every measured gradient NSR is under its
+    bound — the train-smoke CI gate.
 """
 from __future__ import annotations
 
@@ -10,9 +26,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from benchmarks import common
+from repro.core.policy import BFPPolicy
 from repro.data.pipeline import image_batch
 from repro.models.cnn import small
 from repro.optim import optimizers as opt
+from repro.train import cnn as TC
 
 
 def train_model(kind: str = "mnist", steps: int = 250, batch: int = 64,
@@ -56,3 +75,80 @@ def accuracy(params, apply_fn, eval_set, policy) -> float:
     x, y = eval_set
     logits = apply_fn(params, x, policy)
     return float(jnp.mean(jnp.argmax(logits, -1) == y))
+
+
+# ---------------------------------------------------------------------------
+# E16: BFP train-to-accuracy (quantized backward + compressed exchange)
+# ---------------------------------------------------------------------------
+
+def _train_one(policy, steps: int, lr: float, batch: int,
+               grad_bits, measure_nsr: bool):
+    cfg = TC.CnnTrainConfig(model="cifarnet", workers=2, batch=batch,
+                            lr=lr, policy=policy, grad_bits=grad_bits)
+    return cfg, TC.train_cnn(
+        cfg, steps=steps,
+        eval_batch=128 if common.SMOKE else 512,
+        measure_nsr_every=steps if measure_nsr else 0,  # once, at step 0
+        packed_wire_steps=1 if grad_bits is not None else 0)
+
+
+def run() -> None:
+    """Emit train-to-accuracy rows; assert the smoke training contract."""
+    smoke = common.SMOKE
+    steps = 8 if smoke else 60
+    batch = 16 if smoke else 64
+    lr = 1e-3
+    widths = (4, 8) if smoke else (4, 6, 8, 10, 12)
+
+    _, ref = _train_one(None, steps, lr, batch, None, False)
+    ref_losses = [h["loss"] for h in ref["history"]]
+    common.emit("cnn_train/float/loss", ref_losses[-1],
+                f"first={ref_losses[0]:.4f} last={ref_losses[-1]:.4f} "
+                f"steps={steps}")
+    common.emit("cnn_train/float/accuracy", ref["accuracy"],
+                f"acc={ref['accuracy']:.4f} baseline")
+    if smoke:
+        assert ref_losses[-1] < ref_losses[0], \
+            f"float loss did not decrease: {ref_losses[0]:.4f} -> " \
+            f"{ref_losses[-1]:.4f}"
+
+    for L in widths:
+        pol = BFPPolicy(l_w=L, l_i=L, straight_through=False)
+        cfg, out = _train_one(pol, steps, lr, batch, 8, True)
+        losses = [h["loss"] for h in out["history"]]
+        tag = f"cnn_train/L{L}"
+        common.emit(f"{tag}/loss", losses[-1],
+                    f"first={losses[0]:.4f} last={losses[-1]:.4f} "
+                    f"steps={steps}")
+        common.emit(f"{tag}/accuracy", out["accuracy"],
+                    f"acc={out['accuracy']:.4f} "
+                    f"float={ref['accuracy']:.4f} "
+                    f"drop={ref['accuracy'] - out['accuracy']:.4f}")
+        wire = out["wire_bytes"]
+        common.emit(f"{tag}/wire_bytes", wire["measured_bytes"],
+                    f"float_per_step={wire['float_per_step_bytes']} "
+                    f"ratio={wire['ratio']:.4f}")
+        recs = out["nsr_records"]
+        bounded = [r for r in recs if r.eta_bound != float("inf")]
+        worst = max((r.eta_measured / r.eta_bound for r in bounded),
+                    default=0.0)
+        common.emit(f"{tag}/grad_nsr_frac_of_bound", worst,
+                    f"frac={worst:.3e} n_backward_gemms={len(recs)}")
+        if smoke:
+            assert losses[-1] < losses[0], \
+                f"L={L} loss did not decrease: {losses[0]:.4f} -> " \
+                f"{losses[-1]:.4f}"
+            bad = [r for r in recs if not r.within_bound]
+            assert not bad, f"L={L} gradient NSR over bound: " \
+                            f"{[(r.path, r.kind) for r in bad]}"
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(prog="benchmarks.cnn_train")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid + training-contract assertions")
+    args = ap.parse_args()
+    common.set_smoke(args.smoke)
+    print("name,us_per_call,derived")
+    run()

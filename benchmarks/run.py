@@ -19,6 +19,9 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
                        size + prequant on/off (ISSUE 4 acceptance)
   faults_bench         E15 fault endurance: NSR / top-1 agreement vs
                        bit-error rate x L x target (ISSUE 7 acceptance)
+  cnn_train            E16 BFP train-to-accuracy: quantized backward
+                       GEMMs + compressed gradient exchange at L=4..12
+                       vs float baseline (ISSUE 8 acceptance)
 
 Flags:
   --smoke       tiny shapes, 1 rep — CI rot-check mode (the numbers are
@@ -43,8 +46,8 @@ import sys
 import time
 import traceback
 
-from benchmarks import (blocksize_ablation, cnn_serve_bench, common,
-                        conv_bench, dispatch_bench, engine_bench,
+from benchmarks import (blocksize_ablation, cnn_serve_bench, cnn_train,
+                        common, conv_bench, dispatch_bench, engine_bench,
                         faults_bench, kernel_bench, table1_storage,
                         table2_scheme, table3_sweep, table4_nsr)
 
@@ -60,6 +63,7 @@ _ALL = {
     "dispatch": dispatch_bench.run,
     "cnn_serve": cnn_serve_bench.run,
     "faults": faults_bench.run,
+    "cnn_train": cnn_train.run,
 }
 
 

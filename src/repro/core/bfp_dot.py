@@ -25,6 +25,22 @@ columns are the paper's W rows.  The scheme mapping used here:
 Gradients: quantization is piecewise constant, so by default a
 straight-through estimator passes gradients through the dequantized
 operands (BFP-QAT, beyond-paper; the paper itself is inference-only).
+
+RECONCILIATION with ``repro.grad`` (the BFP autodiff subsystem): the
+``_bfp_matmul_ste`` custom_vjp below is the LEGACY float-gradient mode —
+it engages only when :func:`bfp_matmul_2d` is called directly (the
+emulated backend's internal route) and always returns float gradients
+over the dequantized operands.  Every public entry point
+(``engine.gemm`` / ``engine.conv2d`` / :func:`bfp_dot`) now wraps the
+whole site in the ``repro.grad`` custom VJP FIRST, whose
+``straight_through=True`` fallback reproduces exactly this estimator
+(``g @ wq.T``, ``xq.T @ g`` — pinned bit-exact in
+tests/test_grad.py::test_default_policy_matches_legacy_ste), and whose
+grad-path PolicyMap rules / ``straight_through=False`` additionally
+quantize the backward GEMMs on the engine datapath.  The inner STE
+never fires on the routed path (the outer custom_vjp owns the VJP), so
+the two cannot disagree; this shim is kept for direct
+``bfp_matmul_2d`` callers.
 """
 from __future__ import annotations
 

@@ -37,6 +37,7 @@ __all__ = [
     "snr_db", "nsr_from_snr_db", "snr_db_from_nsr",
     "quantization_noise_var", "predict_matrix_snr", "measure_matrix_snr",
     "matrix_nsr_upper_bound", "gemm_nsr_upper_bound",
+    "grad_dx_nsr_upper_bound", "grad_dw_nsr_upper_bound",
     "single_layer_output_snr", "chain_input_nsr", "LayerSNRReport",
     "analyze_gemm_chain",
 ]
@@ -174,6 +175,34 @@ def gemm_nsr_upper_bound(x2d: jax.Array, w2d: jax.Array,
     # guard must be a float32-representable tiny (1e-300 flushes to 0.0
     # with x64 off, making the guard a no-op and a zero signal -> nan)
     return jnp.square(e_out) / jnp.maximum(sig, jnp.finfo(jnp.float32).tiny)
+
+
+def grad_dx_nsr_upper_bound(g2d: jax.Array, w2d: jax.Array,
+                            policy: BFPPolicy) -> jax.Array:
+    """Upper bound on the measured NSR of the data-gradient GEMM.
+
+    The backward pass computes ``dL/dx = g[M, N] @ W^T[N, K]`` — the
+    same fixed-point GEMM as a forward layer with the incoming gradient
+    on the activation side (``l_i`` bits, activation block scheme,
+    blocks along the N contraction) and the transposed weight on the
+    weight side (``l_w``), so :func:`gemm_nsr_upper_bound` applies
+    verbatim to the grad-side geometry.  ``g2d`` is the [M, N] incoming
+    gradient, ``w2d`` the FORWARD-orientation [K, N] weight; ``policy``
+    must be the policy the backward GEMM actually executes (after any
+    ``repro.grad.fit_grad_policy`` K-tile fitting).
+    """
+    return gemm_nsr_upper_bound(g2d, jnp.swapaxes(w2d, -1, -2), policy)
+
+
+def grad_dw_nsr_upper_bound(x2d: jax.Array, g2d: jax.Array,
+                            policy: BFPPolicy) -> jax.Array:
+    """Upper bound on the measured NSR of the weight-gradient GEMM
+    ``dL/dw = x^T[K, M] @ g[M, N]``: the saved activations land on the
+    activation side, the incoming gradient on the weight side, and the
+    contraction runs over the flattened batch M.  ``x2d`` is the [M, K]
+    forward activation matrix, ``g2d`` the [M, N] incoming gradient;
+    ``policy`` as in :func:`grad_dx_nsr_upper_bound`."""
+    return gemm_nsr_upper_bound(jnp.swapaxes(x2d, -1, -2), g2d, policy)
 
 
 def single_layer_output_snr(snr_i_db: jax.Array,

@@ -292,6 +292,20 @@ def _plan_cls():
     return _PLAN_CLS
 
 
+#: lazily-cached grad subsystem (same cycle-breaking pattern):
+#: repro.grad.vjp builds the custom VJPs ON TOP of gemm_and_tap /
+#: conv_and_tap, so it must import this module, not the reverse
+_GRAD_VJP = None
+
+
+def _grad_vjp():
+    global _GRAD_VJP
+    if _GRAD_VJP is None:
+        from repro.grad import vjp
+        _GRAD_VJP = vjp
+    return _GRAD_VJP
+
+
 def gemm(x: Any, w: Any, policy: PolicyLike = None, *,
          path: Optional[str] = None,
          key: Optional[jax.Array] = None,
@@ -313,6 +327,12 @@ def gemm(x: Any, w: Any, policy: PolicyLike = None, *,
     """
     if isinstance(policy, _plan_cls()):
         return policy.gemm(x, w, path=path, key=key, out_policy=out_policy)
+    gv = _grad_vjp()
+    if gv.routable(x, w, key, out_policy) and w.ndim == 2:
+        # dense float operands: the custom-VJP route — identical forward
+        # (it calls gemm_and_tap), backward GEMMs through the backend
+        # registry under the grad-path policies (repro.grad, §12)
+        return gv.gemm(x, w, policy, path)
     # policy None goes through the registered "float" backend, so
     # re-registering it (instrumented or accelerated variants) also
     # covers policy-None GEMMs
@@ -346,6 +366,10 @@ def conv2d(x: Any, w: Any, policy: PolicyLike = None, *,
         return policy.conv2d(x, w, path=path, stride=stride,
                              padding=padding, key=key,
                              out_policy=out_policy)
+    gv = _grad_vjp()
+    if gv.routable(x, w, key, out_policy) and w.ndim == 4 \
+            and padding in ("SAME", "VALID"):
+        return gv.conv2d(x, w, policy, stride, padding, path)
     return conv_and_tap(x, w, resolve_policy(policy, path), stride,
                         padding, key, path=path, out_policy=out_policy)
 

@@ -50,8 +50,9 @@ from repro.core.prequant import (_path_keys, cnn_rule_path,
                                  quantize_cnn_param_tree,
                                  quantize_param_tree)
 from repro.engine import backends as BK
-from repro.engine.core import conv_and_tap, gemm_and_tap
+from repro.engine.core import _grad_vjp, conv_and_tap, gemm_and_tap
 from repro.engine.policy_map import PolicyLike, PolicyMap, resolve_policy
+from repro.grad.paths import GradSpec, grad_path, resolve_grad_policy
 
 __all__ = ["Site", "Plan", "bind", "unpack_packed"]
 
@@ -84,6 +85,13 @@ class Site:
     backend: BK.Backend             #: concrete execution, selected at bind
     fallback: bool = False          #: requested backend was downgraded
     prequantized: bool = False      #: weight leaf holds the wire format
+    #: backward-GEMM plans (repro.grad, DESIGN.md §12), resolved on the
+    #: derived grad paths (``path#dx`` / ``path#dw``) at bind time —
+    #: policy AND backend, so strict binds refuse unsupported backward
+    #: backends up front.  None (legacy construction) means "resolve per
+    #: call against the plan's original policy".
+    dx: Optional[GradSpec] = None
+    dw: Optional[GradSpec] = None
 
 
 class Plan:
@@ -160,12 +168,17 @@ class Plan:
     def gemm(self, x: Any, w: Any, *, path: Optional[str] = None,
              key: Optional[jax.Array] = None, out_policy=None) -> Any:
         site = self._sites.get(path)
+        gv = _grad_vjp()
         with self._tuned():
             if site is not None and site.kind == "gemm":
+                if gv.routable(x, w, key, out_policy) and w.ndim == 2:
+                    return gv.gemm_bound(x, w, site)
                 return gemm_and_tap(x, w, site.policy, key,
                                     backend=site.backend, path=path,
                                     out_policy=out_policy)
             # unbound path: legacy per-call resolution (strict kept)
+            if gv.routable(x, w, key, out_policy) and w.ndim == 2:
+                return gv.gemm(x, w, self.policy, path, self.strict)
             return gemm_and_tap(x, w, resolve_policy(self.policy, path),
                                 key, strict=self.strict, path=path,
                                 warned=self._warned, out_policy=out_policy)
@@ -174,11 +187,19 @@ class Plan:
                stride: int = 1, padding: str = "SAME",
                key: Optional[jax.Array] = None, out_policy=None) -> Any:
         site = self._sites.get(path)
+        gv = _grad_vjp()
+        routed = (gv.routable(x, w, key, out_policy) and w.ndim == 4
+                  and padding in ("SAME", "VALID"))
         with self._tuned():
             if site is not None and site.kind == "conv":
+                if routed:
+                    return gv.conv2d_bound(x, w, site, stride, padding)
                 return conv_and_tap(x, w, site.policy, stride, padding,
                                     key, backend=site.backend, path=path,
                                     out_policy=out_policy)
+            if routed:
+                return gv.conv2d(x, w, self.policy, stride, padding,
+                                 path, self.strict)
             return conv_and_tap(x, w, resolve_policy(self.policy, path),
                                 stride, padding, key, strict=self.strict,
                                 path=path, warned=self._warned,
@@ -214,8 +235,17 @@ class Plan:
                    f"{s.policy.scheme.value}")
             extra = (" (fallback)" if s.fallback else "") + \
                     (" [prequant]" if s.prequantized else "")
+
+            def gdesc(spec):
+                if spec is None or spec.policy is None:
+                    return "float"
+                gp = spec.policy
+                be = spec.backend.name if spec.backend is not None else "?"
+                return f"L{gp.l_w}/{gp.l_i}@{be}"
+
+            grad = f" grad[dx={gdesc(s.dx)},dw={gdesc(s.dw)}]"
             lines.append(f"{path:<24} {s.kind:<5} {pol:<24} "
-                         f"-> {s.backend.name}{extra}")
+                         f"-> {s.backend.name}{extra}{grad}")
         return "\n".join(lines)
 
 
@@ -345,6 +375,28 @@ def bind(params: Any, policy: PolicyLike,
         qparams = quantizer(params, qpolicy)
 
     warned: set = set()   # fresh per bind: each plan reports its own
+
+    def _bind_grad(path: str, which: str) -> GradSpec:
+        # backward plans resolve on the DERIVED grad path; a float
+        # backward GEMM needs no backend choice, a BFP one selects (and
+        # under strict, refuses) its backend HERE — before any training
+        # step runs.  The weight leaf is irrelevant to the backward
+        # GEMMs (they contract transposed/gradient operands), so support
+        # is checked policy-only; a K-tile fitted at call time
+        # (grad.fit_grad_policy) re-selects honestly then.
+        gpol = resolve_grad_policy(policy, path, which)
+        if gpol is None:
+            return GradSpec(None, None)
+        gpath = grad_path(path, which)
+        if (gpol.backend_name, path) in warned:
+            # the forward site already reported this exact downgrade;
+            # don't repeat it two more times for #dx/#dw (strict raises
+            # regardless — the dedup is warning-only)
+            warned.add((gpol.backend_name, gpath))
+        be = BK.select_backend(gpol, None, strict=strict, path=gpath,
+                               warned=warned)
+        return GradSpec(gpol, be)
+
     sites: Dict[str, Site] = {}
     for path, skind, leaf in _discover_sites(qparams, kind):
         if wanted is not None and path not in wanted:
@@ -359,7 +411,9 @@ def bind(params: Any, policy: PolicyLike,
                                    warned=warned)
             fb = be.name != pol.backend_name
         sites[path] = Site(path, skind, pol, be, fb,
-                           prequantized=is_prequant(leaf))
+                           prequantized=is_prequant(leaf),
+                           dx=_bind_grad(path, "dx"),
+                           dw=_bind_grad(path, "dw"))
 
     if wanted is not None:  # policy-only entries for undiscovered paths
         for path, k in wanted.items():
@@ -372,6 +426,8 @@ def bind(params: Any, policy: PolicyLike,
                 be = BK.select_backend(pol, None, strict=strict, path=path,
                                        warned=warned)
                 fb = be.name != pol.backend_name
-            sites[path] = Site(path, k or "gemm", pol, be, fb)
+            sites[path] = Site(path, k or "gemm", pol, be, fb,
+                               dx=_bind_grad(path, "dx"),
+                               dw=_bind_grad(path, "dw"))
 
     return Plan(sites, qparams, policy, strict, tune_cache=tune_cache)

@@ -51,10 +51,24 @@ class TapEvent:
     HWIO kernel, NHWC output).  ``y_float`` is the float-reference
     output of the same site, computed only when a registered tap asked
     for it (``want_float=True``); otherwise None.
+
+    Backward events (``kind`` ending in ``_dx`` / ``_dw``) report the
+    backward GEMM as executed: ``x``/``w`` are its 2-D left/right
+    operands (already transposed — e.g. ``gemm_dx`` carries the incoming
+    gradient and W^T), ``policy`` the FITTED backward policy
+    (``repro.grad.fit_grad_policy``), so
+    ``core.nsr.gemm_nsr_upper_bound(ev.x, ev.w, ev.policy)`` bounds
+    ``ev.y`` directly.  Backward events fire only when the backward pass
+    itself runs eagerly (e.g. un-jitted ``jax.grad``), same tracer rule
+    as forward events.
     """
 
-    path: Optional[str]     #: layer path ("conv1_1", "blocks/3/c1", ...)
-    kind: str               #: "gemm" | "conv"
+    path: Optional[str]     #: layer path ("conv1_1", ...); backward
+                            #: events carry the DERIVED grad path
+                            #: ("conv1_1#dx" / "conv1_1#dw")
+    kind: str               #: forward: "gemm" | "conv"; backward GEMMs
+                            #: (repro.grad custom VJPs): "gemm_dx" |
+                            #: "gemm_dw" | "conv_dx" | "conv_dw"
     policy: Any             #: resolved BFPPolicy (None = float site)
     backend: str            #: name of the backend that executed
     x: jax.Array

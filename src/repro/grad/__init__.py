@@ -1,0 +1,34 @@
+"""BFP autodiff — quantized backward GEMMs on the engine datapath.
+
+The paper's error analysis stops at inference; this package extends it
+to training (DESIGN.md §12).  ``engine.gemm`` / ``engine.conv2d`` route
+through the custom VJPs built here, so the two backward GEMMs of every
+site —
+
+    dL/dx = dy @ W^T        (the data gradient)
+    dL/dw = x^T @ dy        (the weight gradient)
+
+— execute through the same backend registry (float / emulated / pallas,
+honest fallback) as the forward pass, under their own policies resolved
+on DERIVED GRAD PATHS: a site ``features/conv1`` owns the backward sites
+``features/conv1#dx`` and ``features/conv1#dw``.  A :class:`PolicyMap`
+rule whose pattern contains ``#`` is a grad rule and wins on grad paths;
+without one, the backward precision follows the forward site policy
+(``straight_through=True`` keeps the legacy float-STE gradients).
+
+Backward executions emit ``engine.taps`` events
+(``kind="gemm_dx" | "gemm_dw" | "conv_dx" | "conv_dw"``) so measured
+gradient NSR is observable on the real datapath and comparable against
+the ``core.nsr`` gradient bounds (:func:`measure_gradient_nsr`).
+"""
+from repro.grad.nsr import GradNSRRecord, measure_gradient_nsr
+from repro.grad.paths import (GRAD_KINDS, GradSpec, fit_grad_policy,
+                              grad_path, resolve_grad_policy)
+from repro.grad.vjp import gemm, gemm_bound, conv2d, conv2d_bound
+
+__all__ = [
+    "GRAD_KINDS", "GradSpec", "grad_path", "resolve_grad_policy",
+    "fit_grad_policy",
+    "gemm", "gemm_bound", "conv2d", "conv2d_bound",
+    "measure_gradient_nsr", "GradNSRRecord",
+]

@@ -1,0 +1,76 @@
+"""Measured gradient NSR vs the analytic bound, per backward GEMM.
+
+The backward tap events carry EXACTLY the operands the backward GEMM
+executed (already transposed, already tile-fitted policy), so the same
+:func:`repro.core.nsr.gemm_nsr_upper_bound` that bounds a forward GEMM
+bounds a backward one — no separate derivation, just grad-side geometry
+(DESIGN.md §12.4).  :func:`measure_gradient_nsr` runs a gradient
+computation under a ``want_float`` tap and returns one record per
+backward event with both sides of the inequality
+
+    eta_measured  <=  eta_bound        (hard, deterministic)
+
+which tests/test_grad.py and the train-smoke CI gate assert across
+L = 4..12.  Taps observe concrete eager execution only, so ``fn`` must
+run un-jitted (the Table-4 analysis convention).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional
+
+import jax.numpy as jnp
+
+from repro.core.nsr import gemm_nsr_upper_bound
+from repro.engine import taps as TAPS
+
+__all__ = ["GradNSRRecord", "BACKWARD_KINDS", "measure_gradient_nsr"]
+
+#: Tap kinds emitted by the backward GEMMs (repro.grad.vjp).
+BACKWARD_KINDS = ("gemm_dx", "gemm_dw", "conv_dx", "conv_dw")
+
+
+@dataclasses.dataclass
+class GradNSRRecord:
+    """One backward GEMM: measured output NSR vs the analytic bound."""
+
+    path: Optional[str]      #: derived grad path ("c1#dx", ...)
+    kind: str                #: "gemm_dx" | "gemm_dw" | "conv_dx" | "conv_dw"
+    backend: str
+    policy: Any              #: the FITTED policy that executed (None=float)
+    eta_measured: float
+    eta_bound: float         #: inf for float backward GEMMs (no formatting)
+
+    @property
+    def within_bound(self) -> bool:
+        return self.eta_measured <= self.eta_bound
+
+
+def measure_gradient_nsr(fn: Callable[[], Any]) -> List[GradNSRRecord]:
+    """Run ``fn`` (some eager gradient computation) under a measuring tap.
+
+    Every backward tap event yields one record: ``eta_measured`` is the
+    energy ratio ||y - y_float||^2 / ||y_float||^2 of the backward
+    GEMM's output against its float reference on the SAME operands
+    (``want_float``), ``eta_bound`` the hard worst-case bound from the
+    block geometry of those operands.  Float backward GEMMs (STE / float
+    sites) measure ~0 and carry an infinite bound.  Returns records in
+    execution order; forward events are ignored.
+    """
+    records: List[GradNSRRecord] = []
+
+    def capture(ev: TAPS.TapEvent):
+        if ev.kind not in BACKWARD_KINDS:
+            return
+        yf = ev.y_float
+        sig = float(jnp.sum(jnp.square(yf)))
+        err = float(jnp.sum(jnp.square(ev.y - yf)))
+        eta = err / max(sig, float(jnp.finfo(jnp.float32).tiny))
+        bound = (float("inf") if ev.policy is None else
+                 float(gemm_nsr_upper_bound(ev.x, ev.w, ev.policy)))
+        records.append(GradNSRRecord(ev.path, ev.kind, ev.backend,
+                                     ev.policy, eta, bound))
+
+    with TAPS.taps(capture, want_float=True):
+        fn()
+    return records

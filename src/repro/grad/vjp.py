@@ -1,0 +1,249 @@
+"""Custom VJPs routing backward GEMMs through the BFP engine (§12.3).
+
+One :func:`jax.custom_vjp` per (site configuration): the primal runs the
+unchanged forward datapath (``engine.core.gemm_and_tap`` /
+``conv_and_tap`` — forward numerics and forward tap events are
+bit-identical to the unrouted engine), and the backward pass lowers the
+two gradient contractions onto ``engine.core._gemm_exec``:
+
+    dL/dx = dy[M, N] @ W^T[N, K]       ("gemm_dx" / "conv_dx")
+    dL/dw = x^T[K, M] @ dy[M, N]       ("gemm_dw" / "conv_dw")
+
+so each backward GEMM gets real backend selection (float / emulated /
+pallas with honest fallback) under its own resolved policy, and emits a
+backward tap event carrying exactly the executed operands — which is
+what makes measured gradient NSR comparable against
+``core.nsr.gemm_nsr_upper_bound`` on the same geometry.
+
+Operand orientation inside a backward GEMM: the LEFT operand is the
+activation side of the policy (``l_i`` bits, activation block scheme)
+and the RIGHT operand the weight side (``l_w``) — for dL/dx that puts
+the incoming gradient on the activation side and W^T on the weight
+side; for dL/dw the saved activations are left and the gradient right.
+
+The residuals saved by the forward pass are the RAW operands; the
+backward pass re-derives the site's dequantized operands (exactly the
+legacy ``core.bfp_dot`` STE linearization point), so with float grad
+policies the gradients are bit-identical to the legacy straight-through
+estimator, and to plain JAX autodiff when the site itself is float.
+
+Builders are ``lru_cache``d on frozen config dataclasses: a model with
+stable (policy, path) sites reuses one ``custom_vjp`` instance per site
+across steps, so jit tracing sees a stable callable identity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bfp_dot import quantize_activations, quantize_weights
+from repro.core.conv_utils import conv_weight_matrix, im2col
+from repro.core.policy import BFPPolicy
+from repro.engine import core as EC
+from repro.engine import taps as TAPS
+from repro.engine.policy_map import PolicyLike, resolve_policy
+from repro.grad.paths import (GradSpec, fit_grad_policy, grad_path,
+                              resolve_grad_policy)
+
+__all__ = ["gemm", "gemm_bound", "conv2d", "conv2d_bound", "routable"]
+
+
+def routable(x: Any, w: Any, key, out_policy) -> bool:
+    """Can this engine call take the custom-VJP route?
+
+    Dense float operands only: prequant ``{"m", "s"}`` weight dicts hold
+    integer mantissas (nothing to differentiate), stochastic-rounding
+    ``key`` and wire-format ``out_policy`` outputs are inference-side
+    features.  Everything refused here keeps the legacy non-custom-VJP
+    engine path, unchanged.
+    """
+    if key is not None or out_policy is not None:
+        return False
+    for a in (x, w):
+        if not (hasattr(a, "ndim") and hasattr(a, "dtype")):
+            return False
+        if not jnp.issubdtype(a.dtype, jnp.floating):
+            return False
+    return True
+
+
+def _linearize(x: jax.Array, w: jax.Array, pol: Optional[BFPPolicy]):
+    """The STE linearization point: the site's dequantized operands.
+
+    Float backward GEMMs run over THESE (legacy ``_ste_fwd`` semantics);
+    quantized backward GEMMs also start from them — the backward
+    arithmetic then adds its own formatting, exactly like a hardware
+    datapath whose gradient buffers hold the forward wire values.
+    """
+    if pol is None:
+        return x, w
+    xq, wq = x, w
+    if pol.quantize_inputs:
+        x2d = x.reshape(-1, x.shape[-1])
+        xq = quantize_activations(x2d, pol).dequantize().reshape(x.shape)
+    if pol.quantize_weights:
+        wq = quantize_weights(w, pol).dequantize()
+    return xq, wq
+
+
+def _grad_gemm(a2d: jax.Array, b2d: jax.Array, spec: GradSpec,
+               gpath: Optional[str], kind: str, strict: bool) -> jax.Array:
+    """One backward GEMM ``a2d[M, K'] @ b2d[K', N']`` through the engine,
+    with its backward tap event."""
+    pol = fit_grad_policy(spec.policy, a2d.shape[-1])
+    # a fitted tile invalidates the bind-time backend choice (pallas
+    # support depends on block_k) -> honest re-selection per call
+    be = spec.backend if pol == spec.policy else None
+    out, used = EC._gemm_exec(a2d, b2d, pol, None, backend=be,
+                              strict=strict, path=gpath)
+    if TAPS.active():
+        out = TAPS.emit(kind, gpath, pol, used.name, a2d, b2d, out,
+                        float_fn=lambda: EC._gemm_exec(a2d, b2d,
+                                                       None, None)[0])
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class _GemmCfg:
+    pol: Optional[BFPPolicy]
+    backend: Any                 #: pre-selected forward Backend or None
+    dx: GradSpec
+    dw: GradSpec
+    path: Optional[str] = None
+    strict: bool = False
+
+
+@lru_cache(maxsize=None)
+def _gemm_fn(cfg: _GemmCfg):
+    def primal(x, w):
+        return EC.gemm_and_tap(x, w, cfg.pol, None, backend=cfg.backend,
+                               strict=cfg.strict, path=cfg.path)
+
+    @jax.custom_vjp
+    def f(x, w):
+        return primal(x, w)
+
+    def fwd(x, w):
+        return primal(x, w), (x, w)
+
+    def bwd(res, g):
+        x, w = res
+        xq, wq = _linearize(x, w, cfg.pol)
+        g2d = g.reshape(-1, g.shape[-1])
+        x2d = xq.reshape(-1, xq.shape[-1])
+        dx = _grad_gemm(g2d, wq.T, cfg.dx, grad_path(cfg.path, "dx"),
+                        "gemm_dx", cfg.strict)
+        dw = _grad_gemm(x2d.T, g2d, cfg.dw, grad_path(cfg.path, "dw"),
+                        "gemm_dw", cfg.strict)
+        return dx.reshape(x.shape).astype(x.dtype), dw.astype(w.dtype)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+@dataclasses.dataclass(frozen=True)
+class _ConvCfg:
+    pol: Optional[BFPPolicy]
+    backend: Any
+    dx: GradSpec
+    dw: GradSpec
+    stride: int
+    padding: str
+    path: Optional[str] = None
+    strict: bool = False
+
+
+@lru_cache(maxsize=None)
+def _conv_fn(cfg: _ConvCfg):
+    def primal(x, w):
+        return EC.conv_and_tap(x, w, cfg.pol, cfg.stride, cfg.padding,
+                               None, backend=cfg.backend,
+                               strict=cfg.strict, path=cfg.path)
+
+    @jax.custom_vjp
+    def f(x, w):
+        return primal(x, w)
+
+    def fwd(x, w):
+        return primal(x, w), (x, w)
+
+    def bwd(res, g):
+        x, w = res
+        kh, kw, _, oc = w.shape
+
+        def patches(t):
+            return im2col(t, kh, kw, cfg.stride, cfg.padding)[0]
+
+        cols = patches(x)
+        colsq, wmatq = _linearize(cols, conv_weight_matrix(w), cfg.pol)
+        g2d = g.reshape(-1, oc)
+        dcols = _grad_gemm(g2d, wmatq.T, cfg.dx,
+                           grad_path(cfg.path, "dx"), "conv_dx",
+                           cfg.strict)
+        # col2im is the (linear) transpose of im2col — scatter-add the
+        # patch gradients back onto the input feature map
+        _, pull = jax.vjp(patches, x)
+        dx, = pull(dcols)
+        dwmat = _grad_gemm(colsq.T, g2d, cfg.dw,
+                           grad_path(cfg.path, "dw"), "conv_dw",
+                           cfg.strict)
+        return dx.astype(x.dtype), dwmat.reshape(w.shape).astype(w.dtype)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Entry points — per-call (resolve here) and plan-bound (pre-resolved Site)
+# ---------------------------------------------------------------------------
+
+def _specs(policy: PolicyLike, path: Optional[str]):
+    return (GradSpec(resolve_grad_policy(policy, path, "dx")),
+            GradSpec(resolve_grad_policy(policy, path, "dw")))
+
+
+def _site_spec(site, which: str) -> GradSpec:
+    """Grad spec of a bound Site; a legacy hand-built Site (dx/dw None)
+    falls back to its own forward policy with the STE default."""
+    spec = getattr(site, which)
+    if spec is not None:
+        return spec
+    pol = site.policy
+    if pol is None or pol.straight_through:
+        return GradSpec(None, None)
+    return GradSpec(pol, None)
+
+
+def gemm(x, w, policy: PolicyLike, path: Optional[str],
+         strict: bool = False):
+    dx, dw = _specs(policy, path)
+    cfg = _GemmCfg(resolve_policy(policy, path), None, dx, dw, path,
+                   strict)
+    return _gemm_fn(cfg)(x, w)
+
+
+def gemm_bound(x, w, site):
+    """Dispatch for a bound ``engine.plan.Site`` (grad specs resolved and
+    backends selected at bind time)."""
+    cfg = _GemmCfg(site.policy, site.backend, _site_spec(site, "dx"),
+                   _site_spec(site, "dw"), site.path, False)
+    return _gemm_fn(cfg)(x, w)
+
+
+def conv2d(x, w, policy: PolicyLike, stride: int, padding: str,
+           path: Optional[str], strict: bool = False):
+    dx, dw = _specs(policy, path)
+    cfg = _ConvCfg(resolve_policy(policy, path), None, dx, dw, stride,
+                   padding, path, strict)
+    return _conv_fn(cfg)(x, w)
+
+
+def conv2d_bound(x, w, site, stride: int, padding: str):
+    cfg = _ConvCfg(site.policy, site.backend, _site_spec(site, "dx"),
+                   _site_spec(site, "dw"), stride, padding, site.path,
+                   False)
+    return _conv_fn(cfg)(x, w)

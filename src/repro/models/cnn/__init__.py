@@ -18,7 +18,19 @@ from repro.models.cnn import resnet as _resnet
 from repro.models.cnn import small as _small
 from repro.models.cnn import vgg as _vgg
 
-__all__ = ["CnnSpec", "MODELS"]
+__all__ = ["CnnSpec", "MODELS", "head_logits"]
+
+
+def head_logits(out):
+    """Classifier logits from an ``apply()`` output.
+
+    Models with auxiliary heads (GoogLeNet) return a tuple; head 0 is
+    the classifier by :class:`CnnSpec` convention.  Single-head models
+    return the logits array directly.  Training and evaluation code
+    (``repro.train.cnn``, the serve engines) go through this one helper
+    so every registered model trains with the same loss plumbing.
+    """
+    return out[0] if isinstance(out, tuple) else out
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,284 @@
+"""Data-parallel BFP CNN training with compressed gradient exchange.
+
+The paper's claim — CNNs tolerate BFP computation error — verified in
+TRAINING (DESIGN.md §12.5): forward and backward GEMMs both run on the
+BFP engine datapath (``repro.grad`` custom VJPs, grad-path policies),
+and the data-parallel gradient exchange is block-formatted over the
+packed wire format with error feedback (``repro.dist.compress``).
+
+W logical workers on one host: the global batch splits into W
+microbatches, ``jax.vmap(value_and_grad)`` produces per-worker
+gradients, each worker compresses ``g + residual`` through the BFP wire
+(carrying its own residual), and the decompressed contributions are
+averaged — semantically an all-reduce over the compressed wire.  Two
+interchangeable exchange routes, pinned bit-exact to each other:
+
+  * the jitted in-graph model (``dist.compress.make_compressor``) — the
+    fast training step;
+  * the REAL packed bytes (``dist.compress.packed_allreduce``) — eager,
+    serializes every worker contribution through the CRC-verified
+    :class:`~repro.core.packed.PackedBFP` container and reports actual
+    wire bytes.
+
+``train_cnn`` drives steps, measures gradient NSR on the live backward
+datapath (``repro.grad.measure_gradient_nsr``) on a schedule, evaluates
+accuracy, and optionally round-trips the full train state — INCLUDING
+the error-feedback residuals — through ``checkpoint.store``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import image_batch
+from repro.dist import compress as DC
+from repro.engine.policy_map import PolicyLike
+from repro.grad.nsr import GradNSRRecord, measure_gradient_nsr
+from repro.models.cnn import MODELS, head_logits
+from repro.optim import optimizers as opt
+
+__all__ = ["CnnTrainConfig", "CnnTrainState", "init_state", "data_batch",
+           "make_cnn_train_step", "packed_exchange_step", "train_cnn"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CnnTrainConfig:
+    """Static training configuration (hashable; closed over by jit)."""
+
+    model: str = "cifarnet"
+    workers: int = 2             #: logical data-parallel workers
+    batch: int = 64              #: GLOBAL batch (split across workers)
+    num_classes: int = 10
+    lr: float = 2e-3
+    weight_decay: float = 1e-4
+    max_grad_norm: float = 1.0
+    policy: PolicyLike = None    #: forward+backward datapath policy
+    grad_bits: Optional[int] = None   #: wire mantissa bits (None = float
+                                      #: exchange, no compression)
+    wire_block: int = DC.WIRE_BLOCK
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.batch % self.workers:
+            raise ValueError(f"batch={self.batch} must split across "
+                             f"workers={self.workers}")
+        if self.grad_bits is not None:
+            DC.validate_wire_block(self.wire_block)
+
+
+class CnnTrainState(NamedTuple):
+    params: Any
+    opt_state: opt.OptState
+    residual: Any        #: per-worker EF residuals, leaves [W, ...]
+    step: jax.Array
+
+
+def _spec(cfg: CnnTrainConfig):
+    return MODELS[cfg.model]
+
+
+def init_state(cfg: CnnTrainConfig, key=None) -> CnnTrainState:
+    """Fresh params + optimizer + zero per-worker residuals."""
+    key = jax.random.PRNGKey(cfg.seed) if key is None else key
+    params = _spec(cfg).init(key, reduced=True,
+                             num_classes=cfg.num_classes)
+    residual = jax.tree_util.tree_map(
+        lambda p: jnp.zeros((cfg.workers,) + p.shape, jnp.float32), params)
+    return CnnTrainState(params=params, opt_state=opt.adamw_init(params),
+                         residual=residual,
+                         step=jnp.zeros((), jnp.int32))
+
+
+def data_batch(cfg: CnnTrainConfig, step: int, templates=None):
+    """Deterministic synthetic batch for ``step`` (templates persist)."""
+    spec = _spec(cfg)
+    hw, _, ch = spec.input_shape(reduced=True)
+    if templates is None:
+        _, _, templates = image_batch(
+            jax.random.PRNGKey(1234 + cfg.seed), cfg.num_classes, 2, hw, ch)
+    x, y, _ = image_batch(
+        jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step),
+        cfg.num_classes, cfg.batch, hw, ch, templates)
+    return x, y, templates
+
+
+def cnn_loss(params, apply_fn, x, y, policy: PolicyLike,
+             num_classes: int) -> jax.Array:
+    logits = head_logits(apply_fn(params, x, policy))
+    onehot = jax.nn.one_hot(y, num_classes, dtype=jnp.float32)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    return -jnp.mean(jnp.sum(logp * onehot, axis=-1))
+
+
+def _worker_grads(cfg: CnnTrainConfig, apply_fn, params, x, y):
+    """Per-worker (loss, grads): leaves [W, ...]."""
+    mb = cfg.batch // cfg.workers
+    xs = x.reshape(cfg.workers, mb, *x.shape[1:])
+    ys = y.reshape(cfg.workers, mb)
+
+    def loss_fn(p, xw, yw):
+        return cnn_loss(p, apply_fn, xw, yw, cfg.policy, cfg.num_classes)
+
+    return jax.vmap(jax.value_and_grad(loss_fn),
+                    in_axes=(None, 0, 0))(params, xs, ys)
+
+
+def _apply_update(cfg: CnnTrainConfig, state: CnnTrainState, mean_g,
+                  residual, losses) -> Tuple[CnnTrainState, Dict]:
+    g, gnorm = opt.clip_by_global_norm(mean_g, cfg.max_grad_norm)
+    params, opt_state = opt.adamw_update(
+        g, state.opt_state, state.params, cfg.lr,
+        weight_decay=cfg.weight_decay)
+    new = CnnTrainState(params, opt_state, residual, state.step + 1)
+    return new, {"loss": jnp.mean(losses), "grad_norm": gnorm}
+
+
+def make_cnn_train_step(cfg: CnnTrainConfig, apply_fn=None):
+    """Jit-able ``(state, (x, y)) -> (state, metrics)``.
+
+    Gradient exchange uses the in-graph wire model
+    (``dist.compress.make_compressor``) vmapped over workers — bit-exact
+    to :func:`packed_exchange_step`, which moves the actual bytes.
+    """
+    apply_fn = apply_fn or _spec(cfg).apply
+    if cfg.grad_bits is not None:
+        _, transform = DC.make_compressor(cfg.grad_bits, cfg.wire_block)
+
+    def step_fn(state: CnnTrainState, batch):
+        x, y = batch
+        losses, grads = _worker_grads(cfg, apply_fn, state.params, x, y)
+        if cfg.grad_bits is not None:
+            q, residual = jax.vmap(transform)(grads, state.residual)
+            mean_g = jax.tree_util.tree_map(lambda t: jnp.mean(t, 0), q)
+        else:
+            residual = state.residual
+            mean_g = jax.tree_util.tree_map(lambda t: jnp.mean(t, 0),
+                                            grads)
+        return _apply_update(cfg, state, mean_g, residual, losses)
+
+    return step_fn
+
+
+def packed_exchange_step(cfg: CnnTrainConfig, state: CnnTrainState,
+                         batch, apply_fn=None
+                         ) -> Tuple[CnnTrainState, Dict]:
+    """One eager step exchanging gradients over the REAL packed wire.
+
+    Identical arithmetic to :func:`make_cnn_train_step` (pinned in
+    tests/test_train_cnn.py) with the compression routed through
+    :func:`dist.compress.packed_allreduce`: every worker contribution is
+    serialized, CRC-verified, and counted.  ``metrics["wire_bytes"]``
+    reports the measured exchange traffic of this step.
+    """
+    if cfg.grad_bits is None:
+        raise ValueError("packed exchange needs grad_bits (a wire format)")
+    apply_fn = apply_fn or _spec(cfg).apply
+    x, y = batch
+    losses, grads = _worker_grads(cfg, apply_fn, state.params, x, y)
+    mean_g, residual, n_bytes = DC.packed_allreduce(
+        grads, state.residual, cfg.grad_bits, cfg.wire_block)
+    new, metrics = _apply_update(cfg, state, mean_g, residual, losses)
+    metrics["wire_bytes"] = n_bytes
+    return new, metrics
+
+
+def evaluate(cfg: CnnTrainConfig, params, templates, batch: int = 256
+             ) -> float:
+    """Top-1 accuracy on a held-out deterministic eval batch."""
+    spec = _spec(cfg)
+    hw, _, ch = spec.input_shape(reduced=True)
+    x, y, _ = image_batch(jax.random.PRNGKey(999), cfg.num_classes, batch,
+                          hw, ch, templates)
+    logits = head_logits(spec.apply(params, x, cfg.policy))
+    return float(jnp.mean(jnp.argmax(logits, -1) == y))
+
+
+def train_cnn(cfg: CnnTrainConfig, steps: int = 60, *,
+              eval_every: int = 0, eval_batch: int = 256,
+              measure_nsr_every: int = 0,
+              packed_wire_steps: int = 0,
+              ckpt_dir: Optional[str] = None,
+              jit: bool = True) -> Dict[str, Any]:
+    """Train ``cfg.model`` for ``steps`` and report curves + wire bytes.
+
+    Args:
+      eval_every: evaluate accuracy every N steps (and always at the
+        end); 0 = final only.
+      measure_nsr_every: every N steps, additionally run ONE eager
+        tapped gradient computation on the current batch (state does not
+        advance) and record per-backward-GEMM measured NSR vs bound.
+      packed_wire_steps: run the FIRST N steps through the real packed
+        wire (:func:`packed_exchange_step`) instead of the jitted model
+        — measures actual bytes while training identically (the two
+        routes are bit-exact).
+      ckpt_dir: when set, save the final state (residuals included)
+        there and verify a restore round trip.
+
+    Returns a dict with ``history`` (per-step loss/grad_norm),
+    ``accuracy``, ``eval_curve``, ``nsr_records``, ``wire_bytes`` (sum
+    over packed steps, plus an analytic per-step report), ``state``.
+    """
+    state = init_state(cfg)
+    _, _, templates = data_batch(cfg, 0)
+    step_fn = make_cnn_train_step(cfg)
+    if jit:
+        step_fn = jax.jit(step_fn)
+
+    history: List[Dict[str, float]] = []
+    eval_curve: List[Tuple[int, float]] = []
+    nsr_records: List[GradNSRRecord] = []
+    wire_bytes = 0
+
+    for i in range(steps):
+        x, y, _ = data_batch(cfg, i, templates)
+
+        if measure_nsr_every and i % measure_nsr_every == 0:
+            params = state.params
+
+            def grad_once():
+                def loss_fn(p):
+                    return cnn_loss(p, _spec(cfg).apply, x, y, cfg.policy,
+                                    cfg.num_classes)
+                jax.grad(loss_fn)(params)
+
+            nsr_records.extend(measure_gradient_nsr(grad_once))
+
+        if cfg.grad_bits is not None and i < packed_wire_steps:
+            state, metrics = packed_exchange_step(cfg, state, (x, y))
+            wire_bytes += metrics.pop("wire_bytes")
+        else:
+            state, metrics = step_fn(state, (x, y))
+        history.append({k: float(v) for k, v in metrics.items()})
+
+        if eval_every and (i + 1) % eval_every == 0 and i + 1 < steps:
+            eval_curve.append((i + 1,
+                               evaluate(cfg, state.params, templates,
+                                        eval_batch)))
+
+    acc = evaluate(cfg, state.params, templates, eval_batch)
+    eval_curve.append((steps, acc))
+
+    if ckpt_dir is not None:
+        from repro.checkpoint import store
+        store.save(ckpt_dir, int(state.step), state)
+        restored, rstep = store.restore(ckpt_dir, state)
+        assert rstep == int(state.step)
+        state = restored
+
+    wire = None
+    if cfg.grad_bits is not None:
+        # analytic per-step exchange bytes (all workers) + float baseline
+        g_like = jax.tree_util.tree_map(lambda p: p, state.params)
+        rep = DC.wire_report(g_like, cfg.grad_bits, cfg.wire_block)
+        wire = {"measured_bytes": wire_bytes,
+                "packed_steps": min(packed_wire_steps, steps),
+                "per_step_bytes": rep["wire_bytes"] * cfg.workers,
+                "float_per_step_bytes": rep["float_bytes"] * cfg.workers,
+                "ratio": rep["ratio"]}
+
+    return {"history": history, "accuracy": acc, "eval_curve": eval_curve,
+            "nsr_records": nsr_records, "wire_bytes": wire,
+            "state": state}

@@ -1,0 +1,328 @@
+"""The BFP autodiff subsystem (ISSUE 8 acceptance).
+
+Key contracts:
+  * float grad-policy custom-VJP gradients are BIT-IDENTICAL to plain
+    JAX autodiff of the float path (gemm AND conv);
+  * the routed default-policy (straight_through=True) gradients equal
+    the legacy core.bfp_dot STE bit-exactly — the reconciliation pin the
+    bfp_dot module docstring points at;
+  * with quantized backward GEMMs the measured gradient NSR (backward
+    tap events) never exceeds core.nsr's bound, across L = 4..12;
+  * #dx/#dw PolicyMap rules override the site rule, fall back to the
+    site policy when absent, an explicit None rule pins float, and
+    strict bind raises for an unsupported backward backend;
+  * plan-bound gradients equal per-call gradients.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine as EG
+from repro.core import BFPPolicy, Scheme, bfp
+from repro.core.bfp_dot import bfp_matmul_2d
+from repro.core.nsr import (gemm_nsr_upper_bound, grad_dx_nsr_upper_bound,
+                            grad_dw_nsr_upper_bound)
+from repro.engine import PolicyMap
+from repro.engine.taps import taps as tap_ctx
+from repro.engine.backends import BackendUnsupportedError
+from repro.grad import (GRAD_KINDS, fit_grad_policy, grad_path,
+                        measure_gradient_nsr, resolve_grad_policy)
+from repro.models.cnn import small
+
+KEY = jax.random.PRNGKey(0)
+EQ4 = BFPPolicy(straight_through=False)
+STE = BFPPolicy()          # straight_through=True (the default)
+TILED = BFPPolicy(scheme=Scheme.TILED, block_k=128, straight_through=False)
+
+
+def _xw(b=6, k=96, n=16, seed=0):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    return (jax.random.normal(kx, (b, k)) * 1.5,
+            jax.random.normal(kw, (k, n)) * 0.1)
+
+
+def _conv_xw(b=2, hw=8, ci=3, co=8, kh=3, seed=0):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    return (jax.random.normal(kx, (b, hw, hw, ci)),
+            jax.random.normal(kw, (kh, kh, ci, co)) * 0.2)
+
+
+def _tree_equal(a, b):
+    return bool(jax.tree_util.tree_all(jax.tree_util.tree_map(
+        lambda u, v: jnp.array_equal(u, v), a, b)))
+
+
+# ---------------------------------------------------------------------------
+# grad paths and policy resolution (unit)
+# ---------------------------------------------------------------------------
+
+def test_grad_path_suffixes():
+    assert grad_path("c1", "dx") == "c1#dx"
+    assert grad_path("blk/fc", "dw") == "blk/fc#dw"
+    assert grad_path(None, "dx") is None
+    with pytest.raises(ValueError):
+        grad_path("c1", "dy")
+    assert GRAD_KINDS == ("dx", "dw")
+
+
+def test_resolve_fallback_semantics():
+    # None site -> float backward; STE site -> float backward;
+    # straight_through=False site -> the site policy itself
+    assert resolve_grad_policy(None, "c1", "dx") is None
+    assert resolve_grad_policy(STE, "c1", "dx") is None
+    assert resolve_grad_policy(EQ4, "c1", "dw") == EQ4
+
+
+def test_resolve_explicit_rules_precede_site_rule():
+    low = BFPPolicy(l_w=4, l_i=4)
+    pm = PolicyMap([(r"c1#dx", low), (r"c1", EQ4)])
+    assert resolve_grad_policy(pm, "c1", "dx") == low       # explicit hit
+    assert resolve_grad_policy(pm, "c1", "dw") == EQ4       # site fallback
+    # explicit None PINS float even though the site policy would quantize
+    pm2 = PolicyMap([(r"#dw", None), (r"c1", EQ4)])
+    assert resolve_grad_policy(pm2, "c1", "dw") is None
+    assert resolve_grad_policy(pm2, "c1", "dx") == EQ4
+
+
+def test_explicit_rule_never_hits_forward_resolution():
+    pm = PolicyMap([(r"c1#dx", BFPPolicy(l_w=4, l_i=4)), (r"c1", EQ4)])
+    from repro.engine.policy_map import resolve_policy
+    assert resolve_policy(pm, "c1") == EQ4
+
+
+def test_fit_grad_policy_tiles():
+    assert fit_grad_policy(None, 48) is None
+    assert fit_grad_policy(EQ4, 48) == EQ4                  # non-TILED
+    assert fit_grad_policy(TILED, 256).block_k == 128       # divides
+    assert fit_grad_policy(TILED, 96).block_k == 96         # shrink to k
+    assert fit_grad_policy(TILED, 80).block_k == 80
+    assert fit_grad_policy(TILED, 100).block_k == 100
+    fitted = fit_grad_policy(TILED, 7)
+    assert fitted.block_k == 7
+    # never exceeds the int32 accumulation bound
+    wide = BFPPolicy(scheme=Scheme.TILED, block_k=1 << 20, l_w=12, l_i=12,
+                     straight_through=False)
+    k = 1 << 18
+    assert fit_grad_policy(wide, k).block_k <= bfp.max_safe_k(12, 12)
+
+
+# ---------------------------------------------------------------------------
+# float bit-identity with plain JAX autodiff
+# ---------------------------------------------------------------------------
+
+def test_float_gemm_grads_match_jax_autodiff():
+    x, w = _xw()
+
+    def routed(x, w):
+        return jnp.sum(jnp.sin(EG.gemm(x, w, None)))
+
+    def plain(x, w):
+        return jnp.sum(jnp.sin(x @ w))
+
+    gr = jax.grad(routed, argnums=(0, 1))(x, w)
+    gp = jax.grad(plain, argnums=(0, 1))(x, w)
+    assert _tree_equal(gr, gp)
+
+
+def test_float_conv_grads_match_jax_autodiff():
+    x, w = _conv_xw()
+
+    def routed(x, w):
+        return jnp.sum(jnp.square(EG.conv2d(x, w, None, stride=1,
+                                            padding="SAME")))
+
+    def plain(x, w):
+        y = jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return jnp.sum(jnp.square(y))
+
+    # the engine's float conv is materialized im2col + float GEMM; its
+    # custom VJP must be bit-identical to autodiff of THAT composition
+    def im2col_ref(x, w):
+        from repro.core.conv_utils import conv_weight_matrix, im2col
+        cols, (oh, ow, _) = im2col(x, 3, 3, 1, "SAME")
+        y = cols @ conv_weight_matrix(w)
+        return jnp.sum(jnp.square(y.reshape(x.shape[0], oh, ow, -1)))
+
+    gr = jax.grad(routed, argnums=(0, 1))(x, w)
+    gi = jax.grad(im2col_ref, argnums=(0, 1))(x, w)
+    assert _tree_equal(gr, gi)
+    # and numerically equal to the XLA conv autodiff
+    gp = jax.grad(plain, argnums=(0, 1))(x, w)
+    for a, b in zip(gr, gp):
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+
+def test_forward_values_unchanged_by_routing():
+    x, w = _xw()
+    assert jnp.array_equal(EG.gemm(x, w, EQ4),
+                           bfp_matmul_2d(x, w, EQ4))
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: reconciliation with the legacy core.bfp_dot STE
+# ---------------------------------------------------------------------------
+
+def test_default_policy_matches_legacy_ste():
+    """The routed default-policy (straight_through=True) backward equals
+    the legacy ``bfp_matmul_2d`` straight-through estimator bit-exactly
+    (the pin ``core/bfp_dot.py``'s RECONCILIATION docstring points at)."""
+    x, w = _xw()
+
+    def routed(x, w):
+        return jnp.sum(jnp.tanh(EG.gemm(x, w, STE)))
+
+    def legacy(x, w):
+        return jnp.sum(jnp.tanh(bfp_matmul_2d(x, w, STE)))
+
+    assert jnp.array_equal(routed(x, w), legacy(x, w))
+    gr = jax.grad(routed, argnums=(0, 1))(x, w)
+    gl = jax.grad(legacy, argnums=(0, 1))(x, w)
+    assert _tree_equal(gr, gl)
+
+
+# ---------------------------------------------------------------------------
+# backward taps + gradient NSR bound, L = 4..12
+# ---------------------------------------------------------------------------
+
+def test_backward_taps_carry_grad_paths():
+    x, w = _xw()
+    events = []
+    with tap_ctx(events.append):
+        jax.grad(lambda x: jnp.sum(EG.gemm(x, w, EQ4, path="fc")))(x)
+    kinds = [(e.kind, e.path) for e in events]
+    assert ("gemm", "fc") in kinds
+    assert ("gemm_dx", "fc#dx") in kinds
+    assert ("gemm_dw", "fc#dw") in kinds
+
+
+@pytest.mark.parametrize("L", [4, 6, 8, 10, 12])
+def test_gemm_grad_nsr_within_bound(L):
+    pol = BFPPolicy(l_w=L, l_i=L, straight_through=False)
+    x, w = _xw(seed=L)
+
+    recs = measure_gradient_nsr(lambda: jax.grad(
+        lambda x, w: jnp.sum(EG.gemm(x, w, pol, path="fc")),
+        argnums=(0, 1))(x, w))
+    assert sorted(r.kind for r in recs) == ["gemm_dw", "gemm_dx"]
+    for r in recs:
+        assert r.eta_bound < float("inf")
+        assert r.within_bound, (r.kind, r.eta_measured, r.eta_bound)
+
+
+@pytest.mark.parametrize("L", [4, 8, 12])
+def test_conv_grad_nsr_within_bound(L):
+    pol = BFPPolicy(l_w=L, l_i=L, straight_through=False)
+    x, w = _conv_xw(seed=L)
+
+    recs = measure_gradient_nsr(lambda: jax.grad(
+        lambda x, w: jnp.sum(EG.conv2d(x, w, pol)), argnums=(0, 1))(x, w))
+    assert sorted(r.kind for r in recs) == ["conv_dw", "conv_dx"]
+    for r in recs:
+        assert r.within_bound, (r.kind, r.eta_measured, r.eta_bound)
+
+
+def test_tiled_backward_fits_tile_and_stays_bounded():
+    # dL/dw contracts over M=6, which 128 does not divide: the tap must
+    # report the FITTED policy and the bound must hold under it
+    x, w = _xw(b=6, k=256, n=32)
+    recs = measure_gradient_nsr(lambda: jax.grad(
+        lambda x, w: jnp.sum(EG.gemm(x, w, TILED, path="t")),
+        argnums=(0, 1))(x, w))
+    by_kind = {r.kind: r for r in recs}
+    assert by_kind["gemm_dw"].policy.block_k == 6
+    assert by_kind["gemm_dx"].policy.block_k == 32    # contracts over N
+    for r in recs:
+        assert r.within_bound
+
+
+def test_grad_bound_wrappers_match_forward_geometry():
+    x, w = _xw()
+    g = jax.random.normal(KEY, (x.shape[0], w.shape[1]))
+    assert (grad_dx_nsr_upper_bound(g, w, EQ4)
+            == gemm_nsr_upper_bound(g, w.T, EQ4))
+    assert (grad_dw_nsr_upper_bound(x, g, EQ4)
+            == gemm_nsr_upper_bound(x.T, g, EQ4))
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: grad-path PolicyMap precedence through bind
+# ---------------------------------------------------------------------------
+
+def _lenet():
+    params = small.lenet_init(KEY)
+    x = jax.random.normal(KEY, (2, 28, 28, 1))
+    return params, x
+
+
+def test_bind_resolves_grad_specs():
+    params, _ = _lenet()
+    low = BFPPolicy(l_w=4, l_i=4)
+    pm = PolicyMap([(r"fc1#dx", low), (r"#dw", None), (r".", EQ4)])
+    plan = EG.bind(params, pm, prequantize=False)
+    sites = plan.sites
+    assert sites["fc1"].dx.policy == low       # explicit grad rule, as-is
+    assert sites["fc1"].dw.policy is None      # explicit None pins float
+    assert sites["c1"].dx.policy == EQ4        # site fallback (quantized)
+    assert sites["c1"].dw.policy is None       # the "#dw" rule matches all
+    d = plan.describe()
+    assert "grad[" in d and "#" not in d.split("grad[")[0].split()[-1]
+
+
+def test_plan_grads_match_per_call_grads():
+    params, x = _lenet()
+    pm = PolicyMap([(r"fc1#dx", BFPPolicy(l_w=4, l_i=4)), (r".", EQ4)])
+    plan = EG.bind(params, pm, prequantize=False)
+
+    def loss_plan(p):
+        return jnp.sum(small.lenet_apply(p, x, plan))
+
+    def loss_call(p):
+        return jnp.sum(small.lenet_apply(p, x, pm))
+
+    gp = jax.grad(loss_plan)(params)
+    gc = jax.grad(loss_call)(params)
+    assert _tree_equal(gp, gc)
+    # and jit of the plan-bound grad agrees numerically
+    gj = jax.jit(jax.grad(loss_plan))(params)
+    for a, b in zip(jax.tree_util.tree_leaves(gj),
+                    jax.tree_util.tree_leaves(gp)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_strict_bind_raises_for_unsupported_backward_backend():
+    params, _ = _lenet()
+    # pallas has no EQ4 slot: a strict bind must refuse the #dx rule even
+    # though every forward site is serviceable
+    pm = PolicyMap([(r"fc1#dx", BFPPolicy(backend="pallas")), (r".", None)])
+    with pytest.raises(BackendUnsupportedError, match="fc1#dx"):
+        EG.bind(params, pm, strict=True, prequantize=False)
+
+
+def test_bind_grad_warning_dedup_with_forward():
+    params, _ = _lenet()
+    # EQ4 downgrades pallas->emulated at every site, forward and backward:
+    # one warning per forward site, none extra for #dx/#dw
+    pm = PolicyMap([(r".", BFPPolicy(backend="pallas",
+                                     straight_through=False))])
+    with pytest.warns(EG.BackendFallbackWarning) as rec:
+        plan = EG.bind(params, pm, prequantize=False)
+    n_sites = len(plan.sites)
+    assert len(rec) == n_sites
+
+
+def test_quantized_backward_differs_from_ste_and_improves_with_l():
+    # sanity that straight_through=False actually quantizes the backward:
+    # the dx gradient differs from the float/STE one, and the deviation
+    # shrinks with more mantissa bits
+    x, w = _xw()
+    g_ste = jax.grad(lambda x: jnp.sum(EG.gemm(x, w, STE)))(x)
+    devs = []
+    for L in (4, 12):
+        pol = BFPPolicy(l_w=L, l_i=L, straight_through=False)
+        g = jax.grad(lambda x: jnp.sum(EG.gemm(x, w, pol)))(x)
+        devs.append(float(jnp.linalg.norm(g - g_ste)))
+    assert devs[0] > 0.0
+    assert devs[1] < devs[0]

@@ -1,0 +1,104 @@
+"""Data-parallel BFP CNN training (repro.train.cnn; ISSUE 8).
+
+The training step runs forward AND backward on the BFP engine datapath
+and exchanges gradients over the compressed wire with error feedback.
+Contracts: loss decreases (float and BFP), the real packed-bytes
+exchange is BIT-EXACT to the jitted in-graph model, residuals survive a
+checkpoint restore round trip, and training-time gradient NSR stays
+under the analytic bound.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import BFPPolicy
+from repro.train import cnn as TC
+
+EQ4_HARD = BFPPolicy(l_w=8, l_i=8, straight_through=False)
+
+
+def _cfg(**kw):
+    base = dict(model="lenet", workers=2, batch=16, lr=1e-3, grad_bits=8)
+    base.update(kw)
+    return TC.CnnTrainConfig(**base)
+
+
+def _tree_equal(a, b):
+    return bool(jax.tree_util.tree_all(jax.tree_util.tree_map(
+        lambda u, v: jnp.array_equal(u, v), a, b)))
+
+
+def test_config_validates_split_and_wire_block():
+    with pytest.raises(ValueError, match="split"):
+        TC.CnnTrainConfig(batch=10, workers=4)
+    with pytest.raises(ValueError, match="wire block"):
+        TC.CnnTrainConfig(grad_bits=8, wire_block=0)
+
+
+def test_loss_decreases_float_and_bfp():
+    out_f = TC.train_cnn(_cfg(policy=None, grad_bits=None), steps=8,
+                         eval_batch=64)
+    lf = [h["loss"] for h in out_f["history"]]
+    assert lf[-1] < lf[0], lf
+
+    out_q = TC.train_cnn(_cfg(policy=EQ4_HARD), steps=8, eval_batch=64)
+    lq = [h["loss"] for h in out_q["history"]]
+    assert lq[-1] < lq[0], lq
+
+
+def test_packed_exchange_bit_exact_to_jit_model():
+    cfg = _cfg(policy=EQ4_HARD)
+    state = TC.init_state(cfg)
+    x, y, _ = TC.data_batch(cfg, 0)
+    s_wire, m_wire = TC.packed_exchange_step(cfg, state, (x, y))
+    s_model, _ = TC.make_cnn_train_step(cfg)(state, (x, y))
+    assert _tree_equal(s_wire.params, s_model.params)
+    assert _tree_equal(s_wire.residual, s_model.residual)
+    assert m_wire["wire_bytes"] > 0
+
+
+def test_packed_exchange_requires_wire_format():
+    cfg = _cfg(grad_bits=None)
+    state = TC.init_state(cfg)
+    x, y, _ = TC.data_batch(cfg, 0)
+    with pytest.raises(ValueError, match="grad_bits"):
+        TC.packed_exchange_step(cfg, state, (x, y))
+
+
+def test_residuals_nonzero_and_survive_checkpoint(tmp_path):
+    from repro.checkpoint import store
+    cfg = _cfg(policy=EQ4_HARD)
+    out = TC.train_cnn(cfg, steps=2, eval_batch=32,
+                       ckpt_dir=str(tmp_path / "ck"))
+    state = out["state"]
+    # EF residuals carry real quantization error after a compressed step
+    rnorm = sum(float(jnp.linalg.norm(r))
+                for r in jax.tree_util.tree_leaves(state.residual))
+    assert rnorm > 0.0
+    # train_cnn already verified one round trip; pin it independently
+    restored, step = store.restore(str(tmp_path / "ck"), state)
+    assert step == 2
+    assert _tree_equal(restored.residual, state.residual)
+    assert _tree_equal(restored.params, state.params)
+
+
+def test_wire_bytes_accounting():
+    cfg = _cfg(policy=EQ4_HARD)
+    out = TC.train_cnn(cfg, steps=3, packed_wire_steps=2, eval_batch=32)
+    wire = out["wire_bytes"]
+    assert wire["packed_steps"] == 2
+    # per-leaf container headers make measured > analytic payload, but
+    # within the same order; and 8-bit wire beats float by ~4x
+    assert wire["measured_bytes"] >= 2 * wire["per_step_bytes"] * 0.9
+    assert wire["ratio"] < 0.3
+
+
+def test_training_grad_nsr_within_bound():
+    cfg = _cfg(policy=EQ4_HARD)
+    out = TC.train_cnn(cfg, steps=2, measure_nsr_every=1, eval_batch=32)
+    recs = out["nsr_records"]
+    assert recs, "no backward tap events recorded"
+    kinds = {r.kind for r in recs}
+    assert "conv_dx" in kinds and "gemm_dw" in kinds
+    for r in recs:
+        assert r.within_bound, (r.path, r.kind, r.eta_measured, r.eta_bound)
