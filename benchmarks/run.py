@@ -22,6 +22,12 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
   cnn_train            E16 BFP train-to-accuracy: quantized backward
                        GEMMs + compressed gradient exchange at L=4..12
                        vs float baseline (ISSUE 8 acceptance)
+  serve_load           E17 open-loop Poisson serving load: continuous
+                       vs bucket-barrier batching, p50/p99/goodput +
+                       overload behaviour (ISSUE 9 acceptance).  Its
+                       pinned trajectory lives in BENCH_serve.json,
+                       written by ``python -m benchmarks.serve_load
+                       --bench-json`` (own schema, own CI gate)
 
 Flags:
   --smoke       tiny shapes, 1 rep — CI rot-check mode (the numbers are
@@ -48,8 +54,9 @@ import traceback
 
 from benchmarks import (blocksize_ablation, cnn_serve_bench, cnn_train,
                         common, conv_bench, dispatch_bench, engine_bench,
-                        faults_bench, kernel_bench, table1_storage,
-                        table2_scheme, table3_sweep, table4_nsr)
+                        faults_bench, kernel_bench, serve_load,
+                        table1_storage, table2_scheme, table3_sweep,
+                        table4_nsr)
 
 _ALL = {
     "table1": table1_storage.run,
@@ -64,6 +71,7 @@ _ALL = {
     "cnn_serve": cnn_serve_bench.run,
     "faults": faults_bench.run,
     "cnn_train": cnn_train.run,
+    "serve_load": serve_load.run,
 }
 
 

@@ -31,6 +31,14 @@ def main():
                     help="BFP-8 activation x weight datapath per GEMM")
     ap.add_argument("--bfp-weights", action="store_true",
                     help="store weights as int8 mantissa + exponent sidecar")
+    ap.add_argument("--batching", default="continuous",
+                    choices=["continuous", "bucket"],
+                    help="iteration-level batching (chunked prefill in "
+                         "the step loop) vs the legacy blocking-prefill "
+                         "bucket baseline")
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="prompt tokens a prefilling slot consumes per "
+                         "step in continuous mode (0 = whole prompt)")
     args = ap.parse_args()
 
     base = ARCHS[args.arch]
@@ -42,7 +50,8 @@ def main():
     policy = PAPER_DEFAULT.with_(straight_through=False) if args.bfp else None
 
     eng = ServeEngine(params, cfg, slots=args.slots, max_len=args.max_len,
-                      policy=policy)
+                      policy=policy, batching=args.batching,
+                      prefill_chunk=args.prefill_chunk or None)
     for i in range(args.requests):
         eng.submit(Request(rid=i, prompt=[1 + i, 7, 3], max_new=args.max_new))
     t0 = time.perf_counter()

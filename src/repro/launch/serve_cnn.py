@@ -1,13 +1,16 @@
 """CNN serving launcher: batched BFP inference on a bound plan.
 
 The paper-model counterpart of ``repro.launch.serve`` — admits image
-requests into the slot-table engine, serves them in bucketed batches on
-the bind-once plan, optionally under a data-parallel mesh:
+requests into the slot-table engine, serves them with iteration-level
+batching on the bind-once plan, optionally under a data-parallel mesh,
+or as several MULTI-TENANT models in one process:
 
   PYTHONPATH=src python -m repro.launch.serve_cnn --model vgg16 \
       --requests 32 --slots 8 --bfp --prequant
   PYTHONPATH=src python -m repro.launch.serve_cnn --model resnet18 \
       --scale full --mesh 1x1 --bfp --strict-backend
+  PYTHONPATH=src python -m repro.launch.serve_cnn \
+      --tenants lenet,cifarnet --requests 12 --bfp
 """
 from __future__ import annotations
 
@@ -23,9 +26,49 @@ from repro.models.cnn import MODELS
 from repro.serve.cnn import CnnServeEngine, ImageRequest
 
 
+def _serve_tenants(args, policy):
+    """Multi-tenant path: every listed model serves from one process."""
+    from repro.serve.tenants import MultiTenantServer
+
+    names = [m.strip() for m in args.tenants.split(",") if m.strip()]
+    bad = [m for m in names if m not in MODELS]
+    if bad:
+        raise SystemExit(f"unknown tenant model(s) {bad}; "
+                         f"available: {sorted(MODELS)}")
+    srv = MultiTenantServer(slots=args.slots, batching=args.batching,
+                            max_wait=args.max_wait,
+                            strict_backend=args.strict_backend)
+    for m in names:
+        srv.add_tenant(m, m, params=MODELS[m].init(jax.random.PRNGKey(0)),
+                       policy=policy, prequant=args.prequant)
+    keys = jax.random.split(jax.random.PRNGKey(1), args.requests)
+    reqs = []
+    for i in range(args.requests):
+        m = names[i % len(names)]
+        shape = MODELS[m].input_shape()
+        reqs.append((m, srv.submit(
+            m, ImageRequest(rid=i, image=jax.random.normal(keys[i],
+                                                           shape)))))
+    t0 = time.perf_counter()
+    srv.run()
+    dt = max(time.perf_counter() - t0, 1e-9)
+    for m, r in reqs[:4]:
+        print(f"req {r.rid} [{m}]: label={r.label}")
+    st = srv.stats()
+    for m in names:
+        print(f"tenant {m}: {st['tenants'][m]}")
+    print(f"{st['total']['completed']} requests across {len(names)} "
+          f"tenants in {dt:.2f}s ({st['total']['completed'] / dt:.1f} "
+          f"req/s) batching={args.batching}")
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--model", required=True, choices=sorted(MODELS))
+    ap.add_argument("--model", choices=sorted(MODELS),
+                    help="single-tenant model (or use --tenants)")
+    ap.add_argument("--tenants", metavar="M1,M2,...",
+                    help="serve several models as tenants of one "
+                         "process (round-robin traffic)")
     ap.add_argument("--scale", default="smoke", choices=["smoke", "full"])
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--slots", type=int, default=8)
@@ -38,13 +81,27 @@ def main():
     ap.add_argument("--mesh", metavar="DxM",
                     help="data x model mesh, e.g. 1x1 (device count must "
                          "match); shards the request batch axis")
+    ap.add_argument("--batching", default="continuous",
+                    choices=["continuous", "bucket"],
+                    help="run partially-filled steps immediately vs the "
+                         "bucket-barrier baseline")
+    ap.add_argument("--max-wait", type=int, default=4,
+                    help="bucket mode: deferred steps before a partial "
+                         "batch runs anyway")
     args = ap.parse_args()
+
+    policy_ = (PAPER_DEFAULT.with_(straight_through=False) if args.bfp
+               else None)
+    if args.tenants:
+        _serve_tenants(args, policy_)
+        return
+    if not args.model:
+        ap.error("pass --model (single tenant) or --tenants")
 
     spec = MODELS[args.model]
     reduced = args.scale == "smoke"
     params = spec.init(jax.random.PRNGKey(0), reduced=reduced)
-    policy = (PAPER_DEFAULT.with_(straight_through=False) if args.bfp
-              else None)
+    policy = policy_
     mesh = None
     if args.mesh:
         d, m = (int(v) for v in args.mesh.lower().split("x"))
@@ -53,6 +110,7 @@ def main():
     eng = CnnServeEngine(params, spec.apply, policy, slots=args.slots,
                          prequant=args.prequant,
                          strict_backend=args.strict_backend,
+                         batching=args.batching, max_wait=args.max_wait,
                          mesh=mesh, rules=DEFAULT_RULES)
     print(f"bound plan: {eng.plan!r}")
     h, w, c = spec.input_shape(reduced=reduced)

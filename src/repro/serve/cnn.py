@@ -9,10 +9,15 @@ the LM decode engine has:
     continuous-batching-lite bookkeeping shared with ``ServeEngine``):
     image requests admit into free slots, finished slots free
     immediately for the next queued request;
-  * bucketed batch coalescing: each step stacks the active slots into
-    the smallest configured batch bucket (padding with duplicates of a
-    live image — logits-neutral for any weights), so the jitted forward
-    compiles once per bucket, not once per request count;
+  * iteration-level batching over batch buckets: each step stacks
+    whatever slots are active into the smallest configured batch bucket
+    (padding with duplicates of a live image — logits-neutral for any
+    weights), so the jitted forward compiles once per bucket, not once
+    per request count, and a partially-filled step RUNS instead of
+    waiting behind a bucket barrier (``batching="bucket"`` keeps the
+    barrier — defer until ``buckets[-1]`` slots are active or
+    ``max_wait`` deferred steps elapse — as the measured baseline for
+    ``benchmarks/serve_load.py``);
   * a bind-once ``engine.Plan``: policy resolution, backend selection,
     and weight pre-quantization happen at admission-time construction
     (``strict_backend=True`` rejects undeployable configs HERE);
@@ -141,6 +146,15 @@ class CnnServeEngine:
         weights dequantized, ``policy=None``) before reporting — a
         blown-up BFP datapath (exponent SEU, corrupted container)
         degrades to float numerics instead of returning NaNs.
+      batching: ``"continuous"`` (default) runs partially-filled steps
+        immediately — iteration-level batching, no bucket barrier.
+        ``"bucket"`` is the barrier baseline: a step with fewer than
+        ``buckets[-1]`` active slots defers its forward (up to
+        ``max_wait`` consecutive deferred steps, so a trickle of
+        requests still completes) hoping more arrivals fill the bucket.
+      max_wait: bucket-mode flush bound — after this many consecutive
+        deferred steps the partial batch runs anyway.  Ignored in
+        continuous mode.
       clock: monotonic clock for deadlines (injectable for tests).
     """
 
@@ -153,7 +167,16 @@ class CnnServeEngine:
                  fallback_policy: PolicyLike = None,
                  degrade: Optional[DegradeConfig] = None,
                  float_retry: bool = True,
+                 batching: str = "continuous", max_wait: int = 4,
                  clock: Callable[[], float] = time.monotonic):
+        if batching not in ("continuous", "bucket"):
+            raise ValueError(f"batching must be 'continuous' or 'bucket', "
+                             f"got {batching!r}")
+        if max_wait < 0:
+            raise ValueError(f"max_wait must be >= 0, got {max_wait}")
+        self.batching = batching
+        self.max_wait = max_wait
+        self._waited = 0   # consecutive bucket-mode deferred steps
         if isinstance(policy, Plan):
             # bind-once reuse across engines: the plan's params serve,
             # and its backend selection is already fixed — enforce the
@@ -214,10 +237,18 @@ class CnnServeEngine:
             self._fb_fwd = None
             self.controller = (DegradeController(degrade)
                                if degrade is not None else None)
-        #: serving counters: shed/expired/failed/float_retries/degraded
+        #: serving counters — the shared taxonomy (DESIGN.md §9): every
+        #: request ends in exactly one of completed/expired/failed
+        #: (shed requests were never enqueued); float_retries and
+        #: degraded_served tag HOW completions were served
         self.stats: Dict[str, int] = {"shed": 0, "expired": 0,
-                                      "failed": 0, "float_retries": 0,
+                                      "failed": 0, "completed": 0,
+                                      "float_retries": 0,
                                       "degraded_served": 0}
+        #: total batched forwards issued (retries included) — the load
+        #: harness's machine-independent virtual-time unit
+        #: (serve.load ``call_cost``)
+        self.ncalls = 0
 
     def _make_fwd(self, plan: Plan) -> Callable[..., Any]:
         if self._jit:
@@ -301,16 +332,18 @@ class CnnServeEngine:
             self.table.free(s)
 
     def _expire(self) -> None:
-        """Fail every queued or admitted request whose deadline passed."""
+        """Fail every queued or admitted request whose deadline passed.
+
+        Runs BEFORE admission in :meth:`step`: a dead queued request
+        must never occupy a slot (or pad out a forward) only to be
+        failed afterwards.
+        """
         now = self._clock()
 
         def dead(r):
             return r.deadline is not None and now > r.deadline
 
-        expired_q = [r for r in self.table.queue if dead(r)]
-        if expired_q:
-            self.table.queue[:] = [r for r in self.table.queue
-                                   if not dead(r)]
+        expired_q = self.table.retain(lambda r: not dead(r))
         for s in self.table.active():
             r = self.table.req[s]
             if dead(r):
@@ -338,6 +371,7 @@ class CnnServeEngine:
             imgs = imgs + [imgs[0]] * (bucket - len(imgs))
         try:
             x = jnp.stack(imgs)
+            self.ncalls += 1
             with self._sharding_ctx():
                 x = DS.shard(x, *_BATCH_AXES)
                 out = (self._fb_fwd if degraded else self._fwd)(x)
@@ -349,6 +383,7 @@ class CnnServeEngine:
                 # isolates a blown-up BFP datapath (exponent SEU, bad
                 # container) from a genuinely divergent model
                 self.stats["float_retries"] += 1
+                self.ncalls += 1
                 with self._sharding_ctx():
                     out = self._float_fwd(degraded)(x)
                 logits = out[0] if isinstance(out, (tuple, list)) else out
@@ -361,34 +396,49 @@ class CnnServeEngine:
             r.label = int(np.argmax(logits[i]))
             r.done = True
             r.degraded = degraded
+            self.stats["completed"] += 1
             if degraded:
                 self.stats["degraded_served"] += 1
             self.table.free(s)
 
     def step(self) -> int:
-        """Admit, coalesce, run one bucketed forward per chunk of active
-        slots; returns the number of requests completed this step.
+        """One engine iteration; returns the number of requests still
+        queued or in flight AFTER the step (0 == drained) — the unified
+        drive-loop contract both serve engines share (DESIGN.md §9):
+        ``while eng.step(): ...`` serves to completion.  Completions are
+        counted in ``stats["completed"]``, not the return value.
 
-        Overload handling happens here: the controller observes the
-        pre-admission queue depth, and while DEGRADED every admission of
-        this step is tagged for (and served by) the pre-bound lower-L
-        fallback plan.  Expired requests complete exceptionally before
-        any forward runs.
+        Order per step: the controller observes the pre-admission queue
+        depth, expiry runs BEFORE admission (a dead queued request is
+        failed without ever occupying a slot), then the active slots run
+        — immediately in continuous mode (partially-filled steps pad up
+        to the smallest fitting bucket), or behind the bucket barrier in
+        ``batching="bucket"`` (defer the forward until ``buckets[-1]``
+        slots are active or ``max_wait`` consecutive deferred steps
+        elapse).  While DEGRADED every admission of this step is tagged
+        for (and served by) the pre-bound lower-L fallback plan.
         """
         degraded = False
         if self.controller is not None:
             state = self.controller.observe(len(self.table.queue))
             degraded = (state == DegradeController.DEGRADED and
                         self._fb_fwd is not None)
-        self.table.admit()
         self._expire()
+        self.table.admit()
         active = self.table.active()
         if not active:
-            return 0
+            return self.table.pending()
         cap = self.buckets[-1]
+        if self.batching == "bucket" and len(active) < cap and \
+                self._waited < self.max_wait:
+            # bucket barrier: hold the partial batch hoping arrivals
+            # fill it — exactly the p99 stall continuous mode removes
+            self._waited += 1
+            return self.table.pending()
+        self._waited = 0
         for i in range(0, len(active), cap):
             self._run_group(active[i:i + cap], degraded=degraded)
-        return len(active)
+        return self.table.pending()
 
     def run(self) -> List[Any]:
         """Drain the queue; returns the requests still in flight or

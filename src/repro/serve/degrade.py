@@ -36,7 +36,8 @@ from repro.core import packed as PK
 from repro.core import prequant as PQ
 
 __all__ = ["ServeRejected", "QueueOverloaded", "DeadlineExceeded",
-           "DegradeConfig", "DegradeController", "float_params"]
+           "RequestTooLarge", "DegradeConfig", "DegradeController",
+           "float_params"]
 
 
 class ServeRejected(RuntimeError):
@@ -65,6 +66,18 @@ class DeadlineExceeded(ServeRejected):
 
     Delivered as ``req.error`` (the request completes exceptionally,
     freeing its slot) — never raised through the engine's step loop.
+    """
+
+
+class RequestTooLarge(ServeRejected):
+    """The request cannot fit the engine's cache geometry.
+
+    Raised by ``submit`` when ``len(prompt) + max_new > max_len``: the
+    decode loop would write cache positions past ``max_len``, and JAX
+    CLAMPS/DROPS out-of-bounds ``.at[].set`` writes instead of raising —
+    the request would silently decode from a corrupt cache.  Rejecting
+    at the door is the only honest answer (the request was never
+    enqueued; resubmit with a shorter prompt or smaller ``max_new``).
     """
 
 

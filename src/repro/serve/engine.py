@@ -1,19 +1,25 @@
 """Batched serving engine: prefill + decode with KV/recurrent caches.
 
 ``generate`` drives the jitted decode_step over N tokens with greedy or
-temperature sampling.  ``ServeEngine`` adds continuous-batching-lite: a
-slot table where finished sequences are replaced by queued requests
-between decode steps (the Python driver swaps rows; the jitted step is
-shape-stable), plus BFP weight pre-quantization (``prequant=`` or an
-already-converted param tree) — the paper's deployment mode, where
-weights live in HBM as int8 mantissas + exponent sidecars, every GEMM
-runs the fixed-point datapath, and quantization happens ONCE at engine
-construction, not per decode step (benchmarks/engine_bench.py measures
-the difference).  ``policy`` may be a per-layer ``repro.engine.PolicyMap``;
-at construction it is bound into an ``engine.Plan`` (``self.plan``) so
-rule resolution and backend selection also happen once, at admission-time
-weight load, and ``strict_backend=True`` rejects configs whose requested
-backend cannot honour the policy (DESIGN.md §7.1).
+temperature sampling.  ``ServeEngine`` adds iteration-level (continuous)
+batching: a slot table where finished sequences are replaced by queued
+requests between decode steps (the Python driver swaps rows; the jitted
+step is shape-stable), with PREFILL CHUNKED INTO THE STEP LOOP — an
+admission consumes at most ``prefill_chunk`` prompt tokens per engine
+step, so a long-prompt admission never stalls in-flight decodes behind
+``len(prompt)`` jitted calls (``batching="bucket"`` keeps the legacy
+blocking-prefill behaviour as the measured baseline for
+``benchmarks/serve_load.py``).  BFP weight pre-quantization
+(``prequant=`` or an already-converted param tree) is the paper's
+deployment mode, where weights live in HBM as int8 mantissas + exponent
+sidecars, every GEMM runs the fixed-point datapath, and quantization
+happens ONCE at engine construction, not per decode step
+(benchmarks/engine_bench.py measures the difference).  ``policy`` may be
+a per-layer ``repro.engine.PolicyMap``; at construction it is bound into
+an ``engine.Plan`` (``self.plan``) so rule resolution and backend
+selection also happen once, at admission-time weight load, and
+``strict_backend=True`` rejects configs whose requested backend cannot
+honour the policy (DESIGN.md §7.1).
 """
 from __future__ import annotations
 
@@ -30,7 +36,7 @@ from repro.engine import PolicyLike
 from repro.models.lm import model as Mdl
 from repro.serve.degrade import (DeadlineExceeded, DegradeConfig,
                                  DegradeController, QueueOverloaded,
-                                 float_params)
+                                 RequestTooLarge, float_params)
 from repro.serve.slots import SlotTable
 
 __all__ = ["prefill", "generate", "ServeEngine", "Request"]
@@ -93,7 +99,7 @@ def generate(params, cfg: LMConfig, prompt: jax.Array, max_new: int,
 
 
 # ---------------------------------------------------------------------------
-# Continuous-batching-lite
+# Iteration-level continuous batching
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
@@ -114,9 +120,23 @@ class Request:
 class ServeEngine:
     """Slot-table batched server (shape-stable jitted decode step).
 
-    Admission: empty slots take queued requests; their prompts prefill
-    into the slot's cache rows.  Each decode step advances every active
-    slot one token; finished slots free immediately (continuous batching).
+    Iteration-level batching (``batching="continuous"``, the default):
+    every :meth:`step` expires, admits, and advances — free slots take
+    queued requests with NO up-front prefill; a prefilling slot consumes
+    at most ``prefill_chunk`` prompt tokens per step while already-active
+    slots keep decoding one token per step, in the SAME grouped jitted
+    calls wherever positions coincide.  Finished slots free immediately
+    and are re-admitted the next step, so a slow admission never erects
+    a barrier in front of in-flight work.  ``batching="bucket"`` keeps
+    the legacy behaviour — admission runs the WHOLE prompt's jitted
+    prefill before any active slot decodes — as the bucket-barrier
+    baseline the load harness (``serve.load`` /
+    ``benchmarks/serve_load.py``) measures continuous batching against.
+
+    Row independence makes both modes bit-identical per request to solo
+    serving (pinned by tests/test_system.py + tests/test_serve_continuous
+    .py): each slot's cache rows only ever see its own tokens at its own
+    positions.
     """
 
     def __init__(self, params, cfg: LMConfig, slots: int = 4,
@@ -128,6 +148,8 @@ class ServeEngine:
                  fallback_policy: PolicyLike = None,
                  degrade: Optional[DegradeConfig] = None,
                  float_retry: bool = True,
+                 batching: str = "continuous",
+                 prefill_chunk: Optional[int] = 8,
                  clock: Callable[[], float] = time.monotonic):
         if cfg.is_encdec:
             # decode-only slot engine: no encoder prefill path, and the
@@ -135,6 +157,12 @@ class ServeEngine:
             # contract _merge_rows relies on
             raise ValueError("ServeEngine does not serve encoder-decoder "
                              "configs; use serve.generate with enc_feats")
+        if batching not in ("continuous", "bucket"):
+            raise ValueError(f"batching must be 'continuous' or 'bucket', "
+                             f"got {batching!r}")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1 or None, got "
+                             f"{prefill_chunk}")
         # packed weight artifacts (checkpoint.store format="bfp_packed",
         # restored with packed="keep") unpack straight into {"m", "s"}
         # sidecars at admission — the ~4x-smaller load path; float
@@ -157,16 +185,21 @@ class ServeEngine:
         self.params, self.cfg, self.policy = params, cfg, self.plan
         self.slots = slots
         self.max_len = max_len
+        self.batching = batching
+        self.prefill_chunk = prefill_chunk
         self.cache = Mdl.init_cache(cfg, slots, max_len)
         #: pristine per-slot state for admission-time row resets
         self._cache0 = self.cache
         #: shared slot-table bookkeeping (serve.slots); ``slot_req`` and
-        #: ``queue`` are aliases of the table's lists, so row-level code
-        #: below mutates the same state the table reports on
+        #: ``queue`` are aliases of the table's containers, so row-level
+        #: code below mutates the same state the table reports on
         self.table = SlotTable(slots)
         self.slot_req: List[Optional[Request]] = self.table.req
         self.slot_pos = [0] * slots
-        self.queue: List[Request] = self.table.queue
+        #: prompt tokens already consumed by the slot's occupant; a slot
+        #: with ``slot_fed < len(prompt)`` is still prefilling
+        self.slot_fed = [0] * slots
+        self.queue = self.table.queue
         self._tok = jnp.zeros((slots, 1), jnp.int32)
 
         plan = self.plan
@@ -206,14 +239,40 @@ class ServeEngine:
             self.controller = (DegradeController(degrade)
                                if degrade is not None else None)
         self.stats: Dict[str, int] = {"shed": 0, "expired": 0,
-                                      "failed": 0, "float_retries": 0,
+                                      "failed": 0, "completed": 0,
+                                      "float_retries": 0,
                                       "degraded_served": 0}
+        #: total jitted decode calls issued (prefill + decode + retries)
+        #: — the load harness's machine-independent virtual-time unit
+        #: (serve.load ``call_cost``): one whole-batch decode_step is
+        #: one unit of accelerator occupancy regardless of host speed
+        self.ncalls = 0
 
     def submit(self, req: Request):
+        """Queue a request, validating it against the cache geometry.
+
+        A request that cannot fit the cache is refused with the typed
+        :class:`~repro.serve.degrade.RequestTooLarge`: decode positions
+        past ``max_len`` would be CLAMPED/DROPPED by JAX's out-of-bounds
+        ``.at[].set`` semantics (no error is ever raised in jit), so the
+        engine would silently serve logits computed from a corrupt
+        cache.  ``max_new < 1`` is refused too — the decode loop always
+        emits at least one token, so "zero tokens" is not a request this
+        engine can honour.
+        """
         if not req.prompt:
-            # an empty prompt would leave _admit's prefill loop with no
+            # an empty prompt would leave the prefill loop with no
             # logits to seed the first decode from, wedging the slot
             raise ValueError("request prompt must be non-empty")
+        if req.max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {req.max_new} "
+                             f"(the decode loop always emits a token)")
+        if len(req.prompt) + req.max_new > self.max_len:
+            raise RequestTooLarge(
+                f"request {req.rid}: len(prompt)={len(req.prompt)} + "
+                f"max_new={req.max_new} exceeds the cache length "
+                f"{self.max_len}; out-of-bounds cache writes are silently "
+                f"clamped under jit, corrupting the logits", rid=req.rid)
         if self.max_queue is not None and \
                 len(self.table.queue) >= self.max_queue:
             self.stats["shed"] += 1
@@ -274,15 +333,18 @@ class ServeEngine:
 
     def _expire(self) -> None:
         """Fail queued or decoding requests whose deadline passed (their
-        partial ``out`` stays — the client sees how far decode got)."""
+        partial ``out`` stays — the client sees how far decode got).
+
+        Runs BEFORE admission in :meth:`step`: an already-dead queued
+        request must never be admitted (and, worst, prefilled for
+        ``len(prompt)`` jitted calls) only to be failed afterwards.
+        """
         now = self._clock()
 
         def dead(r):
             return r.deadline is not None and now > r.deadline
 
-        expired = [r for r in self.queue if dead(r)]
-        if expired:
-            self.queue[:] = [r for r in self.queue if not dead(r)]
+        expired = self.table.retain(lambda r: not dead(r))
         for s in self.table.active():
             r = self.slot_req[s]
             if dead(r):
@@ -294,24 +356,43 @@ class ServeEngine:
             r.done = True
             self.stats["expired"] += 1
 
+    def _reset_slot(self, s: int, req: Request, degraded: bool) -> None:
+        """Admission-time slot bookkeeping shared by both batching modes.
+
+        Plan choice is an ADMISSION decision: the slot keeps it for the
+        request's whole decode (prefill included), so degraded requests
+        are end-to-end lower-L — bit-exact vs a direct lower-L bind —
+        rather than a mid-sequence numeric splice.  The cache rows reset
+        to pristine state: recurrent families (ssm/hybrid)
+        read-modify-write their states h' = f(h, x), so a reused slot
+        must not prefill from the previous occupant's (or a
+        wholesale-stepped garbage) state.  KV rows are
+        position-overwritten anyway, so this costs one merge and buys
+        correctness for every cache family.
+        """
+        self.slot_deg[s] = degraded and self._step_fb is not None
+        req.degraded = self.slot_deg[s]
+        if req.degraded:
+            self.stats["degraded_served"] += 1
+        self.cache = self._merge_rows(self.cache, self._cache0, [s])
+        self.slot_pos[s] = 0
+        self.slot_fed[s] = 0
+
     def _admit(self, degraded: bool = False):
+        """Admit queued requests into free slots.
+
+        Continuous mode: allocation only — prompt tokens are fed by the
+        step loop, ``prefill_chunk`` at a time, interleaved with active
+        decodes.  Bucket mode (the legacy baseline): the WHOLE prompt
+        prefills here, one jitted call per token, before any active slot
+        advances — exactly the admission stall the load harness measures.
+        """
         while (adm := self.table.admit_one()) is not None:
             s, req = adm
-            # plan choice is an ADMISSION decision: the slot keeps it for
-            # the request's whole decode (prefill included), so degraded
-            # requests are end-to-end lower-L — bit-exact vs a direct
-            # lower-L bind — rather than a mid-sequence numeric splice
-            self.slot_deg[s] = degraded and self._step_fb is not None
-            req.degraded = self.slot_deg[s]
-            if req.degraded:
-                self.stats["degraded_served"] += 1
-            # reset slot s to pristine state: recurrent families
-            # (ssm/hybrid) READ-modify-write their states h' = f(h, x),
-            # so a reused slot must not prefill from the previous
-            # occupant's (or a wholesale-stepped garbage) state.  KV
-            # rows are position-overwritten anyway, so this costs one
-            # merge and buys correctness for every cache family.
-            self.cache = self._merge_rows(self.cache, self._cache0, [s])
+            self._reset_slot(s, req, degraded)
+            if self.batching == "continuous":
+                continue
+            # -- legacy blocking prefill (bucket-barrier baseline) ------
             others = [r for i, r in enumerate(self.slot_req)
                       if r is not None and i != s]
             # per-slot prefill: the shape-stable step runs the whole
@@ -327,6 +408,7 @@ class ServeEngine:
             try:
                 for t, tok in enumerate(req.prompt):
                     toks = self._tok.at[s, 0].set(tok)
+                    self.ncalls += 1
                     logits, cache = step_fn(
                         cache, toks, jnp.asarray(t, jnp.int32))
             except Exception as e:               # noqa: BLE001 — a
@@ -334,47 +416,41 @@ class ServeEngine:
                 continue                         # not wedge the slot
             self.cache = (self._merge_rows(self.cache, cache, [s])
                           if others else cache)
-            self.slot_pos[s] = len(req.prompt)
+            self.slot_pos[s] = self.slot_fed[s] = len(req.prompt)
             req._next = int(jnp.argmax(logits[s, -1]))
 
-    def step(self) -> int:
-        """One decode step over all active slots; returns #active.
+    def _feed_round(self, fed: List[int]) -> None:
+        """Advance every slot in ``fed`` one token — its next PROMPT
+        token while prefilling, its last sampled token while decoding.
 
-        Overload handling mirrors ``CnnServeEngine.step``: the
-        controller observes the pre-admission queue depth, admissions
-        made while DEGRADED decode on the pre-bound lower-L fallback
-        plan for their whole lifetime, and expired requests complete
-        exceptionally before any jitted step runs.
+        decode_step takes a scalar position, but staggered admissions
+        leave slots at DIFFERENT positions — and mixed admission states
+        leave slots on DIFFERENT plans.  Step each (plan, position)
+        group separately, keeping only that group's rows — one jitted
+        call per distinct group (usually 1; bounded by #slots).  Rows
+        are independent, so a prefill token and a decode token sharing
+        one grouped call are each bit-identical to solo serving.
         """
-        degraded = False
-        if self.controller is not None:
-            state = self.controller.observe(len(self.queue))
-            degraded = state == DegradeController.DEGRADED
-        self._admit(degraded)
-        self._expire()
-        active = self.table.active()
-        if not active:
-            return 0
+        live = self.table.active()
         toks = self._tok
-        for s in active:
+        pos_of: Dict[int, int] = {}
+        for s in fed:
             req = self.slot_req[s]
-            toks = toks.at[s, 0].set(req._next if not req.out
-                                     else req.out[-1])
-        # decode_step takes a scalar position, but staggered admissions
-        # leave slots at DIFFERENT positions — and mixed admission states
-        # leave slots on DIFFERENT plans.  Step each (plan, position)
-        # group separately, keeping only that group's rows — one jitted
-        # call per distinct group (usually 1; bounded by #slots).  The
-        # old max(slot_pos) stepping wrote every slot's KV at the most
-        # advanced slot's position.
+            if self.slot_fed[s] < len(req.prompt):
+                tok, pos = req.prompt[self.slot_fed[s]], self.slot_fed[s]
+            else:
+                tok = req._next if not req.out else req.out[-1]
+                pos = self.slot_pos[s]
+            toks = toks.at[s, 0].set(tok)
+            pos_of[s] = pos
         by_grp: Dict[Tuple[bool, int], List[int]] = {}
-        for s in active:
-            by_grp.setdefault((self.slot_deg[s], self.slot_pos[s]),
-                              []).append(s)
-        next_tok: Dict[int, int] = {}
+        for s in fed:
+            by_grp.setdefault((self.slot_deg[s], pos_of[s]), []).append(s)
+        logits_of: Dict[int, jax.Array] = {}
         for (deg, pos), group in sorted(by_grp.items()):
             step_fn = self._step_fb if deg else self._step
             try:
+                self.ncalls += 1
                 logits, stepped = step_fn(self.cache, toks,
                                           jnp.asarray(pos, jnp.int32))
                 if self._float_retry and not bool(jnp.all(jnp.isfinite(
@@ -384,28 +460,85 @@ class ServeEngine:
                     # exponent SEU) degrades to float numerics instead
                     # of feeding NaN logits into sampling
                     self.stats["float_retries"] += 1
+                    self.ncalls += 1
                     logits, stepped = self._float_step_fn()(
                         self.cache, toks, jnp.asarray(pos, jnp.int32))
             except Exception as e:               # noqa: BLE001 — slots
                 self._fail_slots(group, e)       # must never leak
                 continue
-            # single group (steady state): every active slot is at this
-            # position and inactive rows are rewritten before any read,
-            # so the masked merge copy would protect nothing — skip it.
-            self.cache = (stepped if len(by_grp) == 1 else
-                          self._merge_rows(self.cache, stepped, group))
+            # when ONE group covers every live slot (steady state),
+            # inactive rows are rewritten before any read, so the masked
+            # merge copy would protect nothing — skip it.
+            self.cache = (stepped
+                          if len(by_grp) == 1 and len(group) == len(live)
+                          else self._merge_rows(self.cache, stepped,
+                                                group))
             for s in group:
-                next_tok[s] = int(jnp.argmax(logits[s, -1]))
+                logits_of[s] = logits
+        for s in fed:
+            if s not in logits_of:
+                continue              # group failed; slot already freed
+            req = self.slot_req[s]
+            nxt = int(jnp.argmax(logits_of[s][s, -1]))
+            if self.slot_fed[s] < len(req.prompt):
+                self.slot_fed[s] += 1
+                self.slot_pos[s] = self.slot_fed[s]
+                if self.slot_fed[s] == len(req.prompt):
+                    req._next = nxt
+            else:
+                req.out.append(nxt)
+                self.slot_pos[s] += 1
+                if len(req.out) >= req.max_new:
+                    req.done = True
+                    self.stats["completed"] += 1
+                    self.table.free(s)
+
+    def step(self) -> int:
+        """One engine iteration; returns the number of requests still
+        queued or in flight AFTER the step (0 == drained) — the unified
+        drive-loop contract both serve engines share (DESIGN.md §9):
+        ``while eng.step(): ...`` serves to completion.
+
+        Order per step: the overload controller observes the
+        pre-admission queue depth, expiry runs BEFORE admission (a dead
+        queued request is failed without ever being admitted, let alone
+        prefilled), admissions made while DEGRADED decode on the
+        pre-bound lower-L fallback plan for their whole lifetime, then
+        every active slot advances — decoding slots one token,
+        prefilling slots up to ``prefill_chunk`` prompt tokens (plus
+        their first decode when the prompt completes within the chunk).
+        """
+        degraded = False
+        if self.controller is not None:
+            state = self.controller.observe(len(self.queue))
+            degraded = state == DegradeController.DEGRADED
+        self._expire()
+        self._admit(degraded)
+        active = self.table.active()
+        if not active:
+            return self.table.pending()
+        # per-slot feed budget this step: decoders advance 1; prefilling
+        # slots advance min(remaining, chunk) prompt tokens, +1 decode
+        # when that finishes the prompt (matching the legacy per-step
+        # visible behaviour for prompts shorter than the chunk)
+        chunk = self.prefill_chunk
+        budget: Dict[int, int] = {}
         for s in active:
             req = self.slot_req[s]
-            if s not in next_tok:
-                continue                  # group failed; slot already freed
-            req.out.append(next_tok[s])
-            self.slot_pos[s] += 1
-            if len(req.out) >= req.max_new:
-                req.done = True
-                self.table.free(s)
-        return len(active)
+            rem = len(req.prompt) - self.slot_fed[s]
+            if rem > 0:
+                n = rem if chunk is None else min(rem, chunk)
+                budget[s] = n + (1 if n == rem else 0)
+            else:
+                budget[s] = 1
+        while True:
+            fed = [s for s in self.table.active() if budget.get(s, 0) > 0]
+            if not fed:
+                break
+            self._feed_round(fed)
+            for s in fed:
+                budget[s] -= 1
+        return self.table.pending()
 
     def run(self) -> List[Request]:
         # include requests a prior step() already admitted into slots —

@@ -1,0 +1,264 @@
+"""Iteration-level continuous batching + serve-path correctness fixes
+(ISSUE 9).
+
+Pins the three bugfixes — submit validation (cache-geometry rejection,
+``max_new >= 1``), expire-BEFORE-admit ordering (zero jitted calls for a
+dead request, in both batching modes), O(1) FIFO admission order — and
+the continuous-batching invariants: chunked prefill with staggered
+admissions is bit-identical to solo serving, bucket mode matches
+continuous token-for-token, and ``step()`` returns the unified
+pending-after-step count.
+"""
+import jax
+import pytest
+
+from repro.configs.base import reduced
+from repro.configs.registry import ARCHS
+from repro.core.policy import TPU_TILED
+from repro.serve.degrade import (DeadlineExceeded, QueueOverloaded,
+                                 RequestTooLarge, ServeRejected)
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.slots import SlotTable
+from repro.train.step import init_state
+
+KEY = jax.random.PRNGKey(0)
+POL = TPU_TILED.with_(block_k=None, straight_through=False)
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = reduced(ARCHS["tinyllama-1.1b"], n_layers=2, d_model=64,
+                  d_ff=128, vocab=256)
+    params = init_state(cfg, KEY).params
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# Satellite 1: submit validation
+# ---------------------------------------------------------------------------
+
+def test_submit_rejects_request_too_large(lm):
+    """len(prompt) + max_new > max_len would write cache positions JAX
+    silently clamps/drops under jit — the request must be refused at the
+    door, typed, and never enqueued."""
+    cfg, params = lm
+    eng = ServeEngine(params, cfg, slots=1, max_len=8, policy=POL)
+    with pytest.raises(RequestTooLarge) as ei:
+        eng.submit(Request(rid=7, prompt=[1, 2, 3, 4, 5], max_new=4))
+    assert isinstance(ei.value, ServeRejected) and ei.value.rid == 7
+    assert len(eng.table.queue) == 0
+    assert eng.stats["shed"] == 0        # a rejection is not a shed
+    # the boundary fits exactly: positions 0..7 for 5 prompt + 3 new
+    eng.submit(Request(rid=8, prompt=[1, 2, 3, 4, 5], max_new=3))
+    done = eng.run()
+    assert done[0].error is None and len(done[0].out) == 3
+
+
+def test_submit_rejects_nonpositive_max_new(lm):
+    cfg, params = lm
+    eng = ServeEngine(params, cfg, slots=1, max_len=16, policy=POL)
+    with pytest.raises(ValueError, match="max_new"):
+        eng.submit(Request(rid=0, prompt=[1], max_new=0))
+    with pytest.raises(ValueError, match="max_new"):
+        eng.submit(Request(rid=1, prompt=[1], max_new=-2))
+    with pytest.raises(ValueError, match="non-empty"):
+        eng.submit(Request(rid=2, prompt=[], max_new=1))
+    assert not eng.table.pending()
+
+
+def test_validation_runs_before_shedding(lm):
+    """An oversized request must be rejected as TOO LARGE even when the
+    queue is also full — the client's fix is different (shrink vs
+    retry), so the type must not depend on load."""
+    cfg, params = lm
+    eng = ServeEngine(params, cfg, slots=1, max_len=8, policy=POL,
+                      max_queue=1)
+    eng.submit(Request(rid=0, prompt=[1], max_new=2))
+    with pytest.raises(RequestTooLarge):
+        eng.submit(Request(rid=1, prompt=[1] * 8, max_new=8))
+    with pytest.raises(QueueOverloaded):
+        eng.submit(Request(rid=2, prompt=[1], max_new=2))
+
+
+# ---------------------------------------------------------------------------
+# Satellite 2: expiry runs BEFORE admission
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("batching", ["continuous", "bucket"])
+def test_dead_request_is_never_prefilled(lm, batching):
+    """Regression (pre-fix: step() admitted then expired): a request
+    whose deadline already passed while queued must fail with ZERO
+    jitted calls — in bucket mode the old order burned len(prompt)
+    blocking prefill steps on a corpse."""
+    cfg, params = lm
+    t = [0.0]
+    eng = ServeEngine(params, cfg, slots=1, max_len=64, policy=POL,
+                      batching=batching, clock=lambda: t[0])
+    calls = [0]
+    orig = eng._step
+
+    def counting_step(cache, tok, pos):
+        calls[0] += 1
+        return orig(cache, tok, pos)
+
+    eng._step = counting_step
+    dead = Request(rid=0, prompt=list(range(1, 33)), max_new=4,
+                   deadline=5.0)
+    eng.submit(dead)
+    t[0] = 10.0                          # deadline passed while queued
+    assert eng.step() == 0
+    assert dead.done and isinstance(dead.error, DeadlineExceeded)
+    assert calls[0] == 0 and eng.ncalls == 0
+    assert eng.stats["expired"] == 1
+    assert eng.table.active() == []      # never occupied a slot
+
+
+def test_live_request_unaffected_by_dead_neighbor(lm):
+    cfg, params = lm
+    t = [0.0]
+    eng = ServeEngine(params, cfg, slots=2, max_len=64, policy=POL,
+                      clock=lambda: t[0])
+    dead = Request(rid=0, prompt=[1, 2, 3], max_new=4, deadline=5.0)
+    live = Request(rid=1, prompt=[1, 2, 3], max_new=4, deadline=500.0)
+    eng.submit(dead)
+    eng.submit(live)
+    t[0] = 10.0
+    eng.run()
+    assert isinstance(dead.error, DeadlineExceeded) and dead.out == []
+    assert live.error is None and len(live.out) == 4
+
+
+# ---------------------------------------------------------------------------
+# Satellite 3: O(1) FIFO preserves admission order + aliasing
+# ---------------------------------------------------------------------------
+
+def test_slot_table_fifo_admission_order():
+    """admit_one() hands out queued requests strictly in submission
+    order (the O(1) deque must still behave as a FIFO), including
+    across full-table stalls."""
+    tab = SlotTable(2)
+    for i in range(5):
+        tab.submit(("req", i))
+    occupied = [tab.admit_one(), tab.admit_one()]
+    assert tab.admit_one() is None       # table full — queue untouched
+    admitted = [adm[1] for adm in occupied]
+    while tab.queue:                     # drain the backlog one-for-one
+        s, _ = occupied.pop(0)           # retire the oldest admission
+        tab.free(s)
+        adm = tab.admit_one()
+        occupied.append(adm)
+        admitted.append(adm[1])
+    assert [r[1] for r in admitted] == [0, 1, 2, 3, 4]   # strict FIFO
+
+
+def test_slot_table_retain_preserves_alias_and_order():
+    tab = SlotTable(1)
+    alias = tab.queue
+    for i in range(6):
+        tab.submit(i)
+    dropped = tab.retain(lambda r: r % 2 == 0)
+    assert dropped == [1, 3, 5]
+    assert list(tab.queue) == [0, 2, 4]
+    assert tab.queue is alias            # engines alias table.queue
+    assert tab.retain(lambda r: True) == []
+    assert list(alias) == [0, 2, 4]
+
+
+def test_slot_table_pending_counts():
+    tab = SlotTable(2)
+    assert tab.pending() == 0 and not tab.pending()
+    tab.submit("a")
+    tab.submit("b")
+    tab.submit("c")
+    assert tab.pending() == 3
+    tab.admit()
+    assert tab.pending() == 3 and len(tab.queue) == 1
+    tab.free(0)
+    assert tab.pending() == 2
+
+
+# ---------------------------------------------------------------------------
+# Tentpole invariants
+# ---------------------------------------------------------------------------
+
+def _solo(params, cfg, prompt, max_new, **kw):
+    eng = ServeEngine(params, cfg, slots=1, max_len=64, policy=POL, **kw)
+    r = Request(rid=0, prompt=list(prompt), max_new=max_new)
+    eng.submit(r)
+    eng.run()
+    return list(r.out)
+
+
+def test_chunked_prefill_staggered_admissions_bit_exact(lm):
+    """A long prompt admitted mid-flight prefills in chunks interleaved
+    with the active request's decodes — and neither request's greedy
+    tokens may move vs solo serving."""
+    cfg, params = lm
+    p_short, p_long = [1, 2, 3], list(range(5, 5 + 24))
+    ref_s = _solo(params, cfg, p_short, 8)
+    ref_l = _solo(params, cfg, p_long, 8)
+
+    eng = ServeEngine(params, cfg, slots=2, max_len=64, policy=POL,
+                      prefill_chunk=2)   # many micro-iterations
+    r1 = Request(rid=1, prompt=list(p_short), max_new=8)
+    eng.submit(r1)
+    eng.step()
+    eng.step()                           # r1 is decoding
+    mid = len(r1.out)
+    r2 = Request(rid=2, prompt=list(p_long), max_new=8)
+    eng.submit(r2)                       # 24-token prompt, chunk=2
+    eng.step()
+    # the admission advanced r1 (no barrier) while r2 only prefilled
+    assert len(r1.out) == mid + 1 and r2.out == []
+    while eng.step():
+        pass
+    assert r1.out == ref_s and r2.out == ref_l
+
+
+def test_bucket_mode_matches_continuous_tokens(lm):
+    """The measured baseline is slower, not different: same requests,
+    same greedy tokens, either batching mode."""
+    cfg, params = lm
+    prompts = [[1, 2, 3], [9, 8, 7, 6, 5, 4], [11, 12]]
+    outs = {}
+    for mode in ("continuous", "bucket"):
+        eng = ServeEngine(params, cfg, slots=2, max_len=64, policy=POL,
+                          batching=mode, prefill_chunk=3)
+        rs = [Request(rid=i, prompt=list(p), max_new=5)
+              for i, p in enumerate(prompts)]
+        for r in rs:
+            eng.submit(r)
+        eng.run()
+        outs[mode] = [r.out for r in rs]
+    assert outs["continuous"] == outs["bucket"]
+
+
+def test_whole_prompt_chunk_none(lm):
+    cfg, params = lm
+    ref = _solo(params, cfg, [3, 1, 4, 1, 5], 4)
+    assert _solo(params, cfg, [3, 1, 4, 1, 5], 4,
+                 prefill_chunk=None) == ref
+
+
+def test_step_returns_pending_after_step(lm):
+    cfg, params = lm
+    eng = ServeEngine(params, cfg, slots=1, max_len=64, policy=POL)
+    eng.submit(Request(rid=0, prompt=[1, 2], max_new=2))
+    eng.submit(Request(rid=1, prompt=[1, 2], max_new=2))
+    seen = []
+    while True:
+        n = eng.step()
+        seen.append(n)
+        if not n:
+            break
+    assert seen[-1] == 0 and seen[0] >= 1      # drives `while eng.step()`
+    assert eng.stats["completed"] == 2
+    assert eng.step() == 0                     # idempotent when drained
+
+
+def test_engine_rejects_bad_batching_args(lm):
+    cfg, params = lm
+    with pytest.raises(ValueError, match="batching"):
+        ServeEngine(params, cfg, slots=1, policy=POL, batching="magic")
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ServeEngine(params, cfg, slots=1, policy=POL, prefill_chunk=0)

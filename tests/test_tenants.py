@@ -1,0 +1,153 @@
+"""Multi-tenant serving (ISSUE 9): packed cold start without float
+materialization, shared ``Plan.jit_forward`` trace caches across
+engines on one plan, bit-exactness of a shared-process tenant vs a solo
+engine, and aggregate accounting.
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.checkpoint import store
+from repro.core.packed import is_packed
+from repro.core.policy import TPU_TILED
+from repro.models.cnn import MODELS
+from repro.serve.cnn import CnnServeEngine
+from repro.serve.tenants import MultiTenantServer, cold_start
+
+KEY = jax.random.PRNGKey(0)
+POL = TPU_TILED.with_(block_k=None, straight_through=False)
+
+
+@pytest.fixture(scope="module")
+def packed_ckpt(tmp_path_factory):
+    """A bfp_packed lenet artifact + the float params that produced it."""
+    spec = MODELS["lenet"]
+    params = spec.init(KEY)
+    base = str(tmp_path_factory.mktemp("tenants") / "lenet")
+    store.save(base, 1, params, format="bfp_packed", policy=POL,
+               tree_kind="cnn")
+    return spec, params, base
+
+
+def _imgs(spec, n, seed=1):
+    return jax.random.normal(jax.random.PRNGKey(seed),
+                             (n, *spec.input_shape()))
+
+
+def test_cold_start_keeps_packed_leaves(packed_ckpt):
+    """The restore template is eval_shape-abstract and packed="keep"
+    returns PackedBFP containers — no float weight tree is ever built
+    for the prequant-eligible sites."""
+    spec, _, base = packed_ckpt
+    params = cold_start("lenet", base)
+    leaves = jax.tree_util.tree_leaves(
+        params, is_leaf=lambda x: is_packed(x))
+    assert any(is_packed(l) for l in leaves)
+
+
+def test_cold_start_missing_checkpoint_raises(tmp_path):
+    with pytest.raises(FileNotFoundError, match="lenet"):
+        cold_start("lenet", str(tmp_path / "nope"))
+
+
+def test_tenant_bit_exact_vs_solo_engine(packed_ckpt):
+    """A tenant served from the shared process (packed cold start) must
+    produce logits bit-identical to a solo engine bound to the SAME
+    plan — consolidation is an ops decision, never a numerics one."""
+    spec, _, base = packed_ckpt
+    imgs = _imgs(spec, 4)
+
+    srv = MultiTenantServer(jit=True)
+    ten = srv.add_tenant("a", "lenet", checkpoint_dir=base, policy=POL,
+                         slots=4)
+    got = [srv.submit("a", image=imgs[i]) for i in range(4)]
+    srv.run()
+
+    solo = CnnServeEngine(None, spec.apply, ten.plan, slots=4)
+    want = [solo.submit(image=imgs[i]) for i in range(4)]
+    solo.run()
+    for g, w in zip(got, want):
+        assert g.error is None
+        np.testing.assert_array_equal(g.logits, w.logits)
+        assert g.label == w.label
+
+
+def test_tenants_share_trace_cache_on_one_plan(packed_ckpt):
+    """add_tenant(plan=) reuses the donor's Plan: both engines dispatch
+    through the SAME plan.jit_forward-cached callable, so one jit trace
+    per bucket shape serves every tenant on that plan."""
+    spec, _, base = packed_ckpt
+    srv = MultiTenantServer(jit=True)
+    a = srv.add_tenant("a", "lenet", checkpoint_dir=base, policy=POL,
+                       slots=2)
+    b = srv.add_tenant("b", "lenet", plan=a.plan, slots=2)
+    assert b.plan is a.plan
+    assert a.engine._fwd is b.engine._fwd
+    assert a.engine._fwd is a.plan.jit_forward(spec.apply)
+    imgs = _imgs(spec, 2, seed=3)
+    ra = srv.submit("a", image=imgs[0])
+    rb = srv.submit("b", image=imgs[0])
+    srv.run()
+    # same plan + same image -> identical logits through either tenant
+    np.testing.assert_array_equal(ra.logits, rb.logits)
+
+
+def test_multi_model_tenants_and_aggregate_stats(packed_ckpt):
+    """Two different MODELS entries in one process, independent queues,
+    round-robin draining, and the stats roll-up."""
+    spec_l, _, base = packed_ckpt
+    spec_c = MODELS["cifarnet"]
+    srv = MultiTenantServer(jit=False)
+    srv.add_tenant("lenet", "lenet", checkpoint_dir=base, policy=POL,
+                   slots=2)
+    srv.add_tenant("cifar", "cifarnet", params=spec_c.init(KEY),
+                   policy=POL, slots=2, max_queue=2)
+    rl = [srv.submit("lenet", image=i) for i in _imgs(spec_l, 3)]
+    rc = [srv.submit("cifar", image=i) for i in _imgs(spec_c, 2)]
+    from repro.serve.degrade import QueueOverloaded
+    with pytest.raises(QueueOverloaded):
+        srv.submit("cifar", image=_imgs(spec_c, 1)[0])
+    assert srv.pending() == 5
+    srv.run()
+    assert srv.pending() == 0
+    assert all(r.error is None for r in rl + rc)
+    st = srv.stats()
+    assert st["tenants"]["lenet"]["completed"] == 3
+    assert st["tenants"]["cifar"]["completed"] == 2
+    assert st["tenants"]["cifar"]["shed"] == 1
+    assert st["total"]["completed"] == 5 and st["total"]["shed"] == 1
+
+
+def test_add_tenant_arg_validation(packed_ckpt):
+    spec, params, base = packed_ckpt
+    srv = MultiTenantServer()
+    t = srv.add_tenant("a", "lenet", checkpoint_dir=base, policy=POL)
+    with pytest.raises(ValueError, match="already registered"):
+        srv.add_tenant("a", "lenet", checkpoint_dir=base)
+    with pytest.raises(ValueError, match="plan= alone"):
+        srv.add_tenant("b", "lenet", plan=t.plan, checkpoint_dir=base)
+    with pytest.raises(ValueError, match="not both"):
+        srv.add_tenant("c", "lenet", checkpoint_dir=base,
+                       params=spec.init(KEY))
+    assert srv["a"] is t
+
+
+def test_tenant_logits_match_float_free_restore_path(packed_ckpt):
+    """End-to-end: packed cold start == restoring dequantized prequant
+    sidecars — the wire format is the numerics, the container is not."""
+    spec, params, base = packed_ckpt
+    img = _imgs(spec, 1, seed=9)[0]
+    srv = MultiTenantServer(jit=False)
+    srv.add_tenant("a", "lenet", checkpoint_dir=base, policy=POL,
+                   slots=1)
+    r = srv.submit("a", image=img)
+    srv.run()
+    # reference: restore the same artifact as prequant sidecars and
+    # serve through a fresh engine (no packed containers involved)
+    tpl = jax.tree_util.tree_map(lambda x: x, params)
+    ref_params, _ = store.restore(base, tpl, packed="prequant")
+    ref_eng = CnnServeEngine(ref_params, spec.apply, POL, slots=1,
+                             jit=False, prequant=False)
+    ref = ref_eng.submit(image=img)
+    ref_eng.run()
+    np.testing.assert_array_equal(r.logits, ref.logits)
