@@ -1,0 +1,169 @@
+"""E18: packed-container byte ratios — fixed-L vs variable-width (ISSUE 10).
+
+Rows (bytes are actual serialized container / checkpoint-dir sizes):
+
+  pack/wire/sparse_grad/fixed   fixed-L=8 wire container, codec us
+  pack/wire/sparse_grad/var     variable-width container, codec us
+  pack/ckpt/<model>/fixed       format="bfp_packed" dir vs float32 dir
+  pack/ckpt/<model>/var         format="bfp_packed_v2" under the
+                                precision-searched PolicyMap
+
+The gated quantity is ``bytes_ratio`` = fixed_bytes / variable_bytes per
+record (named ``speedup`` because that is the machine-independent ratio
+field ``tools/check_bench.py`` floors at baseline x 0.8) plus the
+acceptance assert that the variable-width vgg16-reduced checkpoint is
+STRICTLY below the fixed-L byte count (i.e. below the pinned 0.26x
+float32 ratio of ISSUE 5).  Absolute byte counts are informational only:
+they depend on the RNG-drawn params, which may drift across jax
+versions, while the fixed/variable ratio on the SAME params does not.
+
+    PYTHONPATH=src python benchmarks/pack_bench.py --smoke --csv pack.csv
+    PYTHONPATH=src python benchmarks/pack_bench.py --bench-json bench-pack-ci.json
+"""
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.checkpoint import store
+from repro.core.policy import TPU_TILED
+from repro.dist import compress
+from repro.models.cnn import MODELS
+from repro.tune.precision import search_precision
+
+#: serving-mode policy, same as the ISSUE 5 checkpoint pin in
+#: tests/test_packed.py: whole-K tiles, inference numerics.
+POL = TPU_TILED.with_(block_k=None, straight_through=False)
+
+
+def _dir_bytes(d):
+    return sum(os.path.getsize(os.path.join(r, f))
+               for r, _, fs in os.walk(d) for f in fs)
+
+
+def _host_us(fn, *args):
+    """Median microseconds for a host-side (numpy codec) call."""
+    reps = common.bench_reps()
+    for _ in range(reps["warmup"]):
+        fn(*args)
+    ts = []
+    for _ in range(reps["iters"]):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def _scenario_wire():
+    """Top-k-sparsified gradient leaf on the dist wire: zeroed blocks
+    collapse to 1-bit mantissas under the variable codec, so the wire
+    container shrinks below fixed-L even after the width-plane header."""
+    import jax.numpy as jnp
+
+    n = 4096 if common.SMOKE else 1 << 16
+    rng = np.random.default_rng(0)
+    g = rng.standard_normal(n).astype(np.float32)
+    k = n // 10                               # keep the top 10% by |g|
+    g[np.argpartition(np.abs(g), n - k)[: n - k]] = 0.0
+    leaf = jnp.asarray(g)
+
+    p_fix = compress.pack_leaf(leaf, 8, 16)
+    p_var = compress.pack_leaf(leaf, 8, 16, variable=True)
+    us_fix = _host_us(compress.pack_leaf, leaf, 8, 16)
+    us_var = _host_us(lambda: compress.pack_leaf(leaf, 8, 16,
+                                                 variable=True))
+    ratio = p_fix.nbytes / p_var.nbytes
+    common.emit("pack/wire/sparse_grad/fixed", us_fix,
+                f"nbytes={p_fix.nbytes}")
+    common.emit("pack/wire/sparse_grad/var", us_var,
+                f"nbytes={p_var.nbytes} bytes_ratio={ratio:.3f}")
+    np.testing.assert_array_equal(
+        np.asarray(compress.unpack_leaf(p_fix)),
+        np.asarray(compress.unpack_leaf(p_var)))
+    common.add_record({"kind": "pack", "name": "wire/sparse_grad",
+                       "speedup": ratio,
+                       "sparsity": 1 - k / n, "bits": 8, "block": 16})
+
+
+def _scenario_ckpt():
+    """float32 vs fixed-L=8 vs precision-searched variable-width
+    checkpoint directory bytes (the ISSUE 10 acceptance)."""
+    model = "lenet" if common.SMOKE else "vgg16"
+    budget, tol, batch = ((5e-2, 0.5, 2) if common.SMOKE
+                          else (3e-2, 0.25, 8))
+    res = search_precision(model, seed=0, batch=batch, nsr_budget=budget,
+                           top1_tol=tol, verbose=not common.SMOKE)
+    params = MODELS[model].init(jax.random.PRNGKey(0))
+    with tempfile.TemporaryDirectory() as d:
+        store.save(os.path.join(d, "f32"), 0, params)
+        store.save(os.path.join(d, "fix"), 0, params,
+                   format="bfp_packed", policy=POL, tree_kind="cnn")
+        store.save(os.path.join(d, "var"), 0, params,
+                   format="bfp_packed_v2", policy=res.policy_map,
+                   tree_kind="cnn")
+        b_f32 = _dir_bytes(os.path.join(d, "f32", "step_00000000"))
+        b_fix = _dir_bytes(os.path.join(d, "fix", "step_00000000"))
+        b_var = _dir_bytes(os.path.join(d, "var", "step_00000000"))
+
+    fixed_ratio = b_fix / b_f32
+    var_ratio = b_var / b_f32
+    widths = ",".join(f"{p}={l}" for p, l in sorted(res.assignment.items()))
+    common.emit(f"pack/ckpt/{model}/fixed", 0.0,
+                f"bytes={b_fix} ratio_vs_f32={fixed_ratio:.4f}")
+    common.emit(f"pack/ckpt/{model}/var", 0.0,
+                f"bytes={b_var} ratio_vs_f32={var_ratio:.4f} l_w:{widths}")
+    common.add_record({"kind": "pack", "name": f"ckpt/{model}",
+                       "speedup": b_fix / b_var,
+                       "fixed_ratio_vs_f32": round(fixed_ratio, 4),
+                       "var_ratio_vs_f32": round(var_ratio, 4),
+                       "l_w": dict(sorted(res.assignment.items())),
+                       "top1_agreement": res.top1_agreement})
+    if not common.SMOKE and b_var >= b_fix:
+        raise SystemExit(
+            f"ACCEPTANCE FAIL: variable-width {model} checkpoint "
+            f"({b_var} B, {var_ratio:.4f}x f32) is not strictly below "
+            f"the fixed-L one ({b_fix} B, {fixed_ratio:.4f}x f32)")
+
+
+def run():
+    _scenario_wire()
+    _scenario_ckpt()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="benchmarks.pack_bench")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--csv", metavar="PATH")
+    ap.add_argument("--bench-json", metavar="PATH")
+    args = ap.parse_args(argv)
+    common.set_smoke(args.smoke)
+    fh = open(args.csv, "w") if args.csv else None
+    common.set_csv(fh)
+    records: list = []
+    common.set_json(records)
+    print("name,us_per_call,derived")
+    if fh:
+        fh.write("name,us_per_call,derived\n")
+    run()
+    if fh:
+        fh.close()
+    if args.bench_json:
+        doc = {"schema": "pack-1",
+               "mode": "smoke" if args.smoke else "full",
+               "records": records}
+        with open(args.bench_json, "w") as jf:
+            json.dump(doc, jf, indent=1, sort_keys=True)
+            jf.write("\n")
+        print(f"# wrote {len(records)} records to {args.bench_json}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -28,6 +28,11 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
                        pinned trajectory lives in BENCH_serve.json,
                        written by ``python -m benchmarks.serve_load
                        --bench-json`` (own schema, own CI gate)
+  pack_bench           E18 packed-container bytes: fixed-L vs
+                       variable-width (ISSUE 10 acceptance).  Pinned
+                       trajectory in BENCH_pack.json, written by
+                       ``python -m benchmarks.pack_bench --bench-json``
+                       (own schema ``pack-1``, own CI gate)
 
 Flags:
   --smoke       tiny shapes, 1 rep — CI rot-check mode (the numbers are
@@ -54,7 +59,7 @@ import traceback
 
 from benchmarks import (blocksize_ablation, cnn_serve_bench, cnn_train,
                         common, conv_bench, dispatch_bench, engine_bench,
-                        faults_bench, kernel_bench, serve_load,
+                        faults_bench, kernel_bench, pack_bench, serve_load,
                         table1_storage, table2_scheme, table3_sweep,
                         table4_nsr)
 
@@ -72,6 +77,7 @@ _ALL = {
     "faults": faults_bench.run,
     "cnn_train": cnn_train.run,
     "serve_load": serve_load.run,
+    "pack": pack_bench.run,
 }
 
 

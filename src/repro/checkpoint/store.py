@@ -27,6 +27,10 @@ binds with no float weights ever materialized), ``"dequant"`` (a plain
 float tree), or ``"keep"`` (raw containers — ``engine.bind`` unpacks
 them).  The manifest gains ``format`` and ``packed_leaves`` fields; the
 atomicity/checksum/GC machinery is format-agnostic.
+``format="bfp_packed_v2"`` writes the variable-width (v3) containers —
+per-block effective mantissa widths, docs/formats.md §2 — and restores
+through the same three ``packed=`` modes; fixed and variable leaves can
+share one manifest.
 """
 from __future__ import annotations
 
@@ -74,27 +78,35 @@ def save(base: str, step: int, tree, keep: int = 3, *,
     ``engine.PolicyMap``): GEMM/conv weight leaves the prequant walk
     selects are stored as serialized :class:`PackedBFP` containers
     (uint8 rows in the same ``arrays.npz``), everything else as float.
+    ``format="bfp_packed_v2"`` is the same walk but writes VARIABLE-WIDTH
+    (v3) containers — each block stored at its effective occupied width,
+    so sparse/low-precision sites shrink below the fixed-L bitstream.
     ``tree_kind`` ("cnn" | "lm" | "auto") picks the path convention, as
     in ``engine.bind``.  A tree that already contains PackedBFP leaves
-    is stored packed under either format (no policy needed).
+    is stored packed under any format (no policy needed); fixed and
+    variable containers may coexist in one manifest — every container
+    is self-describing, so ``restore`` never consults the format field
+    to decode a leaf.
     """
-    if format not in ("float32", "bfp_packed"):
+    if format not in ("float32", "bfp_packed", "bfp_packed_v2"):
         raise ValueError(f"unknown checkpoint format {format!r}")
-    if format == "bfp_packed" and policy is not None:
-        tree = pack_param_tree(tree, policy, tree_kind)
+    packing = format in ("bfp_packed", "bfp_packed_v2")
+    if packing and policy is not None:
+        tree = pack_param_tree(tree, policy, tree_kind,
+                               variable=(format == "bfp_packed_v2"))
     leaves, treedef = _flatten(tree, is_leaf=is_packed)
     packed_idx = [i for i, l in enumerate(leaves) if is_packed(l)]
-    if format == "bfp_packed" and not packed_idx:
+    if packing and not packed_idx:
         # the caller explicitly asked for a packed artifact; silently
         # writing a full-size float32 checkpoint would hide a typo'd
         # PolicyMap / wrong tree_kind until the disk budget blows
         raise ValueError(
-            "format='bfp_packed' packed zero leaves — pass policy= (a "
-            "BFPPolicy or PolicyMap whose rules resolve for at least one "
-            "GEMM/conv weight), or check tree_kind" if policy is None else
-            "format='bfp_packed' packed zero leaves: the policy resolved "
-            "no prequant-eligible GEMM/conv weight (typo'd PolicyMap "
-            "rules, or wrong tree_kind?)")
+            f"format={format!r} packed zero leaves — pass policy= (a "
+            f"BFPPolicy or PolicyMap whose rules resolve for at least one "
+            f"GEMM/conv weight), or check tree_kind" if policy is None else
+            f"format={format!r} packed zero leaves: the policy resolved "
+            f"no prequant-eligible GEMM/conv weight (typo'd PolicyMap "
+            f"rules, or wrong tree_kind?)")
     os.makedirs(base, exist_ok=True)
     final = _step_dir(base, step)
     tmp = final + ".tmp"
@@ -114,9 +126,14 @@ def save(base: str, step: int, tree, keep: int = 3, *,
         # packed leaves report their ORIGINAL tensor geometry, so shape
         # validation at restore is format-agnostic
         "shapes": [list(l.shape) for l in leaves],
-        "dtypes": [(f"bfp_packed{l.bits}" if is_packed(l) else str(l.dtype))
-                   for l in leaves],
-        "format": "bfp_packed" if packed_idx else "float32",
+        # variable-width leaves advertise a "v" suffix so a manifest
+        # reader can tell mixed fixed/variable artifacts apart without
+        # parsing containers
+        "dtypes": [(f"bfp_packed{l.bits}{'v' if l.variable else ''}"
+                    if is_packed(l) else str(l.dtype)) for l in leaves],
+        "format": (("bfp_packed_v2" if any(leaves[i].variable
+                                           for i in packed_idx)
+                    else "bfp_packed") if packed_idx else "float32"),
         "packed_leaves": packed_idx,
         "crc32": crc,
         "status": "complete",

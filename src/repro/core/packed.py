@@ -9,10 +9,25 @@ sidecars, flat wire blocks) into
 
   * a small self-describing header (version, mantissa width, mantissa /
     exponent-plane geometry, JSON metadata),
-  * an **exponent plane**: one ``int8`` per block, and
+  * an **exponent plane**: one ``int8`` per block,
+  * optionally a **width plane** (container version 3): one ``uint8``
+    per block giving that block's effective mantissa width
+    ``L_eff = min(L, 1 + bit_length(max |mantissa|))`` — blocks that
+    occupy fewer bits than the policy's ``L`` store fewer bits
+    (an all-zero block stores 1 bit/element), and
   * a **mantissa bitstream**: sign+mantissa packed at exactly the
-    configured width ``L`` (offset-binary, MSB first, byte-padded at the
-    very end only) — 6-bit mantissas really take 6 bits.
+    configured width — ``L`` everywhere for fixed-width containers, the
+    block's ``L_eff`` for variable-width ones (offset-binary, MSB first,
+    byte-padded at the very end only) — 6-bit mantissas really take
+    6 bits.
+
+Note that for a PROPERLY saturated BFP block the largest |mantissa| is
+already >= 2^(L-2), so dense Gaussian weights need all L bits and the
+width plane is pure overhead; the wins come from sparse/structured data
+(all-zero blocks, gradient residuals, pruned channels) and — the big
+one — from pairing variable width with a per-site precision-searched
+PolicyMap (``repro.tune.precision``) whose smaller ``l_w`` shrink every
+block.  ``benchmarks/pack_bench.py`` measures both honestly.
 
 Round-trips are lossless by construction (integer mantissas and integer
 exponents in, the same integers out), which is what lets the checkpoint
@@ -46,23 +61,32 @@ __all__ = [
 ]
 
 _MAGIC = b"BFPK"
-#: container version written by ``to_bytes``.  v2 adds a CRC32 of the
-#: exponent plane + mantissa bitstream to the fixed header; v1 (no
-#: checksum) containers remain readable.
+#: container version written by ``to_bytes`` for fixed-width data.  v2
+#: adds a CRC32 of the exponent plane + mantissa bitstream to the fixed
+#: header; v1 (no checksum) containers remain readable.
 _VERSION = 2
-_READ_VERSIONS = (1, 2)
-#: fixed part of the v2 serialized header (magic, version, bits, ndims,
-#: meta length, crc32) — see ``to_bytes``
+#: container version for variable-width data: inserts a per-block uint8
+#: width plane between the exponent plane and the bitstream (the CRC
+#: covers it).  Fixed-width containers keep writing version 2, so every
+#: artifact produced before this feature parses byte-identically.
+_VERSION_VAR = 3
+_READ_VERSIONS = (1, 2, 3)
+#: fixed part of the v2/v3 serialized header (magic, version, bits,
+#: ndims, meta length, crc32) — see ``to_bytes``
 _FIXED_HEADER = 4 + 1 + 1 + 1 + 1 + 4 + 4
 #: v1 fixed header (no crc32 field)
 _FIXED_HEADER_V1 = 4 + 1 + 1 + 1 + 1 + 4
 
 
 class IntegrityError(ValueError):
-    """A container's stored CRC32 does not match its data — the payload
-    or exponent plane was corrupted after serialization (bit rot, torn
-    write, wire fault).  Raised by :meth:`PackedBFP.verify` and, by
-    default, by :meth:`PackedBFP.from_bytes` on v2 containers."""
+    """A container's integrity machinery rejected its bytes: the stored
+    CRC32 does not match the data (payload / exponent plane / width
+    plane corrupted after serialization — bit rot, torn write, wire
+    fault), or a v3 width plane is structurally invalid (a block
+    declares a width outside ``[1, L]``, or the plane / its bitstream is
+    truncated).  Raised by :meth:`PackedBFP.verify` and, by default, by
+    :meth:`PackedBFP.from_bytes` on v2/v3 containers; messages name the
+    offending byte offset where one exists."""
 
 
 def _mantissa_dtype(bits: int):
@@ -124,6 +148,171 @@ def _unpack_bits(payload: bytes, n: int, bits: int) -> np.ndarray:
     return out - (1 << (bits - 1))
 
 
+# ---------------------------------------------------------------------------
+# Variable-width (v3) plane mapping + codec
+# ---------------------------------------------------------------------------
+
+def _gemm_view(m: np.ndarray, exp_shape: Tuple[int, ...]) -> np.ndarray:
+    """View the mantissa tensor with one axis per exponent-plane axis.
+
+    Identity for same-rank layouts (paper schemes' keepdims planes,
+    TILED's ``[rows, K/bk]``, the wire's ``[nb, 1]``); conv HWIO
+    mantissas (4-D ``m`` against the 2-D GEMM-view ``[K/bk, N]``
+    sidecar) reshape to ``(kh*kw*c, n)`` — a C-order-preserving view, so
+    bitstream element order is unchanged.  Every exponent axis must
+    divide its mantissa axis (size-1 axes broadcast, i.e. divide
+    trivially).
+    """
+    if m.ndim == 4 and len(exp_shape) == 2:
+        kh, kw, c, n = m.shape
+        m = m.reshape(kh * kw * c, n)
+    if m.ndim != len(exp_shape):
+        raise ValueError(
+            f"cannot map exponent plane {exp_shape} onto mantissa shape "
+            f"{m.shape} for variable-width packing")
+    for sm, se in zip(m.shape, exp_shape):
+        if se < 1 or sm % se:
+            raise ValueError(
+                f"exponent plane {exp_shape} does not tile mantissa "
+                f"shape {m.shape} (axis size {sm} vs {se})")
+    return m
+
+
+def _elem_widths(m: np.ndarray) -> np.ndarray:
+    """Per-element occupied width: ``1 + bit_length(|m|)`` (sign bit +
+    magnitude bits; zero occupies the minimal 1 bit).  Exact for
+    |m| < 2^24 (container ``bits`` <= 24) via float64 frexp."""
+    a = np.abs(np.asarray(m, np.int64))
+    _, e = np.frexp(a.astype(np.float64))     # e == bit_length for a > 0
+    return np.where(a > 0, e + 1, 1).astype(np.int64)
+
+
+def _reduce_max_to(vals: np.ndarray, exp_shape: Tuple[int, ...]
+                   ) -> np.ndarray:
+    """Max-reduce a per-element plane onto the exponent-plane geometry
+    (same-rank view from :func:`_gemm_view`).  Blocked axes are
+    CONTIGUOUS groups — the inverse of ``BFPBlock.scale``'s repeat."""
+    split, red = [], []
+    for i, (sv, se) in enumerate(zip(vals.shape, exp_shape)):
+        split += [se, sv // se]
+        red.append(2 * i + 1)
+    if not split:
+        return vals
+    return vals.reshape(split).max(axis=tuple(red))
+
+
+def _expand_plane(plane: np.ndarray, view_shape: Tuple[int, ...]
+                  ) -> np.ndarray:
+    """Inverse of :func:`_reduce_max_to`: broadcast/repeat a per-block
+    plane to per-element over the same-rank mantissa view."""
+    out = plane
+    for ax, (sv, se) in enumerate(zip(view_shape, plane.shape)):
+        if se != sv:
+            out = np.repeat(out, sv // se, axis=ax)
+    return out
+
+
+def _width_planes(m: np.ndarray, exp_shape: Tuple[int, ...], bits: int
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Derive the per-block width plane ``L_eff = min(L, 1 +
+    bit_length(max |m|))`` and its per-element expansion (flat, C-order
+    of the stored mantissa tensor)."""
+    view = _gemm_view(np.asarray(m), exp_shape)
+    widths = np.minimum(_reduce_max_to(_elem_widths(view), exp_shape),
+                        bits)
+    wid_elem = _expand_plane(widths, view.shape).reshape(-1)
+    return widths.astype(np.uint8).reshape(exp_shape), wid_elem
+
+
+def _pack_bits_var(m: np.ndarray, wid_elem: np.ndarray) -> bytes:
+    """Bit-pack signed mantissas, element ``i`` at exactly
+    ``wid_elem[i]`` bits (its block's effective width), MSB first,
+    offset-binary ``m + 2^(w-1)``.  Chunked like :func:`_pack_bits`;
+    chunk seams are NOT byte-aligned here, so up to 7 leftover bits
+    carry into the next chunk's bit buffer.
+    """
+    flat = np.asarray(m).reshape(-1).astype(np.int64)
+    w = np.asarray(wid_elem).reshape(-1).astype(np.int64)
+    lim = (1 << (w - 1)) - 1
+    bad = np.abs(flat) > lim
+    if flat.size and bad.any():
+        i = int(np.argmax(bad))
+        raise ValueError(
+            f"mantissa {flat[i]} at element {i} exceeds its block's "
+            f"effective width {w[i]} — width plane does not describe "
+            f"this data")
+    out = bytearray()
+    carry = np.zeros(0, np.uint8)
+    for start in range(0, flat.size, _CHUNK):
+        f = flat[start:start + _CHUNK]
+        ww = w[start:start + _CHUNK]
+        u = (f + (1 << (ww - 1))).astype(np.uint64)
+        ends = carry.size + np.cumsum(ww)
+        bitbuf = np.zeros(int(ends[-1]) if ww.size else carry.size,
+                          np.uint8)
+        bitbuf[:carry.size] = carry
+        starts = ends - ww
+        for width in np.unique(ww):
+            sel = ww == width
+            s0, uu = starts[sel], u[sel]
+            for j in range(int(width)):
+                bitbuf[s0 + j] = (uu >> int(width - 1 - j)) & 1
+        nfull = (bitbuf.size // 8) * 8
+        out += np.packbits(bitbuf[:nfull]).tobytes()
+        carry = bitbuf[nfull:]
+    if carry.size:
+        out += np.packbits(carry).tobytes()   # final byte zero-padded
+    return bytes(out)
+
+
+def _unpack_bits_var(payload: bytes, wid_elem: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`_pack_bits_var` — int32 mantissas out (chunked,
+    bit offsets via cumsum)."""
+    w = np.asarray(wid_elem).reshape(-1).astype(np.int64)
+    n = w.size
+    if n == 0:
+        return np.zeros((0,), np.int32)
+    ends = np.cumsum(w)
+    starts = ends - w
+    need = -(-int(ends[-1]) // 8)
+    if len(payload) < need:
+        raise ValueError(f"mantissa bitstream truncated: have "
+                         f"{len(payload)} bytes, need {need}")
+    buf = np.frombuffer(payload, np.uint8)
+    out = np.empty(n, np.int32)
+    for c0 in range(0, n, _CHUNK):
+        c1 = min(c0 + _CHUNK, n)
+        byte0 = int(starts[c0]) // 8
+        byte1 = -(-int(ends[c1 - 1]) // 8)
+        bits_c = np.unpackbits(buf[byte0:byte1])
+        local = starts[c0:c1] - byte0 * 8
+        ww = w[c0:c1]
+        acc = np.zeros(c1 - c0, np.int64)
+        for width in np.unique(ww):
+            sel = ww == width
+            s0 = local[sel]
+            a = np.zeros(s0.size, np.int64)
+            for j in range(int(width)):
+                a = (a << 1) | bits_c[s0 + j]
+            acc[sel] = a - (1 << int(width - 1))
+        out[c0:c1] = acc
+    return out
+
+
+def _var_payload_need(shape: Tuple[int, ...], exp_shape: Tuple[int, ...],
+                      widths: np.ndarray) -> int:
+    """Exact variable-width bitstream size.  Every block covers the same
+    ``n / n_blocks`` elements (blocked axes tile evenly), so the total
+    is ``ceil(elems_per_block * sum(widths) / 8)``."""
+    n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+    n_exp = int(np.prod(exp_shape, dtype=np.int64)) if exp_shape else 1
+    if n_exp < 1 or n % n_exp:
+        raise ValueError(f"exponent plane {exp_shape} does not evenly "
+                         f"tile shape {shape}")
+    total_bits = (n // n_exp) * int(np.sum(widths, dtype=np.int64))
+    return -(-total_bits // 8)
+
+
 def _exp_int8(e: np.ndarray) -> np.ndarray:
     e = np.asarray(e)
     if e.size and (e.min() < -128 or e.max() > 127):
@@ -157,38 +346,68 @@ class PackedBFP:
     #: data are the same container.
     stored_crc: Optional[int] = dataclasses.field(default=None,
                                                   compare=False)
+    #: variable-width (v3) containers carry one uint8 effective width
+    #: per block, same geometry as the exponent plane; ``None`` means
+    #: fixed-width (every element at ``bits``).  Equality-relevant: two
+    #: containers with different width planes hold different bitstreams.
+    widths: Optional[np.ndarray] = None
 
     def __post_init__(self):
         if not 2 <= self.bits <= 24:
             raise ValueError(f"bits must be in [2, 24], got {self.bits}")
-        n = int(np.prod(self.shape, dtype=np.int64)) if self.shape else 1
-        need = -(-n * self.bits // 8)
-        if len(self.payload) != need:
-            raise ValueError(f"payload is {len(self.payload)} bytes; "
-                             f"shape {self.shape} at L={self.bits} needs "
-                             f"{need}")
         if tuple(self.exponents.shape) != tuple(self.exp_shape):
             raise ValueError("exponent plane shape mismatch")
+        n = int(np.prod(self.shape, dtype=np.int64)) if self.shape else 1
+        if self.widths is None:
+            need = -(-n * self.bits // 8)
+        else:
+            if tuple(self.widths.shape) != tuple(self.exp_shape):
+                raise ValueError("width plane shape mismatch (must match "
+                                 "the exponent plane, one width per block)")
+            wmin = int(self.widths.min()) if self.widths.size else 1
+            wmax = int(self.widths.max()) if self.widths.size else 1
+            if wmin < 1 or wmax > self.bits:
+                raise ValueError(
+                    f"block widths [{wmin}, {wmax}] outside the legal "
+                    f"[1, {self.bits}] for an L={self.bits} container")
+            need = _var_payload_need(self.shape, self.exp_shape,
+                                     self.widths)
+        if len(self.payload) != need:
+            raise ValueError(f"payload is {len(self.payload)} bytes; "
+                             f"shape {self.shape} at L={self.bits}"
+                             f"{' (variable-width)' if self.widths is not None else ''}"
+                             f" needs {need}")
 
     @property
     def n_elements(self) -> int:
         return int(np.prod(self.shape, dtype=np.int64))
 
     @property
+    def variable(self) -> bool:
+        """True when this container stores per-block effective widths."""
+        return self.widths is not None
+
+    @property
     def nbytes(self) -> int:
-        """Exact serialized size (v2 header + exponent plane + bitstream)."""
+        """Exact serialized size (fixed header + dims + meta + exponent
+        plane [+ width plane] + bitstream)."""
         meta_len = len(json.dumps(self.meta).encode())
         return (_FIXED_HEADER + 4 * (len(self.shape) + len(self.exp_shape))
-                + meta_len + self.exponents.size + len(self.payload))
+                + meta_len + self.exponents.size
+                + (self.exponents.size if self.widths is not None else 0)
+                + len(self.payload))
 
     # -- integrity ----------------------------------------------------------
 
     def crc32(self) -> int:
-        """CRC32 over the exponent plane + mantissa bitstream — exactly
-        the bytes a bit-flip in storage or on the wire would corrupt.
-        The header (shape/meta) is covered by its own structural
-        validation in :meth:`from_bytes`."""
+        """CRC32 over the exponent plane + (v3) width plane + mantissa
+        bitstream — exactly the bytes a bit-flip in storage or on the
+        wire would corrupt.  The header (shape/meta) is covered by its
+        own structural validation in :meth:`from_bytes`."""
         crc = zlib.crc32(self.exponents.astype(np.int8).tobytes(order="C"))
+        if self.widths is not None:
+            crc = zlib.crc32(
+                self.widths.astype(np.uint8).tobytes(order="C"), crc)
         return zlib.crc32(self.payload, crc) & 0xFFFFFFFF
 
     def verify(self) -> "PackedBFP":
@@ -214,20 +433,23 @@ class PackedBFP:
     # -- serialization ------------------------------------------------------
 
     def to_bytes(self) -> bytes:
-        """Serialize (docs/formats.md layout, container version 2):
+        """Serialize (docs/formats.md layout, container version 2 for
+        fixed-width data, 3 for variable-width):
 
         ========  =========================================================
         bytes     field
         ========  =========================================================
         0:4       magic ``b"BFPK"``
-        4         version (2)
-        5         mantissa width L, sign included
+        4         version (2 fixed-width | 3 variable-width)
+        5         mantissa width L, sign included (v3: the MAXIMUM width;
+                  per-block effective widths live in the width plane)
         6, 7      ndim(shape), ndim(exp_shape)
         8:12      meta JSON length (u32 LE)
-        12:16     crc32 of exponent plane + bitstream (u32 LE; v2 only)
+        12:16     crc32 of exponent [+ width] plane + bitstream (u32 LE)
         ..        shape dims, then exp_shape dims (u32 LE each)
         ..        meta JSON (utf-8)
         ..        exponent plane (int8, C-order, one per block)
+        ..        width plane (uint8, C-order, one per block; v3 ONLY)
         ..        mantissa bitstream (offset-binary, MSB first)
         ========  =========================================================
 
@@ -235,13 +457,16 @@ class PackedBFP:
         serialization (checksums certify bytes, not history).
         """
         meta_b = json.dumps(self.meta).encode()
+        ver = _VERSION if self.widths is None else _VERSION_VAR
         out = [_MAGIC,
-               struct.pack("<BBBBII", _VERSION, self.bits, len(self.shape),
+               struct.pack("<BBBBII", ver, self.bits, len(self.shape),
                            len(self.exp_shape), len(meta_b), self.crc32())]
         for d in (*self.shape, *self.exp_shape):
             out.append(struct.pack("<I", d))
         out.append(meta_b)
         out.append(self.exponents.astype(np.int8).tobytes(order="C"))
+        if self.widths is not None:
+            out.append(self.widths.astype(np.uint8).tobytes(order="C"))
         out.append(self.payload)
         return b"".join(out)
 
@@ -269,6 +494,7 @@ class PackedBFP:
             "<BBBBI", buf[4:_FIXED_HEADER_V1])
         if ver not in _READ_VERSIONS:
             raise ValueError(f"unsupported PackedBFP version {ver}")
+        variable = ver >= 3
         stored_crc = None
         off = _FIXED_HEADER_V1
         if ver >= 2:
@@ -302,14 +528,43 @@ class PackedBFP:
                              np.int8).reshape(exp_shape)
         off += n_exp
         n = int(np.prod(shape, dtype=np.int64)) if nd else 1
-        need = -(-n * bits // 8)
+        widths = None
+        if variable:
+            if len(buf) < off + n_exp:
+                raise IntegrityError(
+                    f"truncated container: width plane needs {n_exp} "
+                    f"bytes at offset {off}, buffer has {len(buf) - off}")
+            widths = np.frombuffer(buf[off:off + n_exp],
+                                   np.uint8).reshape(exp_shape)
+            flatw = widths.reshape(-1)
+            bad = (flatw < 1) | (flatw > bits)
+            if bad.any():
+                i = int(np.argmax(bad))
+                raise IntegrityError(
+                    f"width plane corrupt: block {i} declares width "
+                    f"{flatw[i]} outside [1, {bits}] for an L={bits} "
+                    f"container (byte offset {off + i})")
+            off += n_exp
+            if n_exp and n % n_exp:
+                raise IntegrityError(
+                    f"width plane geometry invalid: {n_exp} blocks do "
+                    f"not evenly tile {n} elements")
+            need = _var_payload_need(tuple(shape), tuple(exp_shape),
+                                     widths)
+            if len(buf) - off < need:
+                raise IntegrityError(
+                    f"truncated container: variable-width bitstream "
+                    f"needs {need} bytes at offset {off}, buffer has "
+                    f"{len(buf) - off}")
+        else:
+            need = -(-n * bits // 8)
         payload = buf[off:off + need]
         if len(payload) != need:
             raise ValueError(f"truncated container: {len(payload)} payload "
                              f"bytes at offset {off}, need {need}")
         p = cls(bits=bits, shape=tuple(shape), exp_shape=tuple(exp_shape),
                 exponents=exps, payload=payload, meta=meta,
-                stored_crc=stored_crc)
+                stored_crc=stored_crc, widths=widths)
         return p.verify() if verify else p
 
 
@@ -331,20 +586,45 @@ def packed_nbytes(shape: Tuple[int, ...], exp_shape: Tuple[int, ...],
 # BFPBlock <-> container
 # ---------------------------------------------------------------------------
 
-def pack_block(blk: BFPBlock, **meta: Any) -> PackedBFP:
+def _pack_payload(m: np.ndarray, exp_shape: Tuple[int, ...], bits: int,
+                  variable: bool
+                  ) -> Tuple[bytes, Optional[np.ndarray]]:
+    """Build (payload, width plane) — width plane ``None`` when fixed."""
+    if not variable:
+        return _pack_bits(m, bits), None
+    widths, wid_elem = _width_planes(m, exp_shape, bits)
+    return _pack_bits_var(m, wid_elem), widths
+
+
+def _unpack_mantissas(p: PackedBFP) -> np.ndarray:
+    """Decode a container's bitstream (fixed or variable width) to int32
+    mantissas in the stored tensor shape."""
+    if p.widths is None:
+        return _unpack_bits(p.payload, p.n_elements, p.bits).reshape(p.shape)
+    view = _gemm_view(np.empty(p.shape, np.int8), p.exp_shape)
+    wid_elem = _expand_plane(p.widths.astype(np.int64).reshape(p.exp_shape),
+                             view.shape).reshape(-1)
+    return _unpack_bits_var(p.payload, wid_elem).reshape(p.shape)
+
+
+def pack_block(blk: BFPBlock, variable: bool = False,
+               **meta: Any) -> PackedBFP:
     """Serialize a BFPBlock losslessly (any scheme/axes layout, incl. the
-    TILED non-keepdims exponent planes)."""
+    TILED non-keepdims exponent planes).  ``variable=True`` packs each
+    block at its effective width (v3 container)."""
     m = np.asarray(blk.mantissa)
     e = np.asarray(blk.exponent)
     meta.setdefault("kind", "block")
+    payload, widths = _pack_payload(m, tuple(e.shape), blk.bits, variable)
     return PackedBFP(bits=blk.bits, shape=tuple(m.shape),
                      exp_shape=tuple(e.shape), exponents=_exp_int8(e),
-                     payload=_pack_bits(m, blk.bits), meta=dict(meta))
+                     payload=payload, meta=dict(meta), widths=widths)
 
 
 def unpack_block(p: PackedBFP) -> BFPBlock:
-    """Reconstruct the exact BFPBlock (bit-identical mantissas/exponents)."""
-    m = _unpack_bits(p.payload, p.n_elements, p.bits).reshape(p.shape)
+    """Reconstruct the exact BFPBlock (bit-identical mantissas/exponents,
+    fixed- or variable-width container alike)."""
+    m = _unpack_mantissas(p)
     return BFPBlock(mantissa=jnp.asarray(m.astype(_mantissa_dtype(p.bits))),
                     exponent=jnp.asarray(
                         p.exponents.astype(np.int32)).reshape(p.exp_shape),
@@ -354,13 +634,14 @@ def unpack_block(p: PackedBFP) -> BFPBlock:
 def pack_matrix(w: jax.Array, bits: int, operand: str, scheme: Scheme,
                 block_k: Optional[int] = None,
                 rounding: Rounding = Rounding.ROUND,
+                variable: bool = False,
                 **meta: Any) -> PackedBFP:
     """Quantize one GEMM operand under ``scheme`` and pack it — the
     one-call path benchmarks and tests use to measure real bytes."""
     blk = bfp.bfp_quantize_matrix(w, bits, operand, scheme, block_k,
                                   rounding)
-    return pack_block(blk, scheme=scheme.value, operand=operand,
-                      block_k=block_k, **meta)
+    return pack_block(blk, variable=variable, scheme=scheme.value,
+                      operand=operand, block_k=block_k, **meta)
 
 
 # ---------------------------------------------------------------------------
@@ -380,7 +661,8 @@ def _steps_to_exponents(s: np.ndarray, bits: int) -> np.ndarray:
     return (e - 1 + (bits - 2)).astype(np.int64)
 
 
-def pack_prequant(d: Dict[str, Any], bits: int, **meta: Any) -> PackedBFP:
+def pack_prequant(d: Dict[str, Any], bits: int, variable: bool = False,
+                  **meta: Any) -> PackedBFP:
     """Pack a prequant ``{"m", "s"}`` weight losslessly.
 
     ``bits`` is the policy's ``l_w`` (the mantissa storage width; int8
@@ -388,20 +670,25 @@ def pack_prequant(d: Dict[str, Any], bits: int, **meta: Any) -> PackedBFP:
     2-D, stacked ``[.., K, N]``, and conv-HWIO mantissas (``s`` stays in
     the GEMM view ``[K//bk, N]``): the container records both shapes, so
     :func:`unpack_prequant` reproduces the dict bit-exactly.
+    ``variable=True`` additionally stores each block at its effective
+    occupied width (v3 container) — still bit-exact on round trip.
     """
     m, s = np.asarray(d["m"]), np.asarray(d["s"])
     eps = _steps_to_exponents(s, bits)
     meta.setdefault("kind", "prequant")
+    payload, widths = _pack_payload(m, tuple(s.shape), bits, variable)
     return PackedBFP(bits=bits, shape=tuple(m.shape),
                      exp_shape=tuple(s.shape), exponents=_exp_int8(eps),
-                     payload=_pack_bits(m, bits), meta=dict(meta))
+                     payload=payload, meta=dict(meta), widths=widths)
 
 
 def unpack_prequant(p: PackedBFP) -> Dict[str, jax.Array]:
     """Container -> the exact ``{"m", "s"}`` sidecar dict ``pack_prequant``
     consumed — int mantissas and float32 power-of-two steps, no float
-    weight ever materialized."""
-    m = _unpack_bits(p.payload, p.n_elements, p.bits).reshape(p.shape)
+    weight ever materialized.  Fixed- and variable-width containers
+    decode identically (``m`` dtype follows the container's L, so a
+    variable container restores the same dtype its fixed twin would)."""
+    m = _unpack_mantissas(p)
     steps = np.ldexp(1.0, p.exponents.astype(np.int64) - (p.bits - 2))
     return {"m": jnp.asarray(m.astype(_mantissa_dtype(p.bits))),
             "s": jnp.asarray(steps.astype(np.float32)).reshape(p.exp_shape)}
@@ -429,7 +716,8 @@ def unpack_dequant(p: PackedBFP) -> jax.Array:
 # Param-tree packing (the checkpoint walk)
 # ---------------------------------------------------------------------------
 
-def pack_param_tree(params: Any, policy: Any, kind: str = "auto") -> Any:
+def pack_param_tree(params: Any, policy: Any, kind: str = "auto",
+                    variable: bool = False) -> Any:
     """Replace every prequant-eligible GEMM/conv weight leaf with a
     :class:`PackedBFP`; every other leaf (norm gains, biases, embeddings,
     odd-K weights, rules resolving to None) stays untouched.
@@ -444,6 +732,9 @@ def pack_param_tree(params: Any, policy: Any, kind: str = "auto") -> Any:
     checkpoint-the-bound-weights flow) packs them as-is, losslessly.
 
     ``kind``: "cnn" | "lm" | "auto" (same detection ``engine.bind`` uses).
+    ``variable=True`` writes v3 variable-width containers (each block at
+    its effective occupied width) — the checkpoint store's
+    ``format="bfp_packed_v2"``.
     """
     from repro.core import prequant as PQ
     if policy is None:
@@ -462,7 +753,7 @@ def pack_param_tree(params: Any, policy: Any, kind: str = "auto") -> Any:
                  else PQ.prequant_leaf)(leaf, pol)
             if not PQ.is_prequant(d):
                 return leaf                 # odd K etc.: stays float
-        return pack_prequant(d, pol.l_w, path=path,
+        return pack_prequant(d, pol.l_w, variable=variable, path=path,
                              conv=conv, block_k=pol.block_k,
                              scheme=pol.scheme.value)
 

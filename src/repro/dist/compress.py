@@ -97,7 +97,8 @@ def quantize_leaf(g: jax.Array, bits: int, block: int = WIRE_BLOCK,
 # ---------------------------------------------------------------------------
 
 def pack_leaf(g: jax.Array, bits: int, block: int = WIRE_BLOCK,
-              tile_k: Optional[int] = None) -> PK.PackedBFP:
+              tile_k: Optional[int] = None,
+              variable: bool = False) -> PK.PackedBFP:
     """Block-format one leaf and serialize the REAL wire payload.
 
     Returns a :class:`PackedBFP` whose ``nbytes`` is exactly what a
@@ -106,6 +107,13 @@ def pack_leaf(g: jax.Array, bits: int, block: int = WIRE_BLOCK,
     block (honest accounting; the padding travels).  Host-side, not
     jit-safe.  ``unpack_leaf(pack_leaf(g, ...))`` equals
     ``quantize_leaf(g, ...)`` bit-exactly.
+
+    ``variable=True`` writes a v3 variable-width container: each wire
+    block travels at its effective occupied width, so sparse gradients
+    (near-zero error-feedback residuals, frozen layers) shrink below
+    ``bits`` bits/element while the dequantized round trip stays
+    bit-identical — ``quantize_leaf`` remains the in-graph model for
+    both encodings.
     """
     validate_wire_block(block, tile_k)
     arr = np.asarray(g)
@@ -116,8 +124,9 @@ def pack_leaf(g: jax.Array, bits: int, block: int = WIRE_BLOCK,
     nb = -(-n // block)
     padded = jnp.pad(flat, (0, nb * block - n)).reshape(nb, block)
     blk = bfp.quantize(padded, bits, (1,))
-    return PK.pack_block(blk, kind="wire", orig_shape=list(arr.shape),
-                         orig_size=n, block=block)
+    return PK.pack_block(blk, variable=variable, kind="wire",
+                         orig_shape=list(arr.shape), orig_size=n,
+                         block=block)
 
 
 def unpack_leaf(p) -> jax.Array:
@@ -157,13 +166,15 @@ def leaf_wire_bytes(n_elems: int, bits: int, block: int = WIRE_BLOCK) -> int:
 
 
 def wire_report(tree: Any, bits: int, block: int = WIRE_BLOCK,
-                tile_k: Optional[int] = None) -> Dict[str, Any]:
+                tile_k: Optional[int] = None,
+                variable: bool = False) -> Dict[str, Any]:
     """Measure REAL wire bytes for a gradient/param pytree.
 
     Packs every float leaf through :func:`pack_leaf` and sums actual
     serialized container sizes (headers, exponent planes, padded
     mantissa bitstreams).  Non-float leaves transfer uncompressed and are
-    counted at their raw ``nbytes``.  Returns::
+    counted at their raw ``nbytes``.  ``variable=True`` measures the
+    variable-width (v3) wire instead.  Returns::
 
         {"wire_bytes", "float_bytes", "ratio", "n_leaves",
          "n_uncompressed", "per_leaf": [(shape, wire, raw), ...]}
@@ -176,7 +187,7 @@ def wire_report(tree: Any, bits: int, block: int = WIRE_BLOCK,
     for leaf in leaves:
         arr = np.asarray(leaf)
         if np.issubdtype(arr.dtype, np.floating):
-            p = pack_leaf(arr, bits, block, tile_k)
+            p = pack_leaf(arr, bits, block, tile_k, variable)
             w = p.nbytes
         else:
             w = arr.nbytes
@@ -191,7 +202,8 @@ def wire_report(tree: Any, bits: int, block: int = WIRE_BLOCK,
 
 def packed_allreduce(grads: Any, residual: Any, bits: int = 8,
                      block: int = WIRE_BLOCK,
-                     tile_k: Optional[int] = None
+                     tile_k: Optional[int] = None,
+                     variable: bool = False
                      ) -> Tuple[Any, Any, int]:
     """Error-feedback all-reduce over the REAL packed wire (host-side).
 
@@ -211,6 +223,10 @@ def packed_allreduce(grads: Any, residual: Any, bits: int = 8,
     fast jitted training step IS the wire protocol, and this function is
     how a step's bytes are measured (or a real multi-host exchange
     staged).  Non-float leaves pass through unaveraged.
+
+    ``variable=True`` ships v3 variable-width containers — same
+    dequantized contributions bit-exactly (so the in-graph model still
+    holds), fewer bytes whenever gradient blocks under-occupy ``bits``.
     """
     validate_wire_block(block, tile_k)
     n_bytes = 0
@@ -223,7 +239,7 @@ def packed_allreduce(grads: Any, residual: Any, bits: int = 8,
         qs, rs = [], []
         for wi in range(workers):
             e = jnp.asarray(g[wi], jnp.float32) + r[wi]
-            p = pack_leaf(e, bits, block, tile_k)
+            p = pack_leaf(e, bits, block, tile_k, variable)
             wire = p.to_bytes()
             n_bytes += len(wire)
             q = unpack_leaf(wire)

@@ -61,11 +61,16 @@ def unpack_packed(params: Any) -> Any:
     """Replace every :class:`~repro.core.packed.PackedBFP` leaf with its
     ``{"m", "s"}`` prequant sidecar — the packed-artifact load path.
 
-    This is how a serving engine consumes a ``format="bfp_packed"``
-    checkpoint restored with ``packed="keep"``: the ~4x-smaller container
-    unpacks straight into the wire format every backend executes, so no
-    float weight is ever materialized for a prequant-eligible site.
-    Trees without packed leaves pass through untouched (same object).
+    This is how a serving engine consumes a ``format="bfp_packed"`` or
+    ``format="bfp_packed_v2"`` checkpoint restored with
+    ``packed="keep"``: the ~4x-smaller container unpacks straight into
+    the wire format every backend executes, so no float weight is ever
+    materialized for a prequant-eligible site.  Fixed- and
+    variable-width containers decode through the same call (the
+    container self-describes; ``unpack_prequant`` dispatches on its
+    width plane), so binding a v3 artifact is exactly binding its fixed
+    twin.  Trees without packed leaves pass through untouched (same
+    object).
     """
     flat = jax.tree_util.tree_leaves(params, is_leaf=is_packed)
     if not any(is_packed(l) for l in flat):

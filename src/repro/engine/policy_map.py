@@ -91,6 +91,22 @@ class PolicyMap:
                       for r in cfg.get("rules", ()))
         return cls(rules=rules, default=mk(cfg.get("default")))
 
+    def to_dict(self) -> Dict[str, Any]:
+        """Plain-data form, JSON-serializable; the exact inverse of
+        :meth:`from_dict` (``PolicyMap.from_dict(pm.to_dict()) == pm``).
+        This is how ``repro.tune.precision`` persists a searched map."""
+        def dd(p: Optional[BFPPolicy]) -> Optional[Dict[str, Any]]:
+            if p is None:
+                return None
+            d = dataclasses.asdict(p)
+            d["scheme"] = p.scheme.value
+            d["rounding"] = p.rounding.value
+            return d
+
+        return {"rules": [{"pattern": pat, "policy": dd(pol)}
+                          for pat, pol in self.rules],
+                "default": dd(self.default)}
+
 
 #: What every GEMM-bearing layer accepts as ``policy``: None (float), a
 #: BFPPolicy (uniform), a PolicyMap (per-layer rules), or a bound

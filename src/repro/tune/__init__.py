@@ -9,6 +9,10 @@ Three pieces:
   process-wide active cache ``kernels.ops`` consults at dispatch.
 * :mod:`repro.tune.autotune` — the hillclimber that fills the cache
   (``python -m repro.tune`` tunes the canonical benchmark layers).
+* :mod:`repro.tune.precision` — the per-site mantissa-width search
+  (``python -m repro.tune --precision``): greedy descent of each
+  site's ``l_w`` under a measured-NSR + top-1-agreement budget,
+  emitting a ``PolicyMap`` for ``bfp_packed_v2`` checkpoints.
 
 Wiring: ``engine.bind(..., tune_cache=cache)`` attaches a cache to a
 Plan; every GEMM/conv the plan executes then launches with tuned tiles.
@@ -16,10 +20,13 @@ Plan; every GEMM/conv the plan executes then launches with tuned tiles.
 from repro.tune.autotune import time_us, tune_conv, tune_gemm
 from repro.tune.cache import (SCHEMA, TuneCache, get_cache, lookup_tiles,
                               set_cache, use_cache)
+from repro.tune.precision import (PrecisionResult, PrecisionSearchError,
+                                  SiteReport, search_precision)
 from repro.tune.tables import (aligned_tile, conv_row_tile, fallback_tiles,
                                overflow_cap)
 
 __all__ = ["TuneCache", "SCHEMA", "set_cache", "get_cache", "use_cache",
            "lookup_tiles", "tune_gemm", "tune_conv", "time_us",
            "aligned_tile", "fallback_tiles", "overflow_cap",
-           "conv_row_tile"]
+           "conv_row_tile", "search_precision", "PrecisionResult",
+           "PrecisionSearchError", "SiteReport"]

@@ -5,6 +5,18 @@
 
 Skips sites already in the cache (delete the file to retune), saves
 after every site so interrupts lose at most one measurement.
+
+Precision mode (ISSUE 10) — per-site mantissa-width search instead of
+tile tuning:
+
+    PYTHONPATH=src python -m repro.tune --precision --model vgg16 \\
+        [--budget 1e-2] [--top1-tol 0.25] [--l-max 8] [--l-min 2] \\
+        [--seed 0] [--batch 8] [--policy-out policy.json] \\
+        [--checkpoint-out ckpt_dir]
+
+Emits the winning PolicyMap (+ per-site NSR evidence) as JSON and,
+with ``--checkpoint-out``, the ``format="bfp_packed_v2"``
+variable-width checkpoint packed under that map.
 """
 from __future__ import annotations
 
@@ -16,6 +28,38 @@ from repro.tune.cache import TuneCache
 from repro.tune.shapes import CONV_LAYERS, GEMM_LAYERS
 
 
+def _main_precision(args) -> None:
+    import jax
+
+    from repro.checkpoint import store
+    from repro.models.cnn import MODELS
+    from repro.tune.precision import search_precision
+
+    res = search_precision(args.model, seed=args.seed, batch=args.batch,
+                           l_max=args.l_max, l_min=args.l_min,
+                           nsr_budget=args.budget,
+                           top1_tol=args.top1_tol, verbose=True)
+    for s in res.sites:
+        print(f"[precision] {s.path:24s} {s.kind:4s} l_w={s.l_w} "
+              f"nsr={s.nsr_measured:.3g} (budget {res.nsr_budget:g}) "
+              f"fresh={s.nsr_fresh:.3g} <= bound={s.nsr_bound:.3g}",
+              flush=True)
+    print(f"[precision] top-1 agreement {res.top1_agreement:.3f} "
+          f"(tol {res.top1_tol:g}), {res.n_evals} evals", flush=True)
+    if args.policy_out:
+        res.save(args.policy_out)
+        print(f"[precision] PolicyMap + report -> {args.policy_out}",
+              flush=True)
+    if args.checkpoint_out:
+        spec = MODELS[args.model]
+        params = spec.init(jax.random.PRNGKey(args.seed))
+        path = store.save(args.checkpoint_out, 0, params,
+                          format="bfp_packed_v2", policy=res.policy_map,
+                          tree_kind="cnn")
+        print(f"[precision] bfp_packed_v2 checkpoint -> {path}",
+              flush=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(prog="repro.tune")
     ap.add_argument("--out", default="tune_cache.json")
@@ -25,7 +69,30 @@ def main() -> None:
                     help="conv spatial extent (default 32, smoke 8)")
     ap.add_argument("--block-k", type=int, default=128)
     ap.add_argument("--max-steps", type=int, default=None)
+    ap.add_argument("--precision", action="store_true",
+                    help="per-site mantissa-width search (repro.tune."
+                         "precision) instead of tile tuning")
+    ap.add_argument("--model", default="lenet",
+                    help="precision mode: registry model name")
+    ap.add_argument("--budget", type=float, default=1e-2,
+                    help="precision mode: max per-site output NSR")
+    ap.add_argument("--top1-tol", type=float, default=0.25,
+                    help="precision mode: tolerated top-1 disagreement "
+                         "fraction vs the global-l_max baseline")
+    ap.add_argument("--l-max", type=int, default=8)
+    ap.add_argument("--l-min", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--policy-out", default=None,
+                    help="precision mode: write PolicyMap JSON here")
+    ap.add_argument("--checkpoint-out", default=None,
+                    help="precision mode: write the bfp_packed_v2 "
+                         "checkpoint here")
     args = ap.parse_args()
+
+    if args.precision:
+        _main_precision(args)
+        return
 
     hw = args.hw or (8 if args.smoke else 32)
     steps = args.max_steps or (4 if args.smoke else 12)

@@ -1,0 +1,292 @@
+"""Automated per-layer mantissa-width search (Ristretto-style, ISSUE 10).
+
+The paper's headline answer — "8-bit mantissas cost <0.3% accuracy
+without retraining" — is GLOBAL: one L for every layer.  Ristretto
+(Gysel 2016) and the FPGA mixed-precision line (Wu et al. 2020, both in
+PAPERS.md) show per-layer width selection dominates any single global
+width.  :func:`search_precision` automates that answer over the CNN
+registry, on the REAL datapath:
+
+  1. a float reference forward and a global-``l_max`` baseline forward
+     run under ``engine.taps`` (eager — taps observe concrete values);
+  2. per site, the weight width ``l_w`` descends greedily from
+     ``l_max`` while (a) the site's measured output NSR against the
+     float run stays within ``nsr_budget`` and (b) the batch top-1
+     agreement against the global-``l_max`` baseline stays within
+     ``top1_tol`` (Ristretto's independent per-layer sweep);
+  3. the joint assignment is validated and hill-climb-repaired: while
+     any site exceeds its budget or agreement slips, the
+     worst-margin site gains a bit back (terminates: every site is
+     bounded by ``l_max``, which was validated up front);
+  4. the winner is re-run once with ``want_float`` taps so every
+     site's FRESH quantization NSR is checked against the analytic
+     :func:`repro.core.nsr.gemm_nsr_upper_bound` — the emitted report
+     carries measured-vs-bound per site.
+
+The result is a :class:`repro.engine.PolicyMap` (exact-match rule per
+site, ``l_max`` default) plus a per-site report; feed the map to
+``checkpoint.store.save(format="bfp_packed_v2", policy=map)`` and every
+site searched down from ``l_max`` shrinks the variable-width container
+below the fixed-L bytes — that pairing is what
+``benchmarks/pack_bench.py`` pins.
+
+An unsatisfiable budget raises :class:`PrecisionSearchError` up front
+(the global-``l_max`` baseline already violates it) instead of looping.
+The search is deterministic: same model/seed/arguments, same PolicyMap.
+
+Activations keep ``l_i = l_max`` — the search targets the storage/wire
+width ``l_w`` (what checkpoints and the gradient wire pay for); the NSR
+and agreement budgets still measure the full datapath effect of each
+narrowed weight.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro import engine as EG
+from repro.core import nsr
+from repro.core.policy import BFPPolicy, TPU_TILED
+from repro.engine import PolicyMap
+from repro.models.cnn import MODELS
+from repro.models.cnn.analysis import _site_matrices
+
+__all__ = ["PrecisionSearchError", "SiteReport", "PrecisionResult",
+           "search_precision"]
+
+
+class PrecisionSearchError(ValueError):
+    """The declared budget cannot be met: the global-``l_max`` baseline
+    already violates the NSR budget at some site (or the repair loop
+    would have to exceed ``l_max``).  Raised instead of descending into
+    a search that cannot terminate on a satisfying assignment; the
+    message names the offending site and the measured value."""
+
+
+@dataclasses.dataclass
+class SiteReport:
+    """One searched site of the emitted PolicyMap."""
+    path: str
+    kind: str                 #: "gemm" | "conv"
+    l_w: int                  #: chosen weight mantissa width (incl. sign)
+    nsr_measured: float       #: site output NSR vs the float run
+                              #: (inherited + fresh — the budgeted value)
+    nsr_fresh: float          #: fresh quantization NSR (same-input float
+                              #: reference, ``want_float`` taps)
+    nsr_bound: float          #: analytic gemm_nsr_upper_bound at l_w
+
+
+@dataclasses.dataclass
+class PrecisionResult:
+    """A winning per-site width assignment and its evidence."""
+    model: str
+    seed: int
+    l_max: int
+    l_min: int
+    nsr_budget: float
+    top1_tol: float
+    policy_map: PolicyMap
+    sites: List[SiteReport]
+    top1_agreement: float     #: final map vs global-l_max baseline
+    n_evals: int              #: tapped forwards the search spent
+
+    @property
+    def assignment(self) -> Dict[str, int]:
+        return {s.path: s.l_w for s in self.sites}
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "model": self.model, "seed": self.seed,
+            "l_max": self.l_max, "l_min": self.l_min,
+            "nsr_budget": self.nsr_budget, "top1_tol": self.top1_tol,
+            "top1_agreement": self.top1_agreement,
+            "n_evals": self.n_evals,
+            "policy_map": self.policy_map.to_dict(),
+            "sites": [dataclasses.asdict(s) for s in self.sites],
+        }
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=2)
+
+
+def _logits(out) -> np.ndarray:
+    return np.asarray(out[0] if isinstance(out, tuple) else out)
+
+
+def _site_nsrs(ev_f: List[EG.TapEvent], ev_q: List[EG.TapEvent]
+               ) -> Dict[str, float]:
+    """Per-path measured output NSR of a candidate run against the float
+    run (error/signal energies accumulated over repeated visits)."""
+    if len(ev_f) != len(ev_q):
+        raise RuntimeError(
+            f"float/candidate runs executed different site counts "
+            f"({len(ev_f)} vs {len(ev_q)})")
+    sig: Dict[str, float] = {}
+    err: Dict[str, float] = {}
+    for f, q in zip(ev_f, ev_q):
+        if f.path != q.path:
+            raise RuntimeError(f"site order diverged: {f.path} vs {q.path}")
+        if q.policy is None:
+            continue
+        yf = np.asarray(f.y, np.float64)
+        yq = np.asarray(q.y, np.float64)
+        p = f.path or "?"
+        sig[p] = sig.get(p, 0.0) + float(np.sum(yf * yf))
+        err[p] = err.get(p, 0.0) + float(np.sum((yq - yf) ** 2))
+    tiny = float(np.finfo(np.float32).tiny)
+    return {p: err[p] / max(sig[p], tiny) for p in sig}
+
+
+def _agreement(logits: np.ndarray, ref_labels: np.ndarray) -> float:
+    return float(np.mean(np.argmax(logits, axis=-1) == ref_labels))
+
+
+def _site_map(base: BFPPolicy, widths: Dict[str, int]) -> PolicyMap:
+    """Exact-match rule per site (escaped, anchored), base as default —
+    resolvable both by the engine at execution time and by the
+    ``core.prequant`` checkpoint walk (same paths, PR 5 pin)."""
+    rules = tuple((f"^{re.escape(p)}$", base.with_(l_w=l))
+                  for p, l in widths.items())
+    return PolicyMap(rules=rules, default=base)
+
+
+def search_precision(model: str = "lenet", *, seed: int = 0,
+                     batch: int = 8, l_max: int = 8, l_min: int = 2,
+                     nsr_budget: float = 1e-3, top1_tol: float = 0.0,
+                     base_policy: Optional[BFPPolicy] = None,
+                     reduced: bool = True,
+                     verbose: bool = False) -> PrecisionResult:
+    """Greedy per-site ``l_w`` search over one registry CNN.
+
+    ``nsr_budget`` bounds each site's measured output NSR against the
+    float forward (linear noise/signal ratio; 1e-3 ~= 30 dB SNR).
+    ``top1_tol`` is the tolerated fraction of the eval batch whose top-1
+    class may differ from the global-``l_max`` baseline's.  Raises
+    :class:`PrecisionSearchError` when the budget is unsatisfiable even
+    at ``l_max``.  Runs eagerly (taps observe concrete execution only).
+    """
+    if model not in MODELS:
+        raise ValueError(f"unknown model {model!r} (have "
+                         f"{sorted(MODELS)})")
+    if not 2 <= l_min <= l_max <= 24:
+        raise ValueError(f"need 2 <= l_min <= l_max <= 24, got "
+                         f"l_min={l_min}, l_max={l_max}")
+    if nsr_budget < 0:
+        raise ValueError(f"nsr_budget must be >= 0, got {nsr_budget}")
+    spec = MODELS[model]
+    params = spec.init(jax.random.PRNGKey(seed), reduced=reduced)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                          (batch, *spec.input_shape(reduced=reduced)))
+    base = (base_policy if base_policy is not None
+            else TPU_TILED.with_(block_k=None))
+    base = base.with_(l_w=l_max, l_i=l_max, straight_through=False)
+    n_evals = 0
+
+    def run(policy, want_float: bool = False
+            ) -> Tuple[List[EG.TapEvent], np.ndarray]:
+        nonlocal n_evals
+        evs: List[EG.TapEvent] = []
+        with EG.taps(evs.append, want_float=want_float):
+            out = spec.apply(params, x, policy)
+        n_evals += 1
+        return evs, _logits(out)
+
+    ev_float, _ = run(None)
+
+    # --- global-l_max baseline: the budget's feasibility gate -------------
+    ev_base, logits_base = run(base)
+    ref_labels = np.argmax(logits_base, axis=-1)
+    base_nsr = _site_nsrs(ev_float, ev_base)
+    if not base_nsr:
+        raise ValueError(f"model {model!r} executed no quantizable sites "
+                         f"under the base policy — nothing to search")
+    for p, v in base_nsr.items():
+        if v > nsr_budget:
+            raise PrecisionSearchError(
+                f"nsr_budget {nsr_budget:g} is unsatisfiable: site "
+                f"{p!r} measures NSR {v:.3g} already at the maximum "
+                f"width l_w={l_max} — no narrower assignment can meet "
+                f"the budget; raise the budget or l_max")
+    order = []
+    for ev in ev_base:
+        p = ev.path or "?"
+        if ev.policy is not None and p not in order:
+            order.append(p)
+
+    # --- phase A: independent per-site descent (Ristretto sweep) ----------
+    chosen = {p: l_max for p in order}
+    for p in order:
+        for L in range(l_max - 1, l_min - 1, -1):
+            evs, logits = run(_site_map(base, {p: L}))
+            ok = (_site_nsrs(ev_float, evs)[p] <= nsr_budget
+                  and _agreement(logits, ref_labels) >= 1.0 - top1_tol)
+            if not ok:
+                break
+            chosen[p] = L
+        if verbose:
+            print(f"[precision] {model}/{p}: l_w {l_max} -> {chosen[p]}",
+                  flush=True)
+
+    # --- phase B: joint validation + hillclimb repair ---------------------
+    max_repairs = sum(l_max - chosen[p] for p in order)
+    for _ in range(max_repairs + 1):
+        evs, logits = run(_site_map(base, chosen))
+        nsrs = _site_nsrs(ev_float, evs)
+        agree = _agreement(logits, ref_labels)
+        over = {p: nsrs[p] / max(nsr_budget, np.finfo(np.float32).tiny)
+                for p in order if nsrs[p] > nsr_budget}
+        if not over and agree >= 1.0 - top1_tol:
+            break
+        raisable = [p for p in order if chosen[p] < l_max]
+        if not raisable:
+            raise PrecisionSearchError(
+                f"joint repair exhausted: every site is back at "
+                f"l_max={l_max} yet the budget is still violated "
+                f"(agreement {agree:.3f}, over-budget {sorted(over)})")
+        # worst NSR margin first; pure-agreement violations raise the
+        # narrowest (noisiest-per-bit) site instead
+        over_raisable = [p for p in raisable if p in over]
+        target = (max(over_raisable, key=lambda p: over[p])
+                  if over_raisable
+                  else min(raisable, key=lambda p: chosen[p]))
+        chosen[target] += 1
+        if verbose:
+            print(f"[precision] repair: {target} -> l_w "
+                  f"{chosen[target]}", flush=True)
+
+    # --- final evidence: fresh NSR vs the analytic bound ------------------
+    final_map = _site_map(base, chosen)
+    evs, logits = run(final_map, want_float=True)
+    nsrs = _site_nsrs(ev_float, evs)
+    agree = _agreement(logits, ref_labels)
+    fresh: Dict[str, float] = {}
+    bound: Dict[str, float] = {}
+    kinds: Dict[str, str] = {}
+    for ev in evs:
+        if ev.policy is None:
+            continue
+        p = ev.path or "?"
+        if p in fresh:
+            continue
+        yf = np.asarray(ev.y_float, np.float64)
+        e = float(np.sum((np.asarray(ev.y, np.float64) - yf) ** 2))
+        s = float(np.sum(yf * yf))
+        fresh[p] = e / max(s, float(np.finfo(np.float32).tiny))
+        x2d, w2d = _site_matrices(ev)
+        bound[p] = float(nsr.gemm_nsr_upper_bound(x2d, w2d, ev.policy))
+        kinds[p] = ev.kind
+    sites = [SiteReport(path=p, kind=kinds[p], l_w=chosen[p],
+                        nsr_measured=float(nsrs[p]),
+                        nsr_fresh=float(fresh[p]),
+                        nsr_bound=float(bound[p])) for p in order]
+    return PrecisionResult(model=model, seed=seed, l_max=l_max,
+                           l_min=l_min, nsr_budget=nsr_budget,
+                           top1_tol=top1_tol, policy_map=final_map,
+                           sites=sites, top1_agreement=agree,
+                           n_evals=n_evals)
